@@ -1,0 +1,66 @@
+"""Kernel microbench: fused RFF+Gram oracle timing on CPU + the analytic
+TPU roofline of the Pallas kernel (VMEM working set, arithmetic intensity).
+
+interpret=True executes the kernel body in Python per block — useful for
+correctness, meaningless for timing — so wall time is measured on the jnp
+oracle and the TPU projection is analytic (documented)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.kernels.ref import rff_gram_ref
+from repro.launch.mesh import HBM_BANDWIDTH, PEAK_FLOPS_BF16
+
+CASES = [
+    # (D_feat, d_in, N) — paper-scale Gram builds
+    (100, 8, 10000),
+    (200, 148, 30000),
+    (512, 96, 30000),
+]
+
+
+def analytic(d_feat, d_in, n, block_n=1024, dtype_bytes=4):
+    flops = 2 * d_feat * d_in * n + 2 * d_feat * d_feat * n  # proj + gram
+    hbm = (d_in * n + d_feat * d_in + d_feat * d_feat) * dtype_bytes
+    vmem = (d_feat * d_in + d_in * block_n + d_feat * block_n
+            + d_feat * d_feat) * dtype_bytes
+    intensity = flops / hbm
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm / HBM_BANDWIDTH
+    return flops, hbm, vmem, intensity, max(t_compute, t_memory)
+
+
+def run(fast=False):
+    cases = CASES[:1] if fast else CASES
+    for d_feat, d_in, n in cases:
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        omega = jax.random.normal(k1, (d_feat, d_in), jnp.float32)
+        bias = jax.random.uniform(k2, (d_feat,), jnp.float32)
+        x = jax.random.uniform(k3, (d_in, n), jnp.float32)
+        y = jax.random.normal(k4, (n,), jnp.float32)
+        scale = float(np.sqrt(2.0 / d_feat))
+
+        f = jax.jit(lambda *a: rff_gram_ref(*a, scale=scale))
+        f(omega, bias, x, y)[0].block_until_ready()
+        t0 = time.perf_counter()
+        reps = 10
+        for _ in range(reps):
+            f(omega, bias, x, y)[0].block_until_ready()
+        us = (time.perf_counter() - t0) / reps * 1e6
+
+        flops, hbm, vmem, ai, t_tpu = analytic(d_feat, d_in, n)
+        C.csv_row(
+            f"kernel/rff_gram/D{d_feat}_d{d_in}_N{n}", us,
+            f"flops={flops:.2e};hbm_bytes={hbm:.2e};vmem={vmem/2**20:.2f}MiB;"
+            f"arith_intensity={ai:.1f};tpu_roofline_us={t_tpu*1e6:.1f};"
+            f"fits_vmem={vmem < 16 * 2**20}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (no compilation —
+reads experiments/dryrun/*.json produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common as C
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def rows(mesh="16x16"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR,
+                                              f"{mesh}_*.json"))):
+        r = json.load(open(path))
+        out.append(r)
+    return out
+
+
+def run(fast=False):
+    found = rows()
+    if not found:
+        C.csv_row("roofline/missing", 0.0,
+                  f"no dryrun artifacts in {DRYRUN_DIR}; "
+                  "run: python -m repro.launch.dryrun --all")
+        return
+    for r in found:
+        if r.get("status") == "skip":
+            C.csv_row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                      f"plan=skip({r['plan']})")
+            continue
+        C.csv_row(
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"collective_ms={r['collective_s']*1e3:.2f};"
+            f"dominant={r['dominant']};"
+            f"mem_per_dev_GiB={(r['peak_memory_per_device'] or 0)/2**30:.2f};"
+            f"useful_flops={r['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Benchmark runner — one benchmark per paper table/figure plus the kernel
+microbench, the §II-C communication-cost model, the §III convergence check
+and the roofline aggregation. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only NAME]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced grids (CI budget)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (ablation_ddrf, chebyshev_bench, comm_costs,
+                            convergence_curve, kernel_bench,
+                            paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
+                            paper_fig3_imbalanced, paper_fig4_pernode,
+                            paper_table2, roofline)
+
+    suites = {
+        "table2": paper_table2.run,
+        "fig1": paper_fig1_noniid_y.run,
+        "fig2": paper_fig2_noniid_xnorm.run,
+        "fig3": paper_fig3_imbalanced.run,
+        "fig4": paper_fig4_pernode.run,
+        "comm": comm_costs.run,
+        "convergence": convergence_curve.run,
+        "ablation": ablation_ddrf.run,
+        "chebyshev": chebyshev_bench.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn(fast=args.fast)
+        except Exception as e:  # noqa: BLE001 — run every suite
+            failed.append((name, repr(e)))
+            traceback.print_exc()
+            print(f"{name}/FAILED,0.0,{e!r}")
+        print(f"{name}/total,{(time.perf_counter()-t0)*1e6:.0f},done",
+              flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

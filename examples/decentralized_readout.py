@@ -1,0 +1,99 @@
+"""The paper's technique on top of the assigned-architecture zoo:
+frozen-backbone features → per-node DDRF selection → DeKRR-DDRF consensus.
+
+Ten nodes each hold a non-IID shard of (sequence → scalar) regression data;
+features are the backbone's mean-pooled final hidden states. Because the
+decision-function consensus never requires identical feature maps, each
+node's RF head adapts to its local feature distribution — the same
+flexibility the paper demonstrates on tabular data, here on transformer
+representations.
+
+  PYTHONPATH=src python examples/decentralized_readout.py --arch smollm_135m
+"""
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--num-seqs", type=int, default=600)
+    ap.add_argument("--seq", type=int, default=32)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.core import (DeKRRConfig, DeKRRSolver, NodeData, circulant,
+                            rse, select_features)
+    from repro.models.model import Model
+
+    spec = get_arch(args.arch)
+    cfg = spec.config.reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # --- synthetic seq→scalar task: y depends on token statistics -----------
+    key = jax.random.PRNGKey(1)
+    toks = jax.random.randint(key, (args.num_seqs, args.seq), 0,
+                              cfg.vocab_size)
+    # frozen-backbone features: mean-pooled last hidden state
+    @jax.jit
+    def featurize_batch(tb):
+        logits, _ = model.forward(params, tokens=tb)
+        return logits.mean(axis=1)          # [B, V] pooled readout features
+
+    feats = []
+    for i in range(0, args.num_seqs, 64):
+        feats.append(featurize_batch(toks[i:i + 64]))
+    feats = jnp.concatenate(feats)[:, :64].astype(jnp.float64)  # [N, 64]
+    w_true = jax.random.normal(jax.random.PRNGKey(2), (64,), jnp.float64)
+    y = jnp.tanh(feats @ w_true) + 0.05 * jax.random.normal(
+        jax.random.PRNGKey(3), (args.num_seqs,), jnp.float64)
+
+    # --- non-IID split across 10 nodes (sorted |y|), DeKRR-DDRF -------------
+    topo = circulant(10, (1, 2))
+    order = jnp.argsort(-jnp.abs(y))
+    x_all = feats[order].T                  # [d=64, N]
+    y_all = y[order]
+    n = args.num_seqs
+    per = n // 10
+    train, test = [], []
+    for j in range(10):
+        sl = slice(j * per, (j + 1) * per)
+        xj, yj = x_all[:, sl], y_all[sl]
+        h = per // 2
+        train.append(NodeData(x=xj[:, :h], y=yj[:h]))
+        test.append(NodeData(x=xj[:, h:], y=yj[h:]))
+
+    keys = jax.random.split(jax.random.PRNGKey(4), 10)
+    fmaps = [select_features(keys[j], 64, 16, 2.0, train[j].x, train[j].y,
+                             method="energy", candidate_ratio=10)
+             for j in range(10)]
+    ntr = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=1e-6, c_nei=0.01 * ntr))
+    st = solver.solve_exact()
+    ys = jnp.concatenate([t.y for t in test])
+    pred = jnp.concatenate(
+        [solver.predict(st.theta, test[j].x, node=j) for j in range(10)])
+    print(f"backbone={cfg.name}  DeKRR-DDRF readout RSE = "
+          f"{rse(pred, ys):.4f} over {10} nodes")
+    # local-only comparison for the starved node
+    from repro.core.rff import featurize as fz
+    z = fz(fmaps[9], train[9].x)
+    th = jnp.linalg.solve(z @ z.T + 1e-6 * z.shape[1] * jnp.eye(z.shape[0]),
+                          z @ train[9].y)
+    pooled_x = jnp.concatenate([t.x for t in test], axis=1)
+    r_local = rse(th @ fz(fmaps[9], pooled_x), ys)
+    r_cons = rse(solver.predict(st.theta, pooled_x, node=9), ys)
+    print(f"starved node on pooled test: local-only {r_local:.3f} → "
+          f"consensus {r_cons:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Quickstart: decentralized KRR with data-dependent random features.
+
+Ten nodes on the paper's circulant C_10(1,2) network each select their own
+random features from local data (energy scoring, D0/D = 20), build the
+Eq. 17 auxiliaries with one round of neighbor exchange, then iterate the
+Eq. 19 update communicating only θ_j.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from repro.core import (DKLA, DKLAConfig, DeKRRConfig, DeKRRSolver,
+                        circulant, rse, sample_rff, select_features)
+from repro.data.synthetic import (make_dataset, partition,
+                                  train_test_split_nodes)
+
+
+def main():
+    # --- data: "houses" stand-in, non-IID split by |y| ----------------------
+    ds = make_dataset("houses", subsample=2000, seed=0)
+    topo = circulant(10, (1, 2))
+    train, test = train_test_split_nodes(
+        partition(ds, 10, mode="noniid_y"))
+    n = sum(t.num_samples for t in train)
+    print(f"dataset d={ds.dim} N={ds.num_samples}, J=10, |N_j|=4")
+
+    # --- per-node data-dependent features (the paper's point) ---------------
+    keys = jax.random.split(jax.random.PRNGKey(0), 10)
+    fmaps = [
+        select_features(keys[j], ds.dim, 30, 1.0, train[j].x, train[j].y,
+                        method="energy", candidate_ratio=20)
+        for j in range(10)
+    ]
+
+    # --- Algorithm 1 ---------------------------------------------------------
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=1e-6, c_nei=0.005 * n,
+                                     num_iters=400))
+    state = solver.solve()                       # decentralized iteration
+    limit = solver.solve_exact()                 # its limit point (reference)
+
+    ys = jnp.concatenate([t.y for t in test])
+    pred = jnp.concatenate(
+        [solver.predict(state.theta, test[j].x, node=j) for j in range(10)])
+    pred_lim = jnp.concatenate(
+        [solver.predict(limit.theta, test[j].x, node=j) for j in range(10)])
+    print(f"DeKRR-DDRF   RSE = {rse(pred, ys):.4f} "
+          f"(limit point {rse(pred_lim, ys):.4f}, "
+          f"spectral radius {solver.spectral_radius():.4f})")
+
+    # --- DKLA baseline (identical features required on every node) ----------
+    fmap = sample_rff(jax.random.PRNGKey(50), ds.dim, 30, 1.0)
+    dkla = DKLA(topo, fmap, train, DKLAConfig(lam=1e-6, num_iters=400))
+    th = dkla.solve()
+    pred_d = jnp.concatenate(
+        [dkla.predict(th, test[j].x, node=j) for j in range(10)])
+    print(f"DKLA (RFF)   RSE = {rse(pred_d, ys):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""End-to-end LM training driver: train a model from the assigned-arch zoo
+on the synthetic token pipeline for a few hundred steps and verify the loss
+drops. Reduced configs by default (CPU container); --full selects the exact
+assigned configuration (needs real accelerators).
+
+  PYTHONPATH=src python examples/train_lm.py --arch smollm_135m --steps 200
+"""
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.data.tokens import SyntheticTokenPipeline, TokenPipelineConfig
+    from repro.train.loop import train_loop
+    from repro.train.optim import AdamWConfig
+
+    spec = get_arch(args.arch)
+    if spec.input_kind != "tokens":
+        raise SystemExit(f"{args.arch} needs a frontend stub — "
+                         "use a [dense]/[moe]/[ssm] arch for this driver")
+    cfg = spec.config if args.full else spec.config.reduced()
+    print(f"training {cfg.name} ({'full' if args.full else 'reduced'}): "
+          f"{cfg.num_layers}L d={cfg.d_model} vocab={cfg.vocab_size}")
+
+    pipe = SyntheticTokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, batch_size=args.batch, seq_len=args.seq))
+    opt = AdamWConfig(lr=3e-4, total_steps=args.steps,
+                      warmup_steps=max(args.steps // 20, 5))
+    state, history = train_loop(cfg, opt, iter(pipe), args.steps,
+                                log_every=max(args.steps // 20, 1))
+    first, last = history[0]["loss"], history[-1]["loss"]
+    assert last < first, "loss did not decrease"
+    print(f"\nloss {first:.4f} → {last:.4f} "
+          f"({100*(first-last)/first:.1f}% reduction) — training works")
+
+
+if __name__ == "__main__":
+    main()

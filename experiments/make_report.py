@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dryrun JSONs.
+
+  PYTHONPATH=src python experiments/make_report.py > experiments/roofline.md
+"""
+import glob
+import json
+import os
+import sys
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+ARCH_ORDER = [
+    "qwen1_5_0_5b", "llava_next_mistral_7b", "hubert_xlarge", "granite_3_8b",
+    "smollm_135m", "rwkv6_7b", "qwen1_5_32b", "deepseek_moe_16b",
+    "jamba_1_5_large_398b", "phi3_5_moe_42b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh, dirname=None):
+    out = {}
+    for p in glob.glob(os.path.join(dirname or DRYRUN_DIR,
+                                    f"{mesh}_*.json")):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def table(mesh, dirname=None, label=""):
+    rows = load(mesh, dirname)
+    print(f"\n### Mesh {mesh} ({'512' if mesh == '2x16x16' else '256'} "
+          f"chips){label}\n")
+    print("| arch | shape | plan | mem/dev GiB | compute ms | memory ms |"
+          " collective ms | dominant | useful-FLOPs | 1-sentence lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = rows.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | MISSING | | | | | | | |")
+                continue
+            if r.get("status") == "skip":
+                print(f"| {a} | {s} | skip (encoder-only) | — | — | — | — |"
+                      f" — | — | — |")
+                continue
+            lever = {
+                "collective": "reduce per-layer activation regathers /"
+                              " FSDP prefetch overlap",
+                "memory": "shard or shrink the dominant resident buffer"
+                          " (KV cache / remat residuals)",
+                "compute": "raise MXU utilization (larger tiles, fused"
+                           " featurize)",
+            }[r["dominant"]]
+            print(f"| {a} | {s} | {r['plan']} |"
+                  f" {(r['peak_memory_per_device'] or 0)/2**30:.1f} |"
+                  f" {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} |"
+                  f" {r['collective_s']*1e3:.2f} | {r['dominant']} |"
+                  f" {r['useful_flops_ratio']:.2f} | {lever} |")
+
+
+if __name__ == "__main__":
+    for mesh in ["16x16", "2x16x16"]:
+        table(mesh, label=" — optimized (post-§Perf policies)")
+    base = os.path.join(os.path.dirname(__file__), "dryrun_baseline")
+    if os.path.isdir(base):
+        for mesh in ["16x16", "2x16x16"]:
+            table(mesh, dirname=base, label=" — BASELINE (pre-§Perf)")

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf-iteration probe: compile one (arch × shape) pair with optional
+config overrides and print the roofline terms plus the top collective /
+memory contributors (trip-count-multiplied).
+
+  PYTHONPATH=src python experiments/perf_probe.py --arch qwen1_5_0_5b \
+      --shape train_4k [--set act_shard=none] [--top 12]
+"""
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch.hlo_analysis import analyze_hlo_text, model_flops_per_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch.specs import input_specs
+from repro.models.model import active_param_count
+
+
+def parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    if v == "none":
+        return k, None
+    if v in ("true", "false"):
+        return k, v == "true"
+    try:
+        return k, int(v)
+    except ValueError:
+        pass
+    try:
+        return k, float(v)
+    except ValueError:
+        return k, eval(v)  # noqa: S307 — operator-provided tuples
+
+
+def probe(arch, shape_name, overrides, multi_pod=False, top=12,
+          json_out=None, policy="tp"):
+    spec = get_arch(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh, policy=policy)
+    pair = input_specs(spec, shape_name, rules)
+    cfg = dataclasses.replace(pair["cfg"], **overrides) if overrides \
+        else pair["cfg"]
+    if overrides:
+        # rebuild fn/args against the overridden config
+        from repro.launch import specs as S
+        from repro.models.model import Model
+        from repro.train.step import (make_prefill, make_serve_step,
+                                      make_train_step)
+        shape = INPUT_SHAPES[shape_name]
+        model = Model(cfg)
+        import jax.numpy as jnp
+        params_struct = jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0)))
+        p_shard = S.make_shardings(rules, rules.params_specs(params_struct))
+        if shape.kind == "train":
+            from repro.launch.specs import opt_config_for, train_batch_struct
+            from repro.train.step import TrainState, train_state_init
+            from jax.sharding import PartitionSpec as P
+            opt_cfg = opt_config_for(cfg)
+            state_struct = jax.eval_shape(
+                lambda: train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)))
+            p_specs = rules.params_specs(params_struct)
+            state_shard = TrainState(
+                params=p_shard,
+                opt=S.make_shardings(rules, rules.opt_specs(None, p_specs)),
+                step=S.make_shardings(rules, P()))
+            batch_struct = train_batch_struct(spec, cfg, shape)
+            b_shard = S.make_shardings(
+                rules, rules.batch_specs(batch_struct, shape.global_batch))
+            pair = dict(fn=make_train_step(cfg, opt_cfg,
+                                           grad_specs=p_specs),
+                        args=(state_struct, batch_struct),
+                        in_shardings=(state_shard, b_shard),
+                        out_shardings=(state_shard, None),
+                        donate_argnums=(0,), cfg=cfg)
+        elif shape.kind == "prefill":
+            from repro.launch.specs import prefill_batch_struct
+            batch_struct = prefill_batch_struct(spec, cfg, shape)
+            b_shard = S.make_shardings(
+                rules, rules.batch_specs(batch_struct, shape.global_batch))
+            pair = dict(fn=make_prefill(cfg), args=(params_struct,
+                                                    batch_struct),
+                        in_shardings=(p_shard, b_shard),
+                        donate_argnums=(), cfg=cfg)
+        else:
+            import jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            b = shape.global_batch
+            cache_len = (cfg.sliding_window
+                         if any(s.mixer == "swa" for s in cfg.slots)
+                         else shape.seq_len)
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(b, cache_len))
+            c_shard = S.make_shardings(rules,
+                                       rules.cache_specs(cache_struct, b))
+            tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            t_shard = S.make_shardings(
+                rules, rules.batch_specs({"tokens": tok}, b))["tokens"]
+            pair = dict(fn=make_serve_step(cfg),
+                        args=(params_struct, cache_struct, tok,
+                              jax.ShapeDtypeStruct((), jnp.int32)),
+                        in_shardings=(p_shard, c_shard, t_shard,
+                                      S.make_shardings(rules, P())),
+                        donate_argnums=(1,), cfg=cfg)
+
+    t0 = time.perf_counter()
+    with mesh:
+        kw = {}
+        if pair.get("out_shardings") is not None:
+            kw["out_shardings"] = pair["out_shardings"]
+        compiled = jax.jit(
+            pair["fn"], in_shardings=pair["in_shardings"],
+            donate_argnums=pair["donate_argnums"], **kw,
+        ).lower(*pair["args"]).compile()
+    costs = analyze_hlo_text(compiled.as_text())
+    mem = compiled.memory_analysis()
+    peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    from repro.launch.mesh import (HBM_BANDWIDTH, ICI_LINK_BANDWIDTH,
+                                   PEAK_FLOPS_BF16)
+    tot_coll = sum(costs.coll_bytes.values())
+    print(f"\n=== {arch} × {shape_name} "
+          f"{'(multi-pod)' if multi_pod else ''} overrides={overrides} ===")
+    print(f"compile {time.perf_counter()-t0:.0f}s   "
+          f"mem/dev {peak/2**30:.2f} GiB")
+    print(f"compute    {costs.flops/PEAK_FLOPS_BF16*1e3:10.2f} ms"
+          f"  ({costs.flops:.3e} flops/dev)")
+    print(f"memory     {costs.hbm_bytes/HBM_BANDWIDTH*1e3:10.2f} ms"
+          f"  ({costs.hbm_bytes:.3e} B/dev)")
+    print(f"collective {tot_coll/ICI_LINK_BANDWIDTH*1e3:10.2f} ms"
+          f"  ({tot_coll:.3e} B/dev)")
+    print(f"by kind: " + "  ".join(
+        f"{k}={v/2**30:.2f}GiB" for k, v in costs.coll_bytes.items() if v))
+    print(f"\ntop collectives (bytes × trip-count):")
+    for byts, kind, shp, m, meta in costs.top_collectives[:top]:
+        print(f"  {byts/2**30:8.3f} GiB  {kind:18s} ×{int(m):4d}  {shp:42s}"
+              f" {meta[-60:]}")
+    print(f"\ntop memory ops:")
+    for byts, op, shp, m in costs.top_memory_ops[:top]:
+        print(f"  {byts/2**30:8.3f} GiB  {op:22s} ×{int(m):4d}  {shp}")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump({"peak": peak, "flops": costs.flops,
+                       "hbm": costs.hbm_bytes, "coll": costs.coll_bytes},
+                      f, default=float)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--policy", default="tp", choices=["tp", "dp"])
+    a = ap.parse_args()
+    overrides = dict(parse_override(s) for s in a.set)
+    probe(a.arch, a.shape, overrides, a.multi_pod, a.top, a.json_out,
+          policy=a.policy)

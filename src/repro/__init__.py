@@ -1,0 +1,3 @@
+"""repro — DeKRR-DDRF (TNNLS 2024) reproduction + multi-pod JAX framework."""
+
+__version__ = "1.0.0"

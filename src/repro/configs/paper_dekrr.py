@@ -1,0 +1,69 @@
+"""The paper's own experimental configurations (§IV), as data.
+
+Usable directly:  from repro.configs.paper_dekrr import PAPER_EXPERIMENTS
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperExperiment:
+    name: str
+    datasets: tuple[str, ...]
+    partition: str                 # noniid_y | noniid_xnorm | imbalanced
+    num_nodes: int = 10
+    neighbors: int = 4             # circulant(10, (1, 2))
+    dbar: dict | int | None = None
+    repetitions: int = 10
+    notes: str = ""
+
+
+# 5-fold CV grids from §IV-A
+CV_LAMBDA = tuple(10.0 ** i for i in range(-8, -1))
+CV_SIGMA = tuple(2.0 ** i for i in range(-2, 3))
+# paper grid (c_nei ∈ {2^i N}); our synthetic stand-ins need the extended
+# low end (DESIGN.md §8) — both are exposed
+CV_C_NEI_PAPER = tuple(2.0 ** i for i in range(-1, 4))
+CV_C_NEI_EXTENDED = (0.002, 0.01, 0.05, 0.5, 2.0)
+C_SELF_RATIO = 5.0
+D0_OVER_D = 20                     # [33]'s candidate ratio
+DKLA_RHO = 1e-4                    # doubled every 200 iterations
+
+PAPER_EXPERIMENTS = (
+    PaperExperiment(
+        name="table2_noniid_y",
+        datasets=("houses", "air_quality", "energy", "twitter",
+                  "toms_hardware", "wave"),
+        partition="noniid_y",
+        dbar={"houses": 70, "air_quality": 80, "energy": 100,
+              "twitter": 130, "toms_hardware": 150, "wave": 200},
+        notes="Tab. 2: mean RSE, paired t-test at 1%; ours wins 6/6",
+    ),
+    PaperExperiment(
+        name="fig1_noniid_y_sweep",
+        datasets=("houses", "air_quality", "energy", "twitter",
+                  "toms_hardware", "wave"),
+        partition="noniid_y",
+        notes="RSE vs D̄ curves",
+    ),
+    PaperExperiment(
+        name="fig2_noniid_xnorm_sweep",
+        datasets=("houses", "air_quality", "energy", "twitter",
+                  "toms_hardware", "wave"),
+        partition="noniid_xnorm",
+    ),
+    PaperExperiment(
+        name="fig3_imbalanced",
+        datasets=("twitter",),
+        partition="imbalanced",
+        notes="N_j = (2j−1)N/100; D_j = √N_j·J·D̄/Σ√N_j variant; "
+              "λ=1e-6, σ=4 in the paper",
+    ),
+    PaperExperiment(
+        name="fig4_pernode",
+        datasets=("twitter",),
+        partition="imbalanced",
+        dbar=100,
+    ),
+)

@@ -1,0 +1,20 @@
+"""Paper core: DeKRR-DDRF (Yang et al., TNNLS 2024)."""
+from repro.core.baselines import (CentralizedKRR, CentralizedRF, DKLA,
+                                  DKLAConfig, dkla_ddrf_feature_map)
+from repro.core.ddrf import (energy_scores, leverage_scores, select_features)
+from repro.core.dekrr import (AuxMatrices, DeKRRConfig, DeKRRSolver,
+                              DeKRRState, NodeData, prop1_required_c_self)
+from repro.core.graph import (Topology, circulant, complete, erdos_renyi,
+                              ring, star)
+from repro.core.metrics import mse, rse
+from repro.core.rff import (FeatureMap, featurize, gaussian_kernel,
+                            sample_rff)
+
+__all__ = [
+    "AuxMatrices", "CentralizedKRR", "CentralizedRF", "DKLA", "DKLAConfig",
+    "DeKRRConfig", "DeKRRSolver", "DeKRRState", "FeatureMap", "NodeData",
+    "Topology", "circulant", "complete", "dkla_ddrf_feature_map",
+    "energy_scores", "erdos_renyi", "featurize", "gaussian_kernel",
+    "leverage_scores", "mse", "prop1_required_c_self", "ring", "rse",
+    "sample_rff", "select_features", "star",
+]

@@ -1,0 +1,191 @@
+"""Beyond-paper optimization: Chebyshev semi-iterative acceleration of the
+Eq. 19 fixed-point iteration.
+
+The paper's solver is the stationary iteration θ^{k+1} = F(θ^k) = Mθ^k + b,
+whose error contracts at ρ(M) — measured ≈0.95–0.999 on the paper's own
+operating points, i.e. hundreds-to-thousands of communication rounds. Since
+communication rounds are the paper's cost metric (Σ_j |N_j| D_j per round),
+accelerating the *iteration count* at identical per-round communication is
+a direct improvement on the paper's own objective.
+
+Chebyshev iteration on A·θ = b with A = I − M and spec(M) ⊂ [μ_min, μ_max]
+(hence spec(A) ⊂ [1−μ_max, 1−μ_min]) achieves the optimal polynomial rate
+  r_cheb = (√κ − 1)/(√κ + 1),  κ = (1 − μ_min)/(1 − μ_max),
+vs r_plain = μ_max: e.g. μ_max = 0.95, μ_min = 0 → 28 rounds/decade → 7
+rounds/decade (≈4×), and the advantage grows as ρ(M) → 1 (√ of the
+iteration count). Each Chebyshev step applies F exactly once — one θ
+exchange with one-hop neighbors — so per-round cost, privacy and topology
+are identical to Algorithm 1. The residual r = F(θ) − θ is local to each
+node; the scalar recurrence (α_k, β_k) is precomputed offline from the
+spectral-interval estimate, so no extra consensus is needed.
+
+Both interval ends are estimated by distributed power iteration on F
+(itself only neighbor exchanges): μ_max directly, μ_min via the shifted
+operator μ_max·I − M. The spectrum is real (M is similar to a symmetric
+matrix) but NOT nonnegative in general — a small negative tail
+(min eig ≈ −0.06 measured on the houses stand-in) makes a [0, μ_max]
+interval diverge, because the acceleration polynomial grows exponentially
+outside its interval. ``estimate_spectral_interval`` adds outward safety
+margins on both ends (over-covering only costs a slightly weaker rate).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.dekrr_spmd import PackedProblem, step_batched
+
+
+def safe_mu(mu_est: float, margin: float = 0.02) -> float:
+    """Safety-inflate a power-iteration estimate of ρ(M): Chebyshev is
+    robust to OVER-estimating μ_max (slightly slower rate) but stalls or
+    diverges if the true top eigenvalue lies outside [μ_min, μ_max]
+    (power iteration converges from below when the eigen-gap is small)."""
+    return min(mu_est * (1.0 + margin) + 0.002, 0.99999)
+
+
+def power_iteration_mu_max(packed: PackedProblem, iters: int = 50,
+                           seed: int = 0) -> float:
+    """Estimate ρ(M) with power iteration on the *homogeneous* part of F
+    (b cancels in differences). Decentralized: each step is one Eq. 19
+    round; the normalization uses a global norm (one scalar all-reduce —
+    available in-network via gossip in practice)."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
+                          packed.d.dtype)
+    v = v * packed.theta_mask
+    zero = jnp.zeros_like(packed.d)
+    b = step_batched(packed, zero)               # F(0) = b
+    lam = 0.0
+    for _ in range(iters):
+        fv = step_batched(packed, v) - b         # M v
+        lam = float(jnp.linalg.norm(fv) / jnp.maximum(
+            jnp.linalg.norm(v), 1e-30))
+        v = fv / jnp.maximum(jnp.linalg.norm(fv), 1e-30)
+    return lam
+
+
+def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
+                           iters: int = 50, seed: int = 1) -> float:
+    """Estimate the BOTTOM of spec(M) via power iteration on the shifted
+    operator μ_max·I − M (its top eigenvalue is μ_max − μ_min). The Eq. 19
+    operator is similar to a symmetric matrix (real spectrum) but not PSD
+    in general — a small negative tail is typical, and Chebyshev diverges
+    if the interval excludes it (the acceleration polynomial grows
+    exponentially outside [μ_min, μ_max])."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
+                          packed.d.dtype)
+    v = v * packed.theta_mask
+    zero = jnp.zeros_like(packed.d)
+    b = step_batched(packed, zero)
+    lam = 0.0
+    for _ in range(iters):
+        mv = step_batched(packed, v) - b
+        fv = mu_max * v - mv
+        lam = float(jnp.linalg.norm(fv) / jnp.maximum(
+            jnp.linalg.norm(v), 1e-30))
+        v = fv / jnp.maximum(jnp.linalg.norm(fv), 1e-30)
+    return mu_max - lam
+
+
+def estimate_spectral_interval(packed: PackedProblem, iters: int = 60
+                               ) -> tuple[float, float]:
+    """Safe (μ_min, μ_max) for Chebyshev: power-iteration estimates with
+    outward safety margins on both ends."""
+    mu_hi = safe_mu(power_iteration_mu_max(packed, iters))
+    mu_lo_est = power_iteration_mu_min(packed, mu_hi, iters)
+    spread = mu_hi - mu_lo_est
+    mu_lo = mu_lo_est - 0.05 * spread - 0.002
+    return mu_lo, mu_hi
+
+
+def chebyshev_solve(
+    apply_f: Callable[[jax.Array], jax.Array],
+    theta0: jax.Array,
+    mu_max: float,
+    mu_min: float = 0.0,
+    num_iters: int = 100,
+) -> jax.Array:
+    """Chebyshev iteration for θ = F(θ), F(θ) = Mθ + b, spec(M)⊂[μmin,μmax].
+
+    Standard two-term recurrence (Golub & Van Loan §10.1.5) on A = I − M
+    with eigenvalue interval [a, b] = [1−μ_max, 1−μ_min]:
+      r_k = b − Aθ_k = F(θ_k) − θ_k
+      Δ_k = α_k r_k + β_k Δ_{k−1},   θ_{k+1} = θ_k + Δ_k
+      α_0 = 1/d, β_1 = ½(c/d)², α_k = 1/(d − β_k/α_{k−1}),
+      β_k = (c·α_{k−1}/2)²   with d = (a+b)/2, c = (b−a)/2.
+    """
+    a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
+    d = (a_lo + b_hi) / 2.0
+    c = (b_hi - a_lo) / 2.0
+
+    theta = theta0
+    delta = jnp.zeros_like(theta0)
+    alpha_prev = None
+    for k in range(num_iters):
+        r = apply_f(theta) - theta
+        if k == 0:
+            alpha, beta = 1.0 / d, 0.0
+        else:
+            beta = (c * alpha_prev / 2.0) ** 2
+            alpha = 1.0 / (d - beta / alpha_prev)
+        delta = alpha * r + beta * delta
+        theta = theta + delta
+        alpha_prev = alpha
+    return theta
+
+
+def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
+                           mu_min: float = 0.0,
+                           num_iters: int = 100) -> jax.Array:
+    """Chebyshev on the packed batched runtime (same exchange as Alg. 1)."""
+    apply_f = lambda th: step_batched(packed, th)
+    return chebyshev_solve(apply_f, jnp.zeros_like(packed.d), mu_max,
+                           mu_min, num_iters)
+
+
+def rounds_to_tolerance(packed: PackedProblem, theta_star: jax.Array,
+                        tol: float = 1e-6, max_rounds: int = 5000,
+                        mu_max: float | None = None,
+                        mu_min: float | None = None
+                        ) -> tuple[int, int]:
+    """(plain rounds, chebyshev rounds) to reach relative error ≤ tol."""
+    if mu_max is None or mu_min is None:
+        lo, hi = estimate_spectral_interval(packed)
+        mu_max = hi if mu_max is None else mu_max
+        mu_min = lo if mu_min is None else mu_min
+    norm_star = float(jnp.linalg.norm(theta_star))
+
+    # plain Eq. 19
+    theta = jnp.zeros_like(packed.d)
+    plain = max_rounds
+    for k in range(max_rounds):
+        theta = step_batched(packed, theta)
+        if float(jnp.linalg.norm(theta - theta_star)) <= tol * norm_star:
+            plain = k + 1
+            break
+
+    # chebyshev
+    apply_f = lambda th: step_batched(packed, th)
+    a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
+    d = (a_lo + b_hi) / 2.0
+    c = (b_hi - a_lo) / 2.0
+    theta = jnp.zeros_like(packed.d)
+    delta = jnp.zeros_like(packed.d)
+    alpha_prev = None
+    cheb = max_rounds
+    for k in range(max_rounds):
+        r = apply_f(theta) - theta
+        if k == 0:
+            alpha, beta = 1.0 / d, 0.0
+        else:
+            beta = (c * alpha_prev / 2.0) ** 2
+            alpha = 1.0 / (d - beta / alpha_prev)
+        delta = alpha * r + beta * delta
+        theta = theta + delta
+        alpha_prev = alpha
+        if float(jnp.linalg.norm(theta - theta_star)) <= tol * norm_star:
+            cheb = k + 1
+            break
+    return plain, cheb

@@ -1,0 +1,155 @@
+"""Baselines the paper compares against.
+
+* CentralizedKRR — exact kernel ridge regression on pooled data (upper
+  reference; §IV "Centralized KRR"). O(N³), so benches subsample.
+* CentralizedRF — centralized ridge in a shared RF space (sanity midpoint).
+* DKLA — decentralized kernel learning via consensus ADMM with *identical*
+  features on every node (Xu et al., JMLR 2021 [22]; model (3) in the paper).
+* DKLA-DDRF — DKLA where the shared features are DDRF-selected using a
+  single node's data and broadcast (the paper's second baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dekrr import NodeData
+from repro.core.graph import Topology
+from repro.core.rff import FeatureMap, featurize, gaussian_kernel
+
+
+# ---------------------------------------------------------------- centralized
+@dataclasses.dataclass
+class CentralizedKRR:
+    """Exact KRR: α = (K + λN I)⁻¹ yᵀ, f(x) = K(x, X) α."""
+
+    sigma: float
+    lam: float
+
+    def fit(self, x: jax.Array, y: jax.Array) -> "CentralizedKRR":
+        self.x_train = x
+        k = gaussian_kernel(x, x, self.sigma)
+        n = x.shape[1]
+        reg = self.lam * n * jnp.eye(n, dtype=k.dtype)
+        self.alpha = jax.scipy.linalg.cho_solve(
+            jax.scipy.linalg.cho_factor(k + reg), y.reshape(-1))
+        return self
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        return gaussian_kernel(x, self.x_train, self.sigma) @ self.alpha
+
+
+@dataclasses.dataclass
+class CentralizedRF:
+    """Ridge regression in a shared random-feature space (pooled data)."""
+
+    fmap: FeatureMap
+    lam: float
+
+    def fit(self, x: jax.Array, y: jax.Array) -> "CentralizedRF":
+        z = featurize(self.fmap, x)                    # [D, N]
+        n = z.shape[1]
+        g = z @ z.T + self.lam * n * jnp.eye(z.shape[0], dtype=z.dtype)
+        self.theta = jax.scipy.linalg.cho_solve(
+            jax.scipy.linalg.cho_factor(g), z @ y.reshape(-1))
+        return self
+
+    def predict(self, x: jax.Array) -> jax.Array:
+        return self.theta @ featurize(self.fmap, x)
+
+
+# ----------------------------------------------------------------------- DKLA
+@dataclasses.dataclass(frozen=True)
+class DKLAConfig:
+    lam: float = 1e-6
+    rho: float = 1e-4          # augmented coefficient (paper: 1e-4 ...
+    rho_doubling_every: int = 200   # ... doubled every 200 iterations)
+    num_iters: int = 600
+
+
+class DKLA:
+    """Decentralized consensus ADMM with one shared feature map.
+
+    Local objective g_j(θ) = (1/N)‖θᵀZ_j − Y_j‖² + (λ/J)‖θ‖², consensus
+    enforced with edge variables eliminated (DLM-style):
+
+      θ_j^{k+1} = (2/N Z_jZ_jᵀ + 2λ/J I + 2ρ|N_j| I)⁻¹
+                  (2/N Z_jY_jᵀ − γ_j^k + ρ Σ_{p∈N_j}(θ_j^k + θ_p^k))
+      γ_j^{k+1} = γ_j^k + ρ Σ_{p∈N_j}(θ_j^{k+1} − θ_p^{k+1})
+    """
+
+    def __init__(self, topology: Topology, fmap: FeatureMap,
+                 data: Sequence[NodeData], config: DKLAConfig = DKLAConfig()):
+        self.topology = topology
+        self.fmap = fmap
+        self.data = list(data)
+        self.config = config
+        self.J = topology.num_nodes
+        self.N = sum(nd.num_samples for nd in data)
+        self.dfeat = fmap.num_features
+        # local precomputations (fixed across iterations)
+        self._zz = []
+        self._zy = []
+        for nd in self.data:
+            z = featurize(fmap, nd.x)
+            self._zz.append(z @ z.T)
+            self._zy.append(z @ nd.y.reshape(-1))
+
+    def solve(self, num_iters: int | None = None) -> list[jax.Array]:
+        cfg = self.config
+        iters = num_iters if num_iters is not None else cfg.num_iters
+        theta = [jnp.zeros(self.dfeat, dtype=self._zy[0].dtype)
+                 for _ in range(self.J)]
+        gamma = [jnp.zeros_like(t) for t in theta]
+        rho = cfg.rho
+        eye = jnp.eye(self.dfeat, dtype=self._zy[0].dtype)
+        for k in range(iters):
+            if k > 0 and cfg.rho_doubling_every > 0 \
+                    and k % cfg.rho_doubling_every == 0:
+                rho *= 2.0
+            new_theta = []
+            for j in range(self.J):
+                deg = self.topology.degree(j)
+                lhs = (2.0 / self.N) * self._zz[j] \
+                    + (2.0 * cfg.lam / self.J + 2.0 * rho * deg) * eye
+                nb_sum = sum((theta[j] + theta[p]
+                              for p in self.topology.neighbors(j)),
+                             jnp.zeros_like(theta[j]))
+                rhs = (2.0 / self.N) * self._zy[j] - gamma[j] + rho * nb_sum
+                new_theta.append(jnp.linalg.solve(lhs, rhs))
+            for j in range(self.J):
+                resid = sum((new_theta[j] - new_theta[p]
+                             for p in self.topology.neighbors(j)),
+                            jnp.zeros_like(new_theta[j]))
+                gamma[j] = gamma[j] + rho * resid
+            theta = new_theta
+        return theta
+
+    def predict(self, theta: Sequence[jax.Array], x: jax.Array,
+                node: int | None = None) -> jax.Array:
+        z = featurize(self.fmap, x)
+        if node is not None:
+            return theta[node] @ z
+        return jnp.mean(jnp.stack([t @ z for t in theta]), axis=0)
+
+
+def dkla_ddrf_feature_map(
+    key: jax.Array, dim: int, num_features: int, sigma: float,
+    data: Sequence[NodeData], *, node: int | None = None,
+    method: str = "energy", candidate_ratio: int = 20,
+    kind: str = "cos_bias",
+) -> FeatureMap:
+    """DKLA-DDRF: select shared features on ONE node's data and broadcast.
+
+    The paper uses the node with the most data in the imbalanced setting.
+    """
+    from repro.core.ddrf import select_features
+
+    if node is None:
+        node = max(range(len(data)), key=lambda j: data[j].num_samples)
+    return select_features(
+        key, dim, num_features, sigma, data[node].x, data[node].y,
+        method=method, candidate_ratio=candidate_ratio, kind=kind)

@@ -1,0 +1,275 @@
+"""DeKRR-DDRF: decentralized KRR with per-node data-dependent random features.
+
+Faithful implementation of Algorithm 1. Notation matches the paper:
+
+  Z_{i,j} := Z_i(X_j) ∈ R^{D_i × N_j}   (node i's features on node j's data)
+  c̃_{j,p} := c_{j,p} / (N |N̂_j|),  split into c̃_{j,self} (p=j) and
+  c̃_{j,nei} (p ∈ N_j);  λ_j := λN/(J N_j) so the local ridge term is (λ/J)I.
+
+Pre-iteration (one round of one-hop exchange, Alg. 1 lines 3–7):
+  G_j = [ (1/N + 2c̃_{j,self} + |N_j| c̃_{j,nei}) Z_{j,j} Z_{j,j}ᵀ + (λ/J) I
+          + Σ_{p∈N_j} c̃_{p,nei} Z_{j,p} Z_{j,p}ᵀ ]⁻¹                (Eq. 17)
+  d_j = (1/N) Z_{j,j} Y_jᵀ
+  S_j = 2 c̃_{j,self} Z_{j,j} Z_{j,j}ᵀ
+  P_{j,p} = c̃_{j,nei} Z_{j,j} Z_{p,j}ᵀ + c̃_{p,nei} Z_{j,p} Z_{p,p}ᵀ
+
+Iteration (communicates only θ, Alg. 1 lines 9–14):
+  θ_j^{k+1} = G_j ( d_j + S_j θ_j^k + Σ_{p∈N_j} P_{j,p} θ_p^k )      (Eq. 19)
+
+This module is the *reference* (ragged, per-node loop) implementation; the
+SPMD nodes-on-devices runtime lives in repro/dist/dekrr_spmd.py and is pinned
+to this one by parity tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Topology
+from repro.core.rff import FeatureMap, featurize
+
+
+@dataclasses.dataclass
+class NodeData:
+    x: jax.Array  # [d, N_j]
+    y: jax.Array  # [N_j]
+
+    @property
+    def num_samples(self) -> int:
+        return self.x.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeKRRConfig:
+    lam: float = 1e-6            # global ridge λ
+    c_nei: float = 1.0           # c_{j,nei} (paper: grid {2^i N}, i=-1..3)
+    c_self_ratio: float = 5.0    # c_{j,self} = ratio · c_{j,nei} (paper: 5)
+    num_iters: int = 300
+    tol: float = 0.0             # early stop on max ‖Δθ‖∞ (0 = run all iters)
+
+
+@dataclasses.dataclass
+class AuxMatrices:
+    """Per-node auxiliary matrices (Eq. 17), ragged lists over nodes."""
+
+    g: list[jax.Array]                 # [D_j, D_j] (the inverse, applied)
+    d: list[jax.Array]                 # [D_j]
+    s: list[jax.Array]                 # [D_j, D_j]
+    p: list[dict[int, jax.Array]]      # p[j][nb] : [D_j, D_nb]
+
+
+@dataclasses.dataclass
+class DeKRRState:
+    theta: list[jax.Array]             # [D_j] per node
+    iteration: int = 0
+
+
+def _c_tilde(c: float, n_total: int, degree: int) -> float:
+    """c̃ = c / (N |N̂_j|) with |N̂_j| = degree + 1."""
+    return c / (n_total * (degree + 1))
+
+
+class DeKRRSolver:
+    """Builds Eq. 17 auxiliaries and runs the Eq. 19 fixed-point iteration."""
+
+    def __init__(
+        self,
+        topology: Topology,
+        feature_maps: Sequence[FeatureMap],
+        data: Sequence[NodeData],
+        config: DeKRRConfig = DeKRRConfig(),
+        *,
+        c_nei_per_node: Sequence[float] | None = None,
+        gram_fn: Callable[[FeatureMap, jax.Array], jax.Array] | None = None,
+    ):
+        if len(feature_maps) != topology.num_nodes:
+            raise ValueError("one feature map per node required")
+        if len(data) != topology.num_nodes:
+            raise ValueError("one data shard per node required")
+        self.topology = topology
+        self.feature_maps = list(feature_maps)
+        self.data = list(data)
+        self.config = config
+        self.J = topology.num_nodes
+        self.N = sum(nd.num_samples for nd in data)
+        self.c_nei = (
+            list(c_nei_per_node)
+            if c_nei_per_node is not None
+            else [config.c_nei] * self.J
+        )
+        self.c_self = [config.c_self_ratio * c for c in self.c_nei]
+        self._gram_fn = gram_fn
+        self.aux = self._build_aux()
+
+    # -- pre-iteration communication + auxiliary construction ---------------
+    def cross_features(self, i: int, j: int) -> jax.Array:
+        """Z_{i,j} = Z_i(X_j) ∈ R^{D_i × N_j}."""
+        return featurize(self.feature_maps[i], self.data[j].x)
+
+    def _gram(self, i: int, j: int) -> jax.Array:
+        """Z_{i,j} Z_{i,j}ᵀ ∈ R^{D_i × D_i}; hot-spot (Pallas kernel path)."""
+        if self._gram_fn is not None:
+            return self._gram_fn(self.feature_maps[i], self.data[j].x)
+        z = self.cross_features(i, j)
+        return z @ z.T
+
+    def _build_aux(self) -> AuxMatrices:
+        cfg, topo = self.config, self.topology
+        g_list, d_list, s_list, p_list = [], [], [], []
+        for j in range(self.J):
+            deg = topo.degree(j)
+            ct_self = _c_tilde(self.c_self[j], self.N, deg)
+            ct_nei = _c_tilde(self.c_nei[j], self.N, deg)
+            z_jj = self.cross_features(j, j)
+            dj_feat = z_jj.shape[0]
+            gram_jj = z_jj @ z_jj.T
+
+            a = (1.0 / self.N + 2.0 * ct_self + deg * ct_nei) * gram_jj
+            a = a + (cfg.lam / self.J) * jnp.eye(dj_feat, dtype=z_jj.dtype)
+            for p in topo.neighbors(j):
+                ct_p_nei = _c_tilde(self.c_nei[p], self.N, topo.degree(p))
+                a = a + ct_p_nei * self._gram(j, p)
+            g_list.append(jnp.linalg.inv(a))
+
+            d_list.append((z_jj @ self.data[j].y.reshape(-1)) / self.N)
+            s_list.append(2.0 * ct_self * gram_jj)
+
+            pj: dict[int, jax.Array] = {}
+            for p in topo.neighbors(j):
+                ct_p_nei = _c_tilde(self.c_nei[p], self.N, topo.degree(p))
+                z_pj = self.cross_features(p, j)      # [D_p, N_j]
+                z_jp = self.cross_features(j, p)      # [D_j, N_p]
+                z_pp = self.cross_features(p, p)      # [D_p, N_p]
+                pj[p] = ct_nei * (z_jj @ z_pj.T) + ct_p_nei * (z_jp @ z_pp.T)
+            p_list.append(pj)
+        return AuxMatrices(g=g_list, d=d_list, s=s_list, p=p_list)
+
+    # -- iteration ------------------------------------------------------------
+    def init_state(self) -> DeKRRState:
+        return DeKRRState(
+            theta=[jnp.zeros(fm.num_features, dtype=self.aux.d[j].dtype)
+                   for j, fm in enumerate(self.feature_maps)]
+        )
+
+    def step(self, state: DeKRRState) -> DeKRRState:
+        """One synchronous (Jacobi) round of Eq. 19 across all nodes."""
+        new_theta = []
+        for j in range(self.J):
+            rhs = self.aux.d[j] + self.aux.s[j] @ state.theta[j]
+            for p, pjp in self.aux.p[j].items():
+                rhs = rhs + pjp @ state.theta[p]
+            new_theta.append(self.aux.g[j] @ rhs)
+        return DeKRRState(theta=new_theta, iteration=state.iteration + 1)
+
+    def solve(self, state: DeKRRState | None = None,
+              num_iters: int | None = None) -> DeKRRState:
+        state = state or self.init_state()
+        iters = num_iters if num_iters is not None else self.config.num_iters
+        for _ in range(iters):
+            new = self.step(state)
+            if self.config.tol > 0:
+                delta = max(
+                    float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(new.theta, state.theta)
+                )
+                state = new
+                if delta < self.config.tol:
+                    break
+            else:
+                state = new
+        return state
+
+    def solve_exact(self) -> DeKRRState:
+        """Infinite-iteration reference: solve (I − M)Θ = b directly, where
+        θ^{k+1} = M θ^k + b is the Eq. 19 iteration. Requires assembling the
+        global system (fusion-center only) — used for tests/benches as the
+        limit point of Algorithm 1, never in the decentralized runtime."""
+        import numpy as np
+
+        dims = [fm.num_features for fm in self.feature_maps]
+        off = np.concatenate([[0], np.cumsum(dims)])
+        dt = int(off[-1])
+        m = np.zeros((dt, dt))
+        b = np.zeros(dt)
+        for j in range(self.J):
+            g = np.asarray(self.aux.g[j])
+            b[off[j]:off[j + 1]] = g @ np.asarray(self.aux.d[j])
+            m[off[j]:off[j + 1], off[j]:off[j + 1]] = g @ np.asarray(self.aux.s[j])
+            for p, pjp in self.aux.p[j].items():
+                m[off[j]:off[j + 1], off[p]:off[p + 1]] += g @ np.asarray(pjp)
+        theta = np.linalg.solve(np.eye(dt) - m, b)
+        return DeKRRState(
+            theta=[jnp.asarray(theta[off[j]:off[j + 1]]) for j in range(self.J)],
+            iteration=-1,
+        )
+
+    def spectral_radius(self) -> float:
+        """ρ(M) of the iteration matrix — convergence rate diagnostic."""
+        import numpy as np
+
+        dims = [fm.num_features for fm in self.feature_maps]
+        off = np.concatenate([[0], np.cumsum(dims)])
+        dt = int(off[-1])
+        m = np.zeros((dt, dt))
+        for j in range(self.J):
+            g = np.asarray(self.aux.g[j])
+            m[off[j]:off[j + 1], off[j]:off[j + 1]] = g @ np.asarray(self.aux.s[j])
+            for p, pjp in self.aux.p[j].items():
+                m[off[j]:off[j + 1], off[p]:off[p + 1]] += g @ np.asarray(pjp)
+        return float(np.max(np.abs(np.linalg.eigvals(m))))
+
+    # -- objective (Eq. 13) ----------------------------------------------------
+    def objective(self, theta: Sequence[jax.Array]) -> jax.Array:
+        cfg, topo = self.config, self.topology
+        total = jnp.asarray(0.0, dtype=theta[0].dtype)
+        for j in range(self.J):
+            deg = topo.degree(j)
+            ct_self = _c_tilde(self.c_self[j], self.N, deg)
+            ct_nei = _c_tilde(self.c_nei[j], self.N, deg)
+            z_jj = self.cross_features(j, j)
+            resid = theta[j] @ z_jj - self.data[j].y.reshape(-1)
+            total = total + jnp.sum(resid**2) / self.N
+            total = total + (cfg.lam / self.J) * jnp.sum(theta[j] ** 2)
+            # consensus penalties over N̂_j (p = j contributes 0)
+            for p in topo.neighbors(j):
+                z_pj = self.cross_features(p, j)
+                gap = theta[j] @ z_jj - theta[p] @ z_pj
+                total = total + ct_nei * jnp.sum(gap**2)
+            del ct_self  # self-term is identically zero in L (kept for clarity)
+        return total
+
+    # -- prediction -------------------------------------------------------------
+    def predict(self, theta: Sequence[jax.Array], x: jax.Array,
+                node: int | None = None) -> jax.Array:
+        """f_j(x) for one node, or the network-average prediction."""
+        if node is not None:
+            return theta[node] @ featurize(self.feature_maps[node], x)
+        preds = [theta[j] @ featurize(self.feature_maps[j], x)
+                 for j in range(self.J)]
+        return jnp.mean(jnp.stack(preds), axis=0)
+
+
+# -- Prop. 1 convergence bound -------------------------------------------------
+def prop1_required_c_self(solver: DeKRRSolver) -> np.ndarray:
+    """Per-node lower bound on c̃_{j,self} (Eq. 20), returned as the
+    *unnormalized* c_{j,self} so it is directly comparable to config values."""
+    topo, n = solver.topology, solver.N
+    req = np.zeros(solver.J)
+    for j in range(solver.J):
+        deg = topo.degree(j)
+        ct_nei = _c_tilde(solver.c_nei[j], n, deg)
+        z_jj = solver.cross_features(j, j)
+        gram_jj = z_jj @ z_jj.T
+        acc = jnp.zeros_like(gram_jj)
+        for p in topo.neighbors(j):
+            ct_p = _c_tilde(solver.c_nei[p], n, topo.degree(p))
+            acc = acc + ct_p * solver._gram(j, p)
+        lam_max = jnp.linalg.eigvalsh(acc)[-1]
+        lam_min = jnp.linalg.eigvalsh(gram_jj)[0]
+        ct_req = deg * ct_nei / 2.0 + lam_max / (2.0 * jnp.maximum(lam_min, 1e-300))
+        req[j] = float(ct_req) * n * (deg + 1)   # un-normalize c̃ → c
+    return req

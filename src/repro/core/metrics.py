@@ -1,0 +1,19 @@
+"""Evaluation metrics (paper §IV-A)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rse(pred, y) -> float:
+    """Relative square error: Σ(f(x)−y)² / Σ(y−ȳ)²."""
+    pred = jnp.asarray(pred).reshape(-1)
+    y = jnp.asarray(y).reshape(-1)
+    num = jnp.sum((pred - y) ** 2)
+    den = jnp.sum((y - jnp.mean(y)) ** 2)
+    return float(num / den)
+
+
+def mse(pred, y) -> float:
+    pred = jnp.asarray(pred).reshape(-1)
+    y = jnp.asarray(y).reshape(-1)
+    return float(jnp.mean((pred - y) ** 2))

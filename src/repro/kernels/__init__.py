@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+* rff_gram.py        — fused RFF featurize + streaming Gram (the paper's
+                       Eq. 17 pre-iteration hot-spot; features never leave
+                       VMEM)
+* rff_features.py    — fused featurize for the cross-feature exchange
+* decode_attention.py— flash-decode for the serving path (§Perf pair 2)
+
+ops.py holds the jit'd public wrappers (padding/alignment, backend
+dispatch: interpret=True on non-TPU backends); ref.py the pure-jnp
+oracles every kernel is allclose-tested against.
+"""
+from repro.kernels import ops
+from repro.kernels.ops import (flash_decode, gram_fn_for_solver, rff_features,
+                               rff_gram)
+
+__all__ = ["flash_decode", "gram_fn_for_solver", "ops", "rff_features",
+           "rff_gram"]

@@ -1,0 +1,109 @@
+"""Flash-decode attention — Pallas TPU kernel for the serving hot-spot.
+
+§Perf pair 2 established that single-token decode is memory-bound on KV
+cache reads. This kernel streams the cache HBM→VMEM in sequence blocks and
+keeps the online-softmax state (m, l, acc) in VMEM/registers, so HBM
+traffic is exactly one pass over K and V per step (the roofline minimum)
+with no [B, H, S] score materialization.
+
+Layout: one (batch, kv-head) pair per grid row; GQA query groups ride along
+in the q tile (rows = G query heads of that kv head).
+
+  grid = (B·K, S / block_s)                (sequential reduction over s)
+  per step s:  q_tile [G, dh]   (VMEM-resident across s steps)
+               k_blk  [block_s, dh], v_blk [block_s, dh]  (streamed)
+               scores = q_tile @ k_blkᵀ  (MXU, [G, block_s])
+               online-softmax update of (m, l, acc[G, dh])
+
+VMEM working set ≈ (G·dh + 2·block_s·dh + G·block_s) · 4 B — for G ≤ 8,
+dh = 128, block_s = 512: < 1 MB. dh is padded to 128 lanes, block_s to 8
+sublanes by ops.py; positions ≥ cur_index are masked in-kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *,
+                         block_s: int, scale: float):
+    s_idx = pl.program_id(1)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # [G, dh]
+    k = k_ref[0]                                   # [block_s, dh]
+    v = v_ref[0]
+    valid_len = len_ref[0, 0]
+
+    scores = jax.lax.dot(q, k.T,
+                         precision=jax.lax.Precision.HIGHEST) * scale
+    pos = s_idx * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, scores.shape, 1)
+    scores = jnp.where(pos < valid_len, scores, _NEG_INF)
+
+    m_prev = m_ref[...]                            # [G, 1]
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)                    # [G, block_s]
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, precision=jax.lax.Precision.HIGHEST)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        cur_index: jax.Array, *, scale: float,
+                        block_s: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Raw pallas_call; dims pre-padded/aligned:
+
+      q [BK, G, dh]  (one row per (batch, kv-head); G query heads each)
+      k, v [BK, S, dh],  S % block_s == 0
+      cur_index [BK, 1] int32 (valid cache length per row)
+    Returns o [BK, G, dh].
+    """
+    bk, g, dh = q.shape
+    s = k.shape[1]
+    assert s % block_s == 0, (s, block_s)
+    grid = (bk, s // block_s)
+
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, block_s=block_s,
+                          scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, g, dh), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, block_s, dh), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, block_s, dh), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, 1), lambda b, si: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, dh), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((g, 1), lambda b, si: (0, 0)),    # m scratch
+            pl.BlockSpec((g, 1), lambda b, si: (0, 0)),    # l scratch
+            pl.BlockSpec((g, dh), lambda b, si: (0, 0)),   # acc scratch
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bk, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, cur_index)[0]

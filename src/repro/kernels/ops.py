@@ -1,0 +1,134 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding/alignment (TPU tiles: sublane 8, lane 128), validity
+masking, and backend dispatch: on non-TPU backends the kernels execute in
+``interpret=True`` mode (Python evaluation of the kernel body — bit-accurate
+semantics, used for CPU validation against ref.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rff import FeatureMap
+from repro.kernels.rff_features import rff_features_pallas
+from repro.kernels.rff_gram import rff_gram_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def rff_gram(omega: jax.Array, bias: jax.Array, x: jax.Array, y: jax.Array,
+             *, scale: float, block_n: int = 1024,
+             interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused streaming (Z Zᵀ, Z yᵀ) for Z = scale·cos(Ω X + b).
+
+    omega [D, d], bias [D], x [d, N], y [N] → (G [D, D], zy [D]).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat, n = omega.shape[0], x.shape[1]
+    dtype = x.dtype
+
+    bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    omega_p = _pad_to(_pad_to(omega, 0, 8), 1, 128)
+    bias_p = _pad_to(bias.reshape(-1, 1), 0, 8).astype(dtype)
+    x_p = _pad_to(_pad_to(x, 0, 128), 1, bn)
+    n_pad = x_p.shape[1]
+    mask = (jnp.arange(n_pad) < n).astype(dtype).reshape(1, n_pad)
+    y_p = _pad_to(y.reshape(1, -1).astype(dtype), 1, bn)
+
+    gram, zy = rff_gram_pallas(
+        omega_p.astype(dtype), bias_p, x_p, y_p, mask,
+        scale=scale, block_n=bn, interpret=interpret)
+    return gram[:d_feat, :d_feat], zy[:d_feat, 0]
+
+
+@partial(jax.jit, static_argnames=("scale", "block_d", "block_n",
+                                   "interpret"))
+def rff_features(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
+                 scale: float, block_d: int = 256, block_n: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """Fused Z = scale·cos(Ω X + b): omega [D, d], x [d, N] → Z [D, N]."""
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat, n = omega.shape[0], x.shape[1]
+    dtype = x.dtype
+
+    bd = min(block_d, max(8, 1 << (d_feat - 1).bit_length()))
+    bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    omega_p = _pad_to(_pad_to(omega, 0, bd), 1, 128).astype(dtype)
+    bias_p = _pad_to(bias.reshape(-1, 1), 0, bd).astype(dtype)
+    x_p = _pad_to(_pad_to(x, 0, 128), 1, bn)
+
+    z = rff_features_pallas(omega_p, bias_p, x_p, scale=scale,
+                            block_d=bd, block_n=bn, interpret=interpret)
+    return z[:d_feat, :n]
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 cur_index: jax.Array, *, block_s: int = 512,
+                 interpret: bool | None = None) -> jax.Array:
+    """Single-token decode attention with the flash-decode kernel.
+
+    q [B, 1, H, dh], k/v [B, S, K, dh] (GQA: H % K == 0), cur_index [] —
+    returns [B, 1, H, dh]. Rows are (batch, kv-head) pairs; dh pads to 128,
+    S pads to block_s (padded positions are masked by cur_index).
+    """
+    from repro.kernels.decode_attention import flash_decode_pallas
+
+    if interpret is None:
+        interpret = _interpret_default()
+    out_dtype = q.dtype
+    if q.dtype == jnp.float64:          # no f64 on TPU; x64-mode callers
+        q = q.astype(jnp.float32)
+        k_cache = k_cache.astype(jnp.float32)
+        v_cache = v_cache.astype(jnp.float32)
+    b, _, h, dh = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    scale = dh ** -0.5
+    bs = min(block_s, max(128, 1 << (s - 1).bit_length()))
+
+    # [B, 1, H, dh] → [B·K, G, dh]
+    qr = q[:, 0].reshape(b, kh, g, dh).reshape(b * kh, g, dh)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(b * kh, s, dh)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(b * kh, s, dh)
+    qr = _pad_to(qr, 2, 128)
+    kr = _pad_to(_pad_to(kr, 1, bs), 2, 128)
+    vr = _pad_to(_pad_to(vr, 1, bs), 2, 128)
+    lens = jnp.broadcast_to(cur_index.astype(jnp.int32),
+                            (b * kh, 1))
+    out = flash_decode_pallas(qr, kr, vr, lens, scale=scale,
+                              block_s=bs, interpret=interpret)
+    out = out[:, :, :dh].reshape(b, kh, g, dh).reshape(b, 1, h, dh)
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------- integration
+def gram_fn_for_solver(fmap: FeatureMap, x: jax.Array) -> jax.Array:
+    """Drop-in ``gram_fn`` for DeKRRSolver: computes Z(Ω, X) Z(Ω, X)ᵀ with the
+    fused kernel (cos_bias maps only; f32)."""
+    if fmap.kind != "cos_bias":
+        raise NotImplementedError("fused gram kernel supports cos_bias maps")
+    scale = float(jnp.sqrt(2.0 / fmap.num_frequencies))
+    dtype = jnp.float32
+    g, _ = rff_gram(fmap.omega.astype(dtype), fmap.bias.astype(dtype),
+                    x.astype(dtype), jnp.zeros(x.shape[1], dtype),
+                    scale=scale)
+    return g.astype(x.dtype)

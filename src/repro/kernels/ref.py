@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rff_features_ref(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
+                     scale: float) -> jax.Array:
+    """Z = scale · cos(Ω X + b)."""
+    return jnp.cos(omega @ x + bias.reshape(-1, 1)) * scale
+
+
+def rff_gram_ref(omega: jax.Array, bias: jax.Array, x: jax.Array,
+                 y: jax.Array, *, scale: float
+                 ) -> tuple[jax.Array, jax.Array]:
+    """(Z Zᵀ, Z yᵀ) on materialized features."""
+    z = rff_features_ref(omega, bias, x, scale=scale)
+    return z @ z.T, z @ y.reshape(-1)
+
+
+def chunked_decode_attention_ref(q, k, v, *, scale: float,
+                                 mask=None) -> jax.Array:
+    """Single-query attention oracle: q [B,H,dh], k/v [B,S,H,dh]."""
+    s = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    if mask is not None:
+        s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v)

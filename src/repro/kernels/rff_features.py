@@ -1,0 +1,44 @@
+"""Standalone fused RFF featurization — Pallas TPU kernel.
+
+Z = scale · cos(Ω X + b) ∈ R^{D×N}, tiled (block_d × block_n) over a 2-D
+grid. Used for the cross-feature evaluations Z_p(X_j) exchanged in the
+pre-iteration phase (Alg. 1 line 6) when the Gram fusion does not apply
+(the raw features themselves must be communicated).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rff_features_kernel(omega_ref, bias_ref, x_ref, z_ref, *, scale: float):
+    proj = jax.lax.dot(omega_ref[...], x_ref[...],
+                       precision=jax.lax.Precision.HIGHEST)
+    z_ref[...] = (jnp.cos(proj + bias_ref[...]) * scale).astype(z_ref.dtype)
+
+
+def rff_features_pallas(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
+                        scale: float, block_d: int = 256, block_n: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Raw pallas_call; dims pre-padded: omega [D, d], bias [D, 1], x [d, N],
+    D % block_d == 0, N % block_n == 0. Returns Z [D, N]."""
+    d_feat, d_in = omega.shape
+    n = x.shape[1]
+    assert d_feat % block_d == 0 and n % block_n == 0
+    grid = (d_feat // block_d, n // block_n)
+
+    return pl.pallas_call(
+        functools.partial(_rff_features_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, d_in), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_d, 1), lambda i, k: (i, 0)),
+            pl.BlockSpec((d_in, block_n), lambda i, k: (0, k)),
+        ],
+        out_specs=pl.BlockSpec((block_d, block_n), lambda i, k: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((d_feat, n), x.dtype),
+        interpret=interpret,
+    )(omega, bias, x)

@@ -1,0 +1,86 @@
+"""Fused RFF featurize + streaming Gram accumulation — Pallas TPU kernel.
+
+The paper's dominant pre-iteration compute is building the Gram blocks
+Z_{j,p} Z_{j,p}ᵀ (Eq. 17) where Z = √(2/D)·cos(Ω X + b) ∈ R^{D×N}, N ≫ D.
+
+A GEMM on a *materialized* Z reads/writes O(D·N) HBM twice (featurize write,
+GEMM read) at O(1) arithmetic intensity for the trig stage. On TPU we instead
+stream X tiles HBM→VMEM, featurize in-register, and let the MXU accumulate
+the D×D Gram that never leaves VMEM until the end:
+
+  grid = (N / block_n,)  — sequential reduction grid
+  per step k:  P  = Ω · X_k + b          (MXU,   [D, Bn])
+               Zk = scale · cos(P) · mask (VPU)
+               G += Zk Zkᵀ               (MXU,   [D, D], VMEM-resident)
+               zy += Zk y_k              (MXU)
+
+VMEM working set: D·d (Ω) + d·Bn (X tile) + D·Bn (features) + D² (acc),
+all f32 — for the paper's D ≤ 512, d ≤ 160, Bn = 1024 that is < 5 MB.
+D, d and Bn are padded to multiples of (8, 128) for MXU/VREG alignment by
+the ops.py wrapper, with a validity mask so padded columns contribute zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rff_gram_kernel(omega_ref, bias_ref, x_ref, y_ref, mask_ref,
+                     gram_ref, zy_ref, *, scale: float):
+    """One N-tile of the streaming featurize+Gram reduction."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        gram_ref[...] = jnp.zeros_like(gram_ref)
+        zy_ref[...] = jnp.zeros_like(zy_ref)
+
+    omega = omega_ref[...]                      # [D, d]
+    x = x_ref[...]                              # [d, Bn]
+    proj = jax.lax.dot(omega, x,
+                       precision=jax.lax.Precision.HIGHEST)  # [D, Bn]
+    z = jnp.cos(proj + bias_ref[...]) * scale   # [D, Bn]
+    z = z * mask_ref[...]                       # zero out padded columns
+    gram_ref[...] += jax.lax.dot(
+        z, z.T, precision=jax.lax.Precision.HIGHEST)
+    zy_ref[...] += jax.lax.dot(
+        z, y_ref[...].T, precision=jax.lax.Precision.HIGHEST)
+
+
+def rff_gram_pallas(omega: jax.Array, bias: jax.Array, x: jax.Array,
+                    y: jax.Array, mask: jax.Array, *, scale: float,
+                    block_n: int = 1024,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call. All dims must already be padded/aligned:
+
+      omega [D, d], bias [D, 1], x [d, N], y [1, N], mask [1, N],
+      N % block_n == 0. Returns (gram [D, D], zy [D, 1]).
+    """
+    d_feat, d_in = omega.shape
+    n = x.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    grid = (n // block_n,)
+
+    return pl.pallas_call(
+        functools.partial(_rff_gram_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_feat, d_in), lambda k: (0, 0)),   # Ω resident
+            pl.BlockSpec((d_feat, 1), lambda k: (0, 0)),      # bias
+            pl.BlockSpec((d_in, block_n), lambda k: (0, k)),  # X tile stream
+            pl.BlockSpec((1, block_n), lambda k: (0, k)),     # y tile
+            pl.BlockSpec((1, block_n), lambda k: (0, k)),     # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((d_feat, d_feat), lambda k: (0, 0)),  # G accumulator
+            pl.BlockSpec((d_feat, 1), lambda k: (0, 0)),       # zy accumulator
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_feat, d_feat), x.dtype),
+            jax.ShapeDtypeStruct((d_feat, 1), x.dtype),
+        ],
+        interpret=interpret,
+    )(omega, bias, x, y, mask)

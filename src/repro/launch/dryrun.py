@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, record memory/cost/collective analysis.
+
+MUST be run as its own process (the two lines above force 512 placeholder
+CPU devices BEFORE jax initializes — never import this module from tests).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1_5_0_5b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_arch, list_archs
+from repro.launch.hlo_analysis import analyze_compiled, model_flops_per_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch.specs import input_specs
+from repro.models.model import active_param_count, analytic_param_count
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    spec = get_arch(arch)
+    plan = spec.shape_plan(shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "plan": plan}
+    if plan == "skip":
+        result["status"] = "skip"
+        _write(result, out_dir)
+        return result
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = ShardingRules(mesh)
+    shape = INPUT_SHAPES[shape_name]
+
+    # ONE compile — the deployment artifact (scanned layers, buffer reuse).
+    # memory_analysis proves it fits; flops/bytes/collectives come from the
+    # trip-count-aware HLO analyzer (see hlo_analysis.py) so scanned layers
+    # are counted at full depth.
+    pair = input_specs(spec, shape_name, rules)
+    cfg = pair["cfg"]
+    with mesh:
+        kw = {}
+        if pair.get("out_shardings") is not None:
+            kw["out_shardings"] = pair["out_shardings"]
+        lowered = jax.jit(
+            pair["fn"], in_shardings=pair["in_shardings"],
+            donate_argnums=pair["donate_argnums"], **kw,
+        ).lower(*pair["args"])
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    roof = analyze_compiled(compiled)
+    mem_dep = compiled.memory_analysis()
+    n_total = analytic_param_count(cfg)
+    n_active = active_param_count(cfg)
+    mf = model_flops_per_step(cfg, shape, n_active)
+    chips = mesh.devices.size
+    hlo_total_flops = roof.flops * chips
+
+    result.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        params_total=n_total,
+        params_active=n_active,
+        model_flops=mf,
+        hlo_total_flops=hlo_total_flops,
+        useful_flops_ratio=(mf / hlo_total_flops if hlo_total_flops else 0),
+        **roof.as_dict(),
+    )
+    result["memory_analysis"] = {
+        "argument_size": mem_dep.argument_size_in_bytes,
+        "output_size": mem_dep.output_size_in_bytes,
+        "temp_size": mem_dep.temp_size_in_bytes,
+        "alias_size": mem_dep.alias_size_in_bytes,
+        "generated_code_size": mem_dep.generated_code_size_in_bytes,
+    }
+    if verbose:
+        print(f"[{mesh_name}] {arch} × {shape_name} ({plan}): "
+              f"compile {t_compile:.0f}s  "
+              f"mem/dev {(result['peak_memory_per_device'] or 0)/2**30:.2f}GiB  "
+              f"compute {roof.compute_s*1e3:.2f}ms  "
+              f"memory {roof.memory_s*1e3:.2f}ms  "
+              f"collective {roof.collective_s*1e3:.2f}ms  "
+              f"→ {roof.dominant}-bound  "
+              f"useful-flops {result['useful_flops_ratio']:.2f}")
+    _write(result, out_dir)
+    return result
+
+
+def _write(result: dict, out_dir: str | None):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{result['mesh']}_{result['arch']}_{result['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    pairs: list[tuple[str, str]] = []
+    if args.all:
+        pairs = [(a, s) for a in list_archs() for s in INPUT_SHAPES]
+    else:
+        archs = [args.arch] if args.arch else list_archs()
+        shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+        pairs = [(a, s) for a in archs for s in shapes]
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            run_pair(arch, shape, multi_pod=args.multi_pod, out_dir=args.out)
+        except Exception as e:  # noqa: BLE001 — report every pair
+            failures.append((arch, shape, repr(e)))
+            print(f"FAILED {arch} × {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} pair(s) failed:")
+        for a, s, e in failures:
+            print(f"  {a} × {s}: {e}")
+        raise SystemExit(1)
+    print("\nall pairs lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,397 @@
+"""Post-SPMD HLO analysis with while-loop trip-count awareness.
+
+XLA's built-in HloCostAnalysis counts a while body ONCE regardless of trip
+count, which silently undercounts any scanned (layer-stacked) model by its
+depth. This module re-derives per-device costs from ``compiled.as_text()``
+(the partitioned module) by:
+
+  1. splitting the module into computations and building the call graph
+     (while → body/condition, fusion/call → subcomputations),
+  2. parsing each while's trip count from the s32 bound constant in its
+     condition computation,
+  3. counting, per computation: exact dot FLOPs (2·|result|·|contracted|),
+     elementwise FLOPs (|result| per arithmetic op), transcendentals,
+     reduce FLOPs (|operand|), collective result bytes by kind,
+  4. totalling with execution multipliers = product of enclosing trip counts.
+
+Memory traffic uses a fusion-boundary model: operand + result bytes of every
+op in non-fused computations (fusion internals never touch HBM); this is the
+standard perfect-fusion HBM model and matches what a TPU kernel would stream.
+
+Roofline terms (per-chip seconds):
+  compute    = flops / PEAK_FLOPS_BF16
+  memory     = hbm_bytes / HBM_BANDWIDTH
+  collective = collective_bytes / ICI_LINK_BANDWIDTH
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+import numpy as np
+
+from repro.launch.mesh import (HBM_BANDWIDTH, ICI_LINK_BANDWIDTH,
+                               PEAK_FLOPS_BF16)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "not", "clamp",
+    "remainder", "power", "floor", "ceil", "round-nearest-afz", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "cosine",
+                   "sine", "logistic", "expm1", "log1p", "atan2", "erf",
+                   "cbrt", "exponential-minus-one"}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(
+    r"^(?:ENTRY\s+)?(%[\w.\-]+)(?:\.clone)?\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"(%?[\w.\-]+)\s*:\s*(\(?[\w\[\],\{\} ]+\)?)")
+
+
+def _prod(dims: str) -> int:
+    if not dims:
+        return 1
+    return int(np.prod([int(x) for x in dims.split(",")]))
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    """Total (elements, bytes) over all array shapes in a string."""
+    elems = nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = _prod(dims)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: list
+    is_entry: bool = False
+
+
+def _split_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    current: _Comp | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        # tuple types embed /*index=N*/ comments whose '=' breaks op parsing
+        stripped = re.sub(r"/\*.*?\*/", "", line).strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                current = _Comp(name=m.group(1), lines=[stripped],
+                                is_entry=stripped.startswith("ENTRY"))
+        else:
+            current.lines.append(stripped)
+            if stripped == "}":
+                comps[current.name] = current
+                current = None
+    return comps
+
+
+def _name_shapes(comps: dict[str, _Comp]) -> dict[str, str]:
+    """Map %op-name → result-shape-string (module-wide; names are unique
+    enough post-SPMD for our byte accounting)."""
+    out: dict[str, str] = {}
+    for comp in comps.values():
+        hdr = comp.lines[0]
+        m = _COMP_HDR_RE.match(hdr)
+        if m:
+            for pname, pshape in _PARAM_RE.findall(m.group(2)):
+                key = pname if pname.startswith("%") else "%" + pname
+                out[key] = pshape
+        for line in comp.lines[1:]:
+            om = _OPLINE_RE.match(line)
+            if om:
+                out[om.group(1)] = om.group(2)
+    return out
+
+
+def _trip_count(cond_comp: _Comp) -> int | None:
+    """Trip count = the s32 bound constant in the condition computation."""
+    consts = []
+    for line in cond_comp.lines:
+        m = re.search(r"=\s*s32\[\]\s*constant\((\d+)\)", line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else None
+
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "transpose", "convert", "copy", "slice", "pad", "reverse",
+    "concatenate", "dynamic-slice", "dynamic-update-slice", "gather",
+    "scatter", "select-and-scatter", "rng", "rng-bit-generator", "domain",
+    "opt-barrier", "custom-call", "while", "conditional", "call", "map",
+    "sort", "bitcast-convert", "get-dimension-size", "send", "recv",
+    "send-done", "recv-done", "infeed", "outfeed",
+}
+
+# HBM traffic is counted only at data-movement-significant ops — the
+# perfect-fusion model a TPU backend would approach. Elementwise chains,
+# converts, transposes and broadcasts are assumed fused into the adjacent
+# matmul/reduce (CPU lowering materializes each as its own kLoop fusion,
+# which would otherwise inflate the memory term ~100×). Residual-stream
+# reads that a TPU would also fuse are therefore slightly undercounted.
+_MEM_COUNTED = {"dot", "convolution", "reduce", "reduce-window",
+                "dynamic-slice", "dynamic-update-slice", "gather",
+                "scatter", "sort", "copy", "concatenate",
+                *_COLLECTIVES, *(c + "-start" for c in _COLLECTIVES)}
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_ops: dict = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in _COLLECTIVES})
+    unknown_trip_counts: int = 0
+    num_whiles: int = 0
+    # (total_bytes, kind, result_shape, multiplier, metadata-op-name)
+    top_collectives: list = dataclasses.field(default_factory=list)
+    # (total_bytes, op, result_shape, multiplier)
+    top_memory_ops: list = dataclasses.field(default_factory=list)
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    comps = _split_computations(text)
+    shapes = _name_shapes(comps)
+    costs = HloCosts()
+
+    # ---- call graph: (caller → [(callee, multiplier)]) ------------------------
+    edges: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    fusion_bodies: set[str] = set()
+    reduce_bodies: set[str] = set()
+    for comp in comps.values():
+        for line in comp.lines[1:]:
+            om = _OPLINE_RE.match(line)
+            if not om:
+                continue
+            op = om.group(3)
+            if op == "while":
+                bm = re.search(r"body=(%[\w.\-]+)", line)
+                cm = re.search(r"condition=(%[\w.\-]+)", line)
+                trip = None
+                kt = re.search(r'known_trip_count[^\d]*(\d+)', line)
+                if kt:
+                    trip = int(kt.group(1))
+                elif cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)])
+                if trip is None:
+                    trip = 1
+                    costs.unknown_trip_counts += 1
+                costs.num_whiles += 1
+                if bm:
+                    edges[comp.name].append((bm.group(1), trip))
+                if cm:
+                    edges[comp.name].append((cm.group(1), trip))
+            elif op in ("fusion",):
+                fm = re.search(r"calls=(%[\w.\-]+)", line)
+                if fm:
+                    edges[comp.name].append((fm.group(1), 1))
+                    fusion_bodies.add(fm.group(1))
+            elif op in ("call", "conditional", "custom-call"):
+                for fm in re.finditer(
+                        r"(?:to_apply|calls|branch_computations=\{?)"
+                        r"=?\s*(%[\w.\-]+)", line):
+                    edges[comp.name].append((fm.group(1), 1))
+            elif op in ("reduce", "reduce-window", "scatter", "map", "sort",
+                        "select-and-scatter", "all-reduce",
+                        "reduce-scatter"):
+                fm = re.search(r"to_apply=(%[\w.\-]+)", line)
+                if fm:
+                    reduce_bodies.add(fm.group(1))
+
+    # ---- execution multipliers via DFS from the entry --------------------------
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: dict[str, float] = defaultdict(float)
+    if entry is None:
+        return costs
+
+    def visit(name: str, m: float, depth: int = 0):
+        if depth > 64:
+            return
+        mult[name] += m
+        for callee, k in edges.get(name, ()):
+            if callee in comps:
+                visit(callee, m * k, depth + 1)
+
+    visit(entry, 1.0)
+
+    # ---- per-computation costs ---------------------------------------------------
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0 or comp.name in reduce_bodies:
+            continue
+        in_fusion = comp.name in fusion_bodies
+        for line in comp.lines[1:]:
+            om = _OPLINE_RE.match(line)
+            if not om:
+                continue
+            _, res_shape, op, rest = om.groups()
+            res_elems, res_bytes = _shape_elems_bytes(res_shape)
+
+            # ---- flops ----
+            if op in ("dot", "convolution"):
+                k = 1
+                lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                ops_m = re.match(r"([^)]*)\)", rest)
+                if lc and ops_m:
+                    first_operand = ops_m.group(1).split(",")[0].strip()
+                    lhs_shape = shapes.get(first_operand, "")
+                    sm = _SHAPE_RE.search(lhs_shape)
+                    if sm and sm.group(2):
+                        lhs_dims = [int(x) for x in sm.group(2).split(",")]
+                        try:
+                            k = int(np.prod(
+                                [lhs_dims[int(i)]
+                                 for i in lc.group(1).split(",") if i]))
+                        except (IndexError, ValueError):
+                            k = 1
+                costs.flops += m * 2.0 * res_elems * k
+            elif op in _ELEMENTWISE:
+                costs.flops += m * res_elems
+            elif op in _TRANSCENDENTAL:
+                costs.transcendentals += m * res_elems
+                costs.flops += m * res_elems
+            elif op in ("reduce", "reduce-window"):
+                # flops ≈ total input elements
+                ops_m = re.match(r"([^)]*)\)", rest)
+                if ops_m:
+                    first = ops_m.group(1).split(",")[0].strip()
+                    in_elems, _ = _shape_elems_bytes(shapes.get(first, ""))
+                    costs.flops += m * in_elems
+            # ---- collectives ----
+            for coll in _COLLECTIVES:
+                if op == coll or op == coll + "-start":
+                    costs.coll_bytes[coll] += m * res_bytes
+                    costs.coll_ops[coll] += int(m)
+                    meta = re.search(r'op_name="([^"]*)"', line)
+                    costs.top_collectives.append(
+                        (m * res_bytes, coll, res_shape.strip(), m,
+                         meta.group(1)[-120:] if meta else ""))
+                    break
+
+            # ---- memory (perfect-fusion model) ----
+            if not in_fusion and op in _MEM_COUNTED:
+                operand_bytes = 0
+                ops_m = re.match(r"([^)]*)\)", rest)
+                if ops_m:
+                    for name in ops_m.group(1).split(","):
+                        name = name.strip()
+                        if name.startswith("%"):
+                            _, b = _shape_elems_bytes(shapes.get(name, ""))
+                            operand_bytes += b
+                costs.hbm_bytes += m * (res_bytes + operand_bytes)
+                costs.top_memory_ops.append(
+                    (m * (res_bytes + operand_bytes), op,
+                     res_shape.strip(), m))
+
+    costs.top_collectives.sort(key=lambda t: -t[0])
+    costs.top_collectives = costs.top_collectives[:40]
+    costs.top_memory_ops.sort(key=lambda t: -t[0])
+    costs.top_memory_ops = costs.top_memory_ops[:40]
+    return costs
+
+
+# ------------------------------------------------------------------ roofline
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per device
+    bytes_accessed: float         # per device (fusion-boundary HBM model)
+    coll_bytes: dict              # per device, by collective kind
+    peak_memory: float | None     # per device, from memory_analysis
+    transcendentals: float = 0.0
+    num_whiles: int = 0
+    unknown_trip_counts: int = 0
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BANDWIDTH
+
+    @property
+    def collective_s(self) -> float:
+        return self.total_coll_bytes / ICI_LINK_BANDWIDTH
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "transcendentals_per_device": self.transcendentals,
+            "collective_bytes_per_device": self.coll_bytes,
+            "peak_memory_per_device": self.peak_memory,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "num_whiles": self.num_whiles,
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+def analyze_compiled(compiled) -> Roofline:
+    text = compiled.as_text()
+    costs = analyze_hlo_text(text)
+    peak = None
+    try:
+        mem = compiled.memory_analysis()
+        peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(
+        flops=costs.flops, bytes_accessed=costs.hbm_bytes,
+        coll_bytes=costs.coll_bytes, peak_memory=peak,
+        transcendentals=costs.transcendentals,
+        num_whiles=costs.num_whiles,
+        unknown_trip_counts=costs.unknown_trip_counts)
+
+
+def model_flops_per_step(cfg, shape, active_params: int) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens (fwd)."""
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * active_params * tokens
+
+
+# legacy helpers kept for tests
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    costs = analyze_hlo_text(hlo_text)
+    return {k: int(v) for k, v in costs.coll_bytes.items()}

@@ -1,0 +1,64 @@
+"""Serving launcher: batched greedy decoding with a KV/state cache.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1_5_0_5b \
+      --batch 4 --prompt-len 32 --gen 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1_5_0_5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=64)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.models.model import Model
+
+    spec = get_arch(args.arch)
+    if not spec.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    cfg = spec.config if args.full else spec.config.reduced()
+    model = Model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init(key)
+
+    b = args.batch
+    max_len = args.prompt_len + args.gen
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, args.prompt_len),
+                                0, cfg.vocab_size)
+    cache = model.init_cache(b, max_len)
+    step = jax.jit(model.decode_step)
+
+    # prefill via repeated decode (teacher forcing the prompt)
+    t0 = time.perf_counter()
+    tok = None
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t:t + 1],
+                             jnp.asarray(t, jnp.int32))
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None]
+    for t in range(args.prompt_len, max_len):
+        out.append(tok)
+        logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1)[:, None]
+    dt = time.perf_counter() - t0
+    gen = jnp.concatenate(out, axis=1)
+    toks_per_s = b * max_len / dt
+    print(f"generated {gen.shape} tokens in {dt:.2f}s "
+          f"({toks_per_s:.1f} tok/s incl. prefill)")
+    print("first sequence:", gen[0, :16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

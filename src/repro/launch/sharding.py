@@ -1,0 +1,235 @@
+"""Sharding rules mapping every parameter / activation / cache tensor to a
+PartitionSpec on the production mesh.
+
+Logical axes:
+  fsdp  — parameter shards over the data(-parallel) axes (pod, data): ZeRO-3
+          style; required to fit jamba-398B optimizer state in 16 GB/chip.
+  tp    — tensor parallel over the `model` axis: attention heads (flat
+          head·dim), FFN hidden, vocab, MoE expert dim, SSM/RWKV inner dims.
+  dp    — batch over (pod, data).
+
+Divisibility fallback: any dim not divisible by its mesh axis size degrades
+to replication for that dim (e.g. smollm's 9 heads on a 16-way model axis);
+GSPMD then inserts the necessary collectives. This is the BASELINE policy —
+§Perf iterates on it.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# per-param logical axes, applied to the *trailing* dims (a leading group-
+# stack axis is auto-prepended for slot params).
+_PARAM_RULES: dict[str, tuple[str | None, ...]] = {
+    "embed": ("tp", "fsdp"),
+    "lm_head": ("fsdp", "tp"),
+    "final_norm": (None,),
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+    # dense ffn
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    "b_up": ("tp",), "b_down": (None,),
+    # moe
+    "router": ("fsdp", None),
+    "moe_gate": ("tp", "fsdp", None), "moe_up": ("tp", "fsdp", None),
+    "moe_down": ("tp", None, "fsdp"),
+    "sh_gate": ("fsdp", "tp"), "sh_up": ("fsdp", "tp"),
+    "sh_down": ("tp", "fsdp"),
+    # mamba
+    "in_x": ("fsdp", "tp"), "in_z": ("fsdp", "tp"), "out": ("tp", "fsdp"),
+    "conv_w": (None, "tp"),
+    "dt_down": ("tp", None), "dt_up": (None, "tp"),
+    "dt_bias": ("tp",), "d_skip": ("tp",),
+    "w_b": ("tp", None), "w_c": ("tp", None), "a_log": ("tp", None),
+    # rwkv
+    "wr": ("fsdp", "tp"), "wk_t": ("fsdp", "tp"), "wv_t": ("fsdp", "tp"),
+    "wg": ("fsdp", "tp"),
+    "wa": ("fsdp", None), "wb": (None, "tp"),
+    "w0": (None,), "u": ("tp", None), "gn": (None,),
+    "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_w": (None,),
+    "mu_g": (None,), "mu_c": (None,),
+    "cm_r": ("fsdp", "tp"), "cm_k": ("fsdp", "tp"), "cm_v": ("tp", "fsdp"),
+    # norms
+    "norm_mix": (None,), "norm_ffn": (None,),
+}
+
+
+class ShardingRules:
+    """policy:
+      "tp"    — baseline: FSDP over (pod, data) + tensor parallel over model.
+      "dp"    — pure data parallelism: the model axis joins the batch axes,
+                weights replicate over it (FSDP still over (pod, data)).
+                Wins for small models where TP output all-reduces dominate
+                (§Perf iteration 2).
+      "serve" — inference: params shard over `model` only (no FSDP — there
+                is no optimizer state, and per-step FSDP all-gathers are
+                pure overhead at decode batch sizes; §Perf iteration log,
+                qwen-32B decode)."""
+
+    def __init__(self, mesh: Mesh, policy: str = "tp"):
+        self.mesh = mesh
+        self.policy = policy
+        names = mesh.axis_names
+        dp = [a for a in ("pod", "data") if a in names]
+        if policy == "dp" and "model" in names:
+            dp.append("model")
+            self.tp_axis = None
+        else:
+            self.tp_axis = "model" if "model" in names else None
+        self.dp_axes = tuple(dp)
+        self.fsdp_axes = () if policy == "serve" else tuple(
+            a for a in ("pod", "data") if a in names)
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp_axes])) \
+            if self.dp_axes else 1
+        self.fsdp_size = int(np.prod(
+            [mesh.shape[a] for a in self.fsdp_axes])) if self.fsdp_axes \
+            else 1
+        self.tp_size = mesh.shape[self.tp_axis] if self.tp_axis else 1
+
+    def with_policy(self, policy: str) -> "ShardingRules":
+        return ShardingRules(self.mesh, policy=policy)
+
+    # ---- helpers -------------------------------------------------------------
+    def _resolve(self, logical: str | None, dim: int):
+        if logical is None:
+            return None
+        if logical == "fsdp":
+            if self.fsdp_axes and dim % self.fsdp_size == 0:
+                return self.fsdp_axes if len(self.fsdp_axes) > 1 \
+                    else self.fsdp_axes[0]
+            return None
+        if logical == "tp":
+            if self.tp_axis and dim % self.tp_size == 0:
+                return self.tp_axis
+            return None
+        raise ValueError(logical)
+
+    def spec_for(self, rule: tuple, shape: tuple, stacked: bool) -> P:
+        trailing = shape[1:] if stacked else shape
+        assert len(rule) == len(trailing), (rule, shape)
+        axes = [self._resolve(r, d) for r, d in zip(rule, trailing)]
+        if stacked:
+            axes = [None] + axes
+        return P(*axes)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ---- params / optimizer ----------------------------------------------------
+    def params_specs(self, params_shape: Pytree) -> Pytree:
+        def leaf_spec(path, leaf):
+            name = None
+            stacked = False
+            for part in path:
+                key = getattr(part, "key", None)
+                if key is not None:
+                    name = key
+                    stacked = str(path[0].key).startswith("slot") \
+                        if hasattr(path[0], "key") else False
+            stacked = str(getattr(path[0], "key", "")).startswith("slot")
+            rule = _PARAM_RULES.get(name)
+            if rule is None or len(rule) != len(
+                    leaf.shape[1:] if stacked else leaf.shape):
+                return P()          # replicate unknowns
+            return self.spec_for(rule, leaf.shape, stacked)
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+    def opt_specs(self, opt_shape: Pytree, params_specs_tree: Pytree
+                  ) -> Pytree:
+        return {
+            "m": params_specs_tree,
+            "v": params_specs_tree,
+            "step": P(),
+        }
+
+    # ---- activations / batches ---------------------------------------------------
+    def dp_spec(self) -> Any:
+        if not self.dp_axes:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def batch_specs(self, batch_shape: dict, global_batch: int) -> dict:
+        dp = self.dp_spec() if global_batch % self.dp_size == 0 else None
+        out = {}
+        for k, v in batch_shape.items():
+            if v.ndim == 2:
+                out[k] = P(dp, None)
+            elif v.ndim == 3:                     # embeds [B, S, d]
+                out[k] = P(dp, None, None)
+            else:
+                out[k] = P()
+        return out
+
+    # ---- decode cache ----------------------------------------------------------
+    def cache_specs(self, cache_shape: Pytree, batch: int) -> Pytree:
+        """KV caches [g, B, S, K, dh]; states [g, B, ...]. Batch goes to dp
+        when divisible, otherwise the sequence / inner dim is sharded
+        (context parallelism for long_500k B=1)."""
+        dp = self.dp_spec()
+        batch_on_dp = dp is not None and batch % self.dp_size == 0
+
+        def leaf_spec(path, leaf):
+            name = None
+            for part in path:
+                key = getattr(part, "key", None)
+                if key is not None:
+                    name = key
+            shape = leaf.shape
+            if name in ("k", "v"):                 # [g, B, S, K, dh]
+                kv_heads, seq = shape[3], shape[2]
+                tp = self.tp_axis if (self.tp_axis and
+                                      kv_heads % self.tp_size == 0) else None
+                if batch_on_dp:
+                    # kv heads not tp-divisible (MHA like qwen-32b, or
+                    # kv < tp): shard the SEQUENCE dim over `model` instead
+                    # of replicating the cache (flash-decode layout) —
+                    # decode attention partitions cleanly over kv chunks.
+                    seq_tp = (self.tp_axis
+                              if (tp is None and self.tp_axis
+                                  and seq % self.tp_size == 0) else None)
+                    return P(None, dp, seq_tp, tp, None)
+                seq_dp = dp if (dp and seq % self.dp_size == 0) else None
+                return P(None, None, seq_dp, tp, None)
+            if name in ("k_scale", "v_scale"):     # [g, B, S, K]
+                seq = shape[2]
+                if batch_on_dp:
+                    seq_tp = (self.tp_axis if (self.tp_axis and
+                              seq % self.tp_size == 0) else None)
+                    # scales follow the cache's seq sharding when kv heads
+                    # aren't tp-divisible (qwen-32b layout)
+                    kv_tp = (self.tp_axis if shape[3] % self.tp_size == 0
+                             else None)
+                    return P(None, dp, None if kv_tp else seq_tp, kv_tp)
+                seq_dp = dp if (dp and seq % self.dp_size == 0) else None
+                return P(None, None, seq_dp, None)
+            if name == "pos":                      # [g, W]
+                return P(None, None)
+            if name == "state" and len(shape) == 5:  # rwkv [g,B,H,dh,dh]
+                tp = self.tp_axis if shape[2] % self.tp_size == 0 else None
+                return P(None, dp if batch_on_dp else None, tp, None, None)
+            if name == "state":                    # mamba [g, B, di, N]
+                tp = self.tp_axis if shape[2] % self.tp_size == 0 else None
+                return P(None, dp if batch_on_dp else None, tp, None)
+            if name == "conv":                     # [g, B, K-1, di]
+                tp = self.tp_axis if shape[3] % self.tp_size == 0 else None
+                return P(None, dp if batch_on_dp else None, None, tp)
+            if name in ("shift_t", "shift_c"):     # [g, B, d]
+                return P(None, dp if batch_on_dp else None, None)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def make_shardings(rules: ShardingRules, spec_tree: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,196 @@
+"""Input ShapeDtypeStruct builders for every (arch × input shape) pair —
+weak-type-correct, shardable, zero allocation — plus the per-pair step
+function and sharding assembly used by the dry-run and the launchers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import INPUT_SHAPES, ArchSpec, ShapeSpec
+from repro.launch.sharding import ShardingRules, make_shardings
+from repro.models.model import Model, ModelConfig, SlotSpec
+from repro.train.optim import AdamWConfig
+from repro.train.step import (TrainState, make_prefill, make_serve_step,
+                              make_train_step, train_state_init)
+
+Pytree = Any
+
+
+def variant_config(spec: ArchSpec, shape_name: str, *,
+                   rules: ShardingRules | None = None) -> ModelConfig:
+    """The lowered configuration for a pair: bf16, optional SWA long-context
+    variant, activation sharding for training shapes."""
+    plan = spec.shape_plan(shape_name)
+    if plan == "skip":
+        raise ValueError(f"{spec.config.name} skips {shape_name}")
+    cfg = spec.config
+    overrides: dict[str, Any] = dict(
+        param_dtype="bfloat16", compute_dtype="bfloat16")
+    if plan == "run-swa":
+        overrides["slots"] = tuple(
+            SlotSpec("swa" if s.mixer == "attn" else s.mixer, s.ffn)
+            for s in cfg.slots)
+        overrides["sliding_window"] = spec.long_context_window
+    shape = INPUT_SHAPES[shape_name]
+    if rules is not None:
+        dp = (rules.dp_spec()
+              if shape.global_batch % max(rules.dp_size, 1) == 0 else None)
+        if shape.kind in ("train", "prefill"):
+            seq_ax = (rules.tp_axis
+                      if shape.seq_len % max(rules.tp_size, 1) == 0 else None)
+            overrides["act_shard"] = (dp, seq_ax, None)
+        else:                                 # decode: [B, 1, d]
+            overrides["act_shard"] = (dp, None, None)
+            # int8 KV cache when the bf16 cache would not fit per device
+            attn_layers = sum(s.mixer == "attn" for s in cfg.slots) \
+                * cfg.num_layers // max(cfg.period, 1)
+            cache_bytes = (2 * attn_layers * shape.global_batch
+                           * shape.seq_len * cfg.num_kv_heads * cfg.hd * 2)
+            per_dev = cache_bytes / (rules.dp_size * rules.tp_size)
+            if per_dev > 8 * 2**30:
+                overrides["kv_cache_dtype"] = "int8"
+        if cfg.moe_num_experts:
+            # one dispatch group per data shard (shard-local capacity);
+            # falls back to 1 group when the token count doesn't divide
+            overrides["moe_groups"] = rules.dp_size if dp is not None else 1
+            overrides["moe_shard"] = (dp, rules.tp_axis)
+    # moment dtype decided by the launcher (see opt_config_for)
+    return dataclasses.replace(cfg, **overrides)
+
+
+def opt_config_for(cfg: ModelConfig) -> AdamWConfig:
+    """bf16 moments for the very largest config so optimizer state fits
+    16 GB/chip (documented in DESIGN.md §6)."""
+    from repro.models.model import analytic_param_count
+
+    big = analytic_param_count(cfg) > 1e11
+    return AdamWConfig(total_steps=10000,
+                       moment_dtype="bfloat16" if big else "float32")
+
+
+# --------------------------------------------------------------- input specs
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def train_batch_struct(spec: ArchSpec, cfg: ModelConfig,
+                       shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if spec.input_kind == "audio":
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdt),
+            "targets": _tok(b, s),
+            "loss_mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+        }
+    if spec.input_kind == "vlm":
+        s_img = 1024                       # anyres tile budget (stub frontend)
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model), cfg.cdt),
+            "tokens": _tok(b, s - s_img),
+            "targets": _tok(b, s - s_img),
+        }
+    return {"tokens": _tok(b, s), "targets": _tok(b, s)}
+
+
+def prefill_batch_struct(spec: ArchSpec, cfg: ModelConfig,
+                         shape: ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if spec.input_kind == "audio":
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdt)}
+    if spec.input_kind == "vlm":
+        s_img = 1024
+        return {"embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model),
+                                               cfg.cdt),
+                "tokens": _tok(b, s - s_img)}
+    return {"tokens": _tok(b, s)}
+
+
+def input_specs(arch_spec: ArchSpec, shape_name: str,
+                rules: ShardingRules, *,
+                analysis_unroll: bool = False) -> dict:
+    """Returns {fn, args (ShapeDtypeStructs), in_shardings, donate_argnums}
+    for one (arch × shape) pair on the mesh behind ``rules``."""
+    shape = INPUT_SHAPES[shape_name]
+    # §Perf: small models train pure-DP — the model axis joins the batch
+    # axes; TP output all-reduces dominate otherwise (16× collective on
+    # qwen-0.5b). Threshold 2B params.
+    from repro.models.model import analytic_param_count
+    if (shape.kind == "train" and rules.policy == "tp"
+            and analytic_param_count(arch_spec.config) < 2e9):
+        rules = rules.with_policy("dp")
+    cfg = variant_config(arch_spec, shape_name, rules=rules)
+    cfg = dataclasses.replace(cfg, analysis_unroll=analysis_unroll)
+    model = Model(cfg)
+    opt_cfg = opt_config_for(cfg)
+
+    params_struct = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    p_specs = rules.params_specs(params_struct)
+    p_shard = make_shardings(rules, p_specs)
+
+    if shape.kind == "train":
+        state_struct = jax.eval_shape(
+            lambda: train_state_init(cfg, opt_cfg, jax.random.PRNGKey(0)))
+        state_shard = TrainState(
+            params=p_shard,
+            opt=make_shardings(rules, rules.opt_specs(None, p_specs)),
+            step=make_shardings(rules, P()))
+        batch_struct = train_batch_struct(arch_spec, cfg, shape)
+        b_shard = make_shardings(
+            rules, rules.batch_specs(batch_struct, shape.global_batch))
+        return dict(
+            fn=make_train_step(cfg, opt_cfg, grad_specs=p_specs),
+            args=(state_struct, batch_struct),
+            in_shardings=(state_shard, b_shard),
+            # pin the new state to the same shards so gradients lower to
+            # reduce-scatter into the FSDP layout, not full all-reduce
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+            cfg=cfg,
+        )
+
+    if shape.kind == "prefill":
+        batch_struct = prefill_batch_struct(arch_spec, cfg, shape)
+        b_shard = make_shardings(
+            rules, rules.batch_specs(batch_struct, shape.global_batch))
+        return dict(
+            fn=make_prefill(cfg),
+            args=(params_struct, batch_struct),
+            in_shardings=(p_shard, b_shard),
+            donate_argnums=(),
+            cfg=cfg,
+        )
+
+    # decode: ONE new token against a seq_len cache. Serving has no
+    # optimizer state — params live model-sharded only (no per-step FSDP
+    # all-gathers; §Perf iteration log, qwen-32B decode) — UNLESS the
+    # model-sharded residency alone exceeds the HBM budget (jamba-398B:
+    # 49.8 GB/device), in which case params stay FSDP+TP sharded.
+    from repro.models.model import analytic_param_count
+    params_per_dev = analytic_param_count(cfg) * 2 / max(rules.tp_size, 1)
+    if rules.policy == "tp" and params_per_dev <= 8 * 2**30:
+        rules = rules.with_policy("serve")
+        p_shard = make_shardings(rules, rules.params_specs(params_struct))
+    b = shape.global_batch
+    cache_len = (cfg.sliding_window
+                 if any(s.mixer == "swa" for s in cfg.slots)
+                 else shape.seq_len)
+    cache_struct = jax.eval_shape(
+        lambda: model.init_cache(b, cache_len))
+    c_shard = make_shardings(rules, rules.cache_specs(cache_struct, b))
+    tok_struct = _tok(b, 1)
+    t_shard = make_shardings(
+        rules, rules.batch_specs({"tokens": tok_struct}, b))["tokens"]
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    return dict(
+        fn=make_serve_step(cfg),
+        args=(params_struct, cache_struct, tok_struct, pos_struct),
+        in_shardings=(p_shard, c_shard, t_shard,
+                      make_shardings(rules, P())),
+        donate_argnums=(1,),
+        cfg=cfg,
+    )

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+CPU-scale run (default): a reduced variant of the selected architecture on
+synthetic tokens — the end-to-end driver used by examples/train_lm.py.
+Production mesh runs pass --mesh single|multi on real hardware (the same
+code path the dry-run lowers).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_135m \
+      --steps 200 --batch 8 --seq 256 [--full] [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (needs real accelerators)")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    from repro.data.tokens import SyntheticTokenPipeline, TokenPipelineConfig
+    from repro.train.loop import train_loop
+    from repro.train.optim import AdamWConfig
+
+    spec = get_arch(args.arch)
+    cfg = spec.config if args.full else spec.config.reduced()
+    print(f"arch={cfg.name} layers={cfg.num_layers} d={cfg.d_model} "
+          f"vocab={cfg.vocab_size} ({'full' if args.full else 'reduced'})")
+
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 5))
+    pipe = SyntheticTokenPipeline(TokenPipelineConfig(
+        vocab_size=cfg.vocab_size, batch_size=args.batch,
+        seq_len=args.seq, seed=args.seed))
+
+    state, history = train_loop(
+        cfg, opt_cfg, iter(pipe), args.steps, seed=args.seed,
+        ckpt_path=args.ckpt)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} → {last:.4f} "
+          f"({100 * (first - last) / first:.1f}% reduction)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import (Model, ModelConfig, SlotSpec)
+
+__all__ = ["Model", "ModelConfig", "SlotSpec"]

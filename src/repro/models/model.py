@@ -1,0 +1,653 @@
+"""Composable model assembly covering all assigned architecture families.
+
+A model is ``num_groups`` repetitions of a *period* of slots (``cfg.slots``),
+scanned with stacked parameters (one jax.lax.scan over groups keeps the HLO
+size independent of depth and enables per-group remat). Each slot is a
+(mixer, ffn) pair:
+
+  mixer ∈ {attn, swa, mamba, rwkv}      ffn ∈ {dense, moe, rwkv_cmix, none}
+
+Examples:
+  dense llama-style:   slots = ((attn, dense),)
+  deepseek-moe:        slots = ((attn, moe),)
+  rwkv6:               slots = ((rwkv, rwkv_cmix),)
+  jamba (1:7 + MoE/2): slots = 8 entries, slot0 attn, rest mamba,
+                       odd slots moe, even slots dense
+
+Two entry points per model:
+  forward(...)     — full-sequence (training / prefill), chunked attention
+  decode_step(...) — one token against a cache pytree (KV ring buffer for
+                     swa, constant-size states for mamba/rwkv)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+
+Params = dict
+Cache = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    mixer: str          # attn | swa | mamba | rwkv
+    ffn: str            # dense | moe | rwkv_cmix | none
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    slots: tuple[SlotSpec, ...] = (SlotSpec("attn", "dense"),)
+    qkv_bias: bool = False
+    is_encoder: bool = False
+    act: str = "swiglu"               # swiglu | gelu
+    rope_theta: float = 10000.0
+    sliding_window: int | None = None
+    # MoE
+    moe_num_experts: int = 0
+    moe_experts_per_token: int = 0
+    moe_num_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_groups: int = 1               # dispatch groups (= data shards)
+    moe_shard: tuple | None = None    # (dp_axes, tp_axis) for MoE buffers
+    # SSM
+    ssm_state_dim: int = 16
+    ssm_conv_width: int = 4
+    ssm_expand: int = 2
+    # RWKV
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 64
+    # serving
+    kv_cache_dtype: str = "bfloat16"   # "int8" = quantized KV cache with
+    #                                     per-(token, head) bf16 scales
+    # misc
+    tie_embeddings: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    attn_chunk: int = 1024
+    scan_chunk: int = 128             # time chunk for ssm/rwkv scans
+    remat: bool = True
+    # optional PartitionSpec-like tuple for the residual stream [B, S, d],
+    # applied between layer groups (requires an ambient mesh context).
+    # e.g. (("pod","data"), "model", None) = Megatron-SP sequence sharding
+    # of stored activations.
+    act_shard: tuple | None = None
+    # analysis mode (dry-run): unroll the group scan and attention KV scans
+    # so XLA's HloCostAnalysis counts their flops/collectives at full trip
+    # count (while-loop bodies are otherwise counted once). The inner
+    # SSM/RWKV per-step recurrences stay as loops — their flops are <0.2% of
+    # the projections (noted in EXPERIMENTS.md §Dry-run).
+    analysis_unroll: bool = False
+    citation: str = ""
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def period(self) -> int:
+        return len(self.slots)
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.period == 0, \
+            (self.num_layers, self.period)
+        return self.num_layers // self.period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(16, self.d_model // 32)
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def pdt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def moe_dims(self) -> moe_lib.MoEDims:
+        return moe_lib.MoEDims(
+            num_experts=self.moe_num_experts,
+            experts_per_token=self.moe_experts_per_token,
+            d_model=self.d_model, d_ff=self.d_ff,
+            num_shared_experts=self.moe_num_shared_experts,
+            capacity_factor=self.moe_capacity_factor)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Smoke-test variant: 1 period of layers, d_model ≤ 512, ≤4 experts."""
+        d_model = min(self.d_model, 256)
+        hd = 32
+        heads = max(2, min(4, self.num_heads))
+        kv = max(1, heads // max(1, self.num_heads // self.num_kv_heads))
+        kw = dict(
+            num_layers=2 * self.period if self.period <= 4 else self.period,
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=hd,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 1024),
+            moe_num_experts=min(self.moe_num_experts, 4),
+            moe_experts_per_token=min(self.moe_experts_per_token, 2),
+            rwkv_head_dim=32,
+            rwkv_lora_rank=16,
+            attn_chunk=64,
+            scan_chunk=16,
+        )
+        kw.update(overrides)
+        return dataclasses.replace(self, **kw)
+
+
+# ============================================================== initialization
+def _init(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _slot_param_shapes(cfg: ModelConfig, slot: SlotSpec) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    h, k = cfg.num_heads, cfg.num_kv_heads
+    shapes: dict[str, tuple] = {"norm_mix": (d,)}
+    if slot.mixer in ("attn", "swa"):
+        shapes.update(wq=(d, h * hd), wk=(d, k * hd), wv=(d, k * hd),
+                      wo=(h * hd, d))
+        if cfg.qkv_bias:
+            shapes.update(bq=(h * hd,), bk=(k * hd,), bv=(k * hd,))
+    elif slot.mixer == "mamba":
+        di, n, r = cfg.d_inner, cfg.ssm_state_dim, cfg.dt_rank
+        shapes.update(in_x=(d, di), in_z=(d, di),
+                      conv_w=(cfg.ssm_conv_width, di),
+                      dt_down=(di, r), dt_up=(r, di), dt_bias=(di,),
+                      w_b=(di, n), w_c=(di, n), a_log=(di, n),
+                      d_skip=(di,), out=(di, d))
+    elif slot.mixer == "rwkv":
+        hh, dh, r = cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_lora_rank
+        shapes.update(mu_r=(d,), mu_k=(d,), mu_v=(d,), mu_w=(d,), mu_g=(d,),
+                      wr=(d, d), wk_t=(d, d), wv_t=(d, d), wg=(d, d),
+                      w0=(d,), wa=(d, r), wb=(r, d), u=(hh, dh),
+                      gn=(d,), wo=(d, d))
+    else:
+        raise ValueError(slot.mixer)
+
+    if slot.ffn == "dense":
+        shapes["norm_ffn"] = (d,)
+        if cfg.act == "swiglu":
+            shapes.update(w_gate=(d, cfg.d_ff), w_up=(d, cfg.d_ff),
+                          w_down=(cfg.d_ff, d))
+        else:
+            shapes.update(w_up=(d, cfg.d_ff), b_up=(cfg.d_ff,),
+                          w_down=(cfg.d_ff, d), b_down=(d,))
+    elif slot.ffn == "moe":
+        e, f = cfg.moe_num_experts, cfg.d_ff
+        shapes["norm_ffn"] = (d,)
+        shapes.update(router=(d, e), moe_gate=(e, d, f), moe_up=(e, d, f),
+                      moe_down=(e, f, d))
+        if cfg.moe_num_shared_experts:
+            fs = cfg.moe_num_shared_experts * f
+            shapes.update(sh_gate=(d, fs), sh_up=(d, fs), sh_down=(fs, d))
+    elif slot.ffn == "rwkv_cmix":
+        shapes.update(norm_ffn=(d,), mu_c=(d,), cm_r=(d, d),
+                      cm_k=(d, cfg.d_ff), cm_v=(cfg.d_ff, d))
+    elif slot.ffn != "none":
+        raise ValueError(slot.ffn)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    keys = jax.random.split(key, 4 + cfg.period)
+    d, v = cfg.d_model, cfg.vocab_size
+    params: Params = {
+        "embed": _init(keys[0], (v, d), cfg.pdt, scale=0.02),
+        "final_norm": jnp.ones((d,), cfg.pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(keys[1], (d, v), cfg.pdt)
+
+    g = cfg.num_groups
+    for i, slot in enumerate(cfg.slots):
+        shapes = _slot_param_shapes(cfg, slot)
+        skeys = jax.random.split(keys[4 + i], len(shapes))
+        slot_params = {}
+        for (name, shape), sk in zip(sorted(shapes.items()), skeys):
+            if name.startswith("norm") or name == "gn":
+                p = jnp.ones((g,) + shape, cfg.pdt)
+            elif name.startswith(("mu_", "b", "dt_bias", "d_skip")) \
+                    and name not in ("b_up",):
+                p = jnp.zeros((g,) + shape, cfg.pdt) \
+                    if not name.startswith("mu_") \
+                    else jnp.full((g,) + shape, 0.5, cfg.pdt)
+            elif name == "a_log":
+                a0 = jnp.log(jnp.broadcast_to(
+                    jnp.arange(1, shape[1] + 1, dtype=jnp.float32),
+                    shape))
+                p = jnp.broadcast_to(a0, (g,) + shape).astype(cfg.pdt)
+            elif name == "w0":
+                p = jnp.full((g,) + shape, -0.6, cfg.pdt)   # decay ~ exp(-e^{-.6})
+            elif name == "u":
+                p = jnp.zeros((g,) + shape, cfg.pdt)
+            else:
+                p = _init(sk, (g,) + shape, cfg.pdt,
+                          scale=1.0 / math.sqrt(shape[0]))
+            slot_params[name] = p
+        params[f"slot{i}"] = slot_params
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(p.size for p in jax.tree.leaves(params))
+
+
+def analytic_param_count(cfg: ModelConfig) -> int:
+    """Parameter count from shapes alone (no allocation) — used to sanity
+    check the full-size assigned configs against their nominal sizes."""
+    total = cfg.vocab_size * cfg.d_model + cfg.d_model       # embed + norm
+    if not cfg.tie_embeddings:
+        total += cfg.d_model * cfg.vocab_size
+    for slot in cfg.slots:
+        shapes = _slot_param_shapes(cfg, slot)
+        total += cfg.num_groups * sum(
+            math.prod(s) for s in shapes.values())
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Activated parameters per token (MoE: top-k of E experts)."""
+    total = analytic_param_count(cfg)
+    if cfg.moe_num_experts:
+        for slot in cfg.slots:
+            if slot.ffn == "moe":
+                f = cfg.d_ff
+                per_expert = 3 * cfg.d_model * f
+                inactive = (cfg.moe_num_experts
+                            - cfg.moe_experts_per_token) * per_expert
+                total -= cfg.num_groups * inactive
+    return total
+
+
+# ================================================================= slot apply
+def _attn_mixer(cfg: ModelConfig, slot: SlotSpec, p: dict, h: jax.Array,
+                positions: jax.Array, window: int | None) -> jax.Array:
+    b, s, d = h.shape
+    nh, nk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    x = L.rms_norm(h, p["norm_mix"])
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nk, hd)
+    v = v.reshape(b, s, nk, hd)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = L.chunked_attention(
+        q, k, v, positions, positions,
+        causal=not cfg.is_encoder, window=window,
+        chunk_kv=min(cfg.attn_chunk, s), unroll=cfg.analysis_unroll)
+    return (out.reshape(b, s, nh * hd) @ p["wo"])
+
+
+def _mamba_mixer(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
+    x = L.rms_norm(h, p["norm_mix"])
+    xi = x @ p["in_x"]                                  # [B, S, di]
+    z = x @ p["in_z"]
+    xi = jax.nn.silu(ssm_lib.causal_conv1d(xi, p["conv_w"]))
+    delta = jax.nn.softplus((xi @ p["dt_down"]) @ p["dt_up"] + p["dt_bias"])
+    b_t = xi @ p["w_b"]
+    c_t = xi @ p["w_c"]
+    b0 = h.shape[0]
+    state0 = jnp.zeros((b0, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+    y, _ = ssm_lib.ssm_chunk_scan(xi, delta, p["a_log"], b_t, c_t,
+                                  p["d_skip"], state0, chunk=cfg.scan_chunk)
+    return (y * jax.nn.silu(z)) @ p["out"]
+
+
+def _rwkv_mixer(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
+    b, s, d = h.shape
+    hh, dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+    x = L.rms_norm(h, p["norm_mix"])
+    xr = rwkv_lib.token_shift(x, p["mu_r"])
+    xk = rwkv_lib.token_shift(x, p["mu_k"])
+    xv = rwkv_lib.token_shift(x, p["mu_v"])
+    xw = rwkv_lib.token_shift(x, p["mu_w"])
+    xg = rwkv_lib.token_shift(x, p["mu_g"])
+    r = (xr @ p["wr"]).reshape(b, s, hh, dh)
+    k = (xk @ p["wk_t"]).reshape(b, s, hh, dh)
+    v = (xv @ p["wv_t"]).reshape(b, s, hh, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = rwkv_lib.data_dependent_decay(xw, p["w0"], p["wa"], p["wb"], hh)
+    state0 = jnp.zeros((b, hh, dh, dh), jnp.float32)
+    out, _ = rwkv_lib.wkv6_chunk_scan(r, k, v, w, p["u"], state0,
+                                      chunk=cfg.scan_chunk)
+    out = out.reshape(b, s, d)
+    out = L.rms_norm(out, p["gn"])          # stand-in for per-head group norm
+    return (out * g) @ p["wo"]
+
+
+def _ffn(cfg: ModelConfig, slot: SlotSpec, p: dict, h: jax.Array,
+         aux: dict) -> jax.Array:
+    if slot.ffn == "none":
+        return jnp.zeros_like(h)
+    x = L.rms_norm(h, p["norm_ffn"])
+    if slot.ffn == "dense":
+        if cfg.act == "swiglu":
+            return L.swiglu_mlp(x, p["w_gate"], p["w_up"], p["w_down"])
+        return L.gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+    if slot.ffn == "moe":
+        b, s, d = x.shape
+        out, losses = moe_lib.moe_forward(
+            x.reshape(b * s, d), p["router"], p["moe_gate"], p["moe_up"],
+            p["moe_down"], cfg.moe_dims(),
+            shared_w_gate=p.get("sh_gate"), shared_w_up=p.get("sh_up"),
+            shared_w_down=p.get("sh_down"),
+            groups=cfg.moe_groups, shard=cfg.moe_shard)
+        for key, val in losses.items():
+            aux[key] = aux.get(key, 0.0) + val
+        return out.reshape(b, s, d)
+    if slot.ffn == "rwkv_cmix":
+        return rwkv_lib.channel_mix(x, p["mu_c"], p["cm_r"], p["cm_k"],
+                                    p["cm_v"])
+    raise ValueError(slot.ffn)
+
+
+def _apply_slot(cfg: ModelConfig, slot: SlotSpec, p: dict, h: jax.Array,
+                positions: jax.Array, aux: dict) -> jax.Array:
+    if slot.mixer in ("attn", "swa"):
+        window = cfg.sliding_window if slot.mixer == "swa" else None
+        h = h + _attn_mixer(cfg, slot, p, h, positions, window)
+    elif slot.mixer == "mamba":
+        h = h + _mamba_mixer(cfg, p, h)
+    elif slot.mixer == "rwkv":
+        h = h + _rwkv_mixer(cfg, p, h)
+    else:
+        raise ValueError(slot.mixer)
+    h = h + _ffn(cfg, slot, p, h, aux)
+    return h
+
+
+# ==================================================================== forward
+class Model:
+    """Functional model wrapper bound to a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> Params:
+        return init_params(self.cfg, key)
+
+    # ---- full-sequence forward ----------------------------------------------
+    def forward(self, params: Params, tokens: jax.Array | None = None,
+                embeds: jax.Array | None = None,
+                positions: jax.Array | None = None
+                ) -> tuple[jax.Array, dict]:
+        """tokens [B, S] int32 and/or embeds [B, S_e, d] (VLM/audio frontends
+        supply embeds; if both given, embeds are prepended). Returns
+        (logits [B, S_total, V], aux-loss dict)."""
+        cfg = self.cfg
+        if tokens is not None:
+            h = params["embed"][tokens].astype(cfg.cdt)
+            if embeds is not None:
+                h = jnp.concatenate([embeds.astype(cfg.cdt), h], axis=1)
+        else:
+            h = embeds.astype(cfg.cdt)
+        b, s, _ = h.shape
+        if cfg.act_shard is not None:
+            from jax.sharding import PartitionSpec
+            # batch-dim constraint right after the (sharded-table) embedding
+            # gather: GSPMD otherwise replicates the gather output and every
+            # downstream per-token matmul runs at full global batch.
+            h = jax.lax.with_sharding_constraint(
+                h, PartitionSpec(cfg.act_shard[0], None, None))
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)
+
+        aux_total: dict[str, jax.Array] = {}
+
+        def group_body(carry, group_params):
+            h = carry
+            aux: dict[str, jax.Array] = {}
+            for i, slot in enumerate(cfg.slots):
+                h = _apply_slot(cfg, slot, group_params[f"slot{i}"], h,
+                                positions, aux)
+            if cfg.act_shard is not None:
+                from jax.sharding import PartitionSpec
+                h = jax.lax.with_sharding_constraint(
+                    h, PartitionSpec(*cfg.act_shard))
+            aux_arr = jnp.stack([aux[k] for k in sorted(aux)]) if aux \
+                else jnp.zeros((0,))
+            return h, aux_arr
+
+        if cfg.remat:
+            group_body = jax.checkpoint(
+                group_body, policy=jax.checkpoint_policies.nothing_saveable)
+        group_params = {f"slot{i}": params[f"slot{i}"]
+                        for i in range(cfg.period)}
+        h, aux_stack = jax.lax.scan(
+            group_body, h, group_params,
+            unroll=cfg.num_groups if cfg.analysis_unroll else 1)
+
+        h = L.rms_norm(h, params["final_norm"])
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cfg.cdt)
+        logits = h @ head
+        aux_keys = sorted(
+            {k for i, s_ in enumerate(cfg.slots)
+             for k in (("load_balance_loss", "router_z_loss")
+                       if s_.ffn == "moe" else ())})
+        aux_total = {k: aux_stack[:, i].sum()
+                     for i, k in enumerate(aux_keys)} if aux_keys else {}
+        return logits, aux_total
+
+    # ---- decode -------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int,
+                   dtype=None) -> Cache:
+        cfg = self.cfg
+        dtype = dtype or cfg.cdt
+        g = cfg.num_groups
+        nk, hd = cfg.num_kv_heads, cfg.hd
+        cache: Cache = {}
+        for i, slot in enumerate(cfg.slots):
+            c: dict[str, jax.Array] = {}
+            if slot.mixer == "attn":
+                if cfg.kv_cache_dtype == "int8":
+                    c["k"] = jnp.zeros((g, batch, max_seq, nk, hd), jnp.int8)
+                    c["v"] = jnp.zeros((g, batch, max_seq, nk, hd), jnp.int8)
+                    c["k_scale"] = jnp.zeros((g, batch, max_seq, nk),
+                                             jnp.bfloat16)
+                    c["v_scale"] = jnp.zeros((g, batch, max_seq, nk),
+                                             jnp.bfloat16)
+                else:
+                    c["k"] = jnp.zeros((g, batch, max_seq, nk, hd), dtype)
+                    c["v"] = jnp.zeros((g, batch, max_seq, nk, hd), dtype)
+            elif slot.mixer == "swa":
+                w = cfg.sliding_window
+                c["k"] = jnp.zeros((g, batch, w, nk, hd), dtype)
+                c["v"] = jnp.zeros((g, batch, w, nk, hd), dtype)
+                # unwritten ring slots get INT32_MAX: excluded by the causal
+                # mask (q_pos >= kv_pos fails) and by the padding mask
+                c["pos"] = jnp.full((g, w), jnp.iinfo(jnp.int32).max,
+                                    jnp.int32)
+            elif slot.mixer == "mamba":
+                c["conv"] = jnp.zeros(
+                    (g, batch, cfg.ssm_conv_width - 1, cfg.d_inner), dtype)
+                c["state"] = jnp.zeros(
+                    (g, batch, cfg.d_inner, cfg.ssm_state_dim), jnp.float32)
+            elif slot.mixer == "rwkv":
+                c["shift_t"] = jnp.zeros((g, batch, cfg.d_model), dtype)
+                c["shift_c"] = jnp.zeros((g, batch, cfg.d_model), dtype)
+                c["state"] = jnp.zeros(
+                    (g, batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                     cfg.rwkv_head_dim), jnp.float32)
+            cache[f"slot{i}"] = c
+        return cache
+
+    def decode_step(self, params: Params, cache: Cache, tokens: jax.Array,
+                    pos: jax.Array) -> tuple[jax.Array, Cache]:
+        """One decode step. tokens [B, 1] int32, pos [] int32 (current length,
+        i.e. this token's position). Returns (logits [B, V], new cache)."""
+        cfg = self.cfg
+        h = params["embed"][tokens].astype(cfg.cdt)      # [B, 1, d]
+        if cfg.act_shard is not None:
+            from jax.sharding import PartitionSpec
+            h = jax.lax.with_sharding_constraint(
+                h, PartitionSpec(cfg.act_shard[0], None, None))
+        positions = pos[None].astype(jnp.int32)
+
+        def group_body(h, xs):
+            group_params, group_cache = xs
+            new_cache = {}
+            for i, slot in enumerate(cfg.slots):
+                h, new_cache[f"slot{i}"] = self._decode_slot(
+                    slot, group_params[f"slot{i}"], group_cache[f"slot{i}"],
+                    h, pos, positions)
+            return h, new_cache
+
+        group_params = {f"slot{i}": params[f"slot{i}"]
+                        for i in range(cfg.period)}
+        h, new_cache = jax.lax.scan(
+            group_body, h, (group_params, cache),
+            unroll=cfg.num_groups if cfg.analysis_unroll else 1)
+        h = L.rms_norm(h, params["final_norm"])
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(cfg.cdt)
+        return (h[:, 0] @ head), new_cache
+
+    def _decode_slot(self, slot: SlotSpec, p: dict, c: dict, h: jax.Array,
+                     pos: jax.Array, positions: jax.Array
+                     ) -> tuple[jax.Array, dict]:
+        cfg = self.cfg
+        b = h.shape[0]
+        nh, nk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+        new_c = dict(c)
+        if slot.mixer in ("attn", "swa"):
+            x = L.rms_norm(h, p["norm_mix"])
+            q = x @ p["wq"]
+            k = x @ p["wk"]
+            v = x @ p["wv"]
+            if cfg.qkv_bias:
+                q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+            q = L.apply_rope(q.reshape(b, 1, nh, hd), positions,
+                             cfg.rope_theta)
+            k = L.apply_rope(k.reshape(b, 1, nk, hd), positions,
+                             cfg.rope_theta)
+            v = v.reshape(b, 1, nk, hd)
+            if slot.mixer == "attn":
+                if cfg.kv_cache_dtype == "int8":
+                    def quantize(t):          # [B, 1, K, dh] → int8 + scale
+                        amax = jnp.max(jnp.abs(t), axis=-1)
+                        scale = jnp.maximum(amax, 1e-6) / 127.0
+                        q8 = jnp.clip(jnp.round(
+                            t / scale[..., None]), -127, 127).astype(jnp.int8)
+                        return q8, scale.astype(jnp.bfloat16)
+                    k8, ks = quantize(k)
+                    v8, vs = quantize(v)
+                    kc = jax.lax.dynamic_update_slice_in_dim(
+                        c["k"], k8, pos, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(
+                        c["v"], v8, pos, axis=1)
+                    ksc = jax.lax.dynamic_update_slice_in_dim(
+                        c["k_scale"], ks, pos, axis=1)
+                    vsc = jax.lax.dynamic_update_slice_in_dim(
+                        c["v_scale"], vs, pos, axis=1)
+                    kd = kc.astype(cfg.cdt) * ksc[..., None].astype(cfg.cdt)
+                    vd = vc.astype(cfg.cdt) * vsc[..., None].astype(cfg.cdt)
+                    out = L.decode_attention(q, kd, vd, pos + 1,
+                                             unroll=cfg.analysis_unroll)
+                    new_c.update(k=kc, v=vc, k_scale=ksc, v_scale=vsc)
+                else:
+                    kc = jax.lax.dynamic_update_slice_in_dim(
+                        c["k"], k.astype(c["k"].dtype), pos, axis=1)
+                    vc = jax.lax.dynamic_update_slice_in_dim(
+                        c["v"], v.astype(c["v"].dtype), pos, axis=1)
+                    out = L.decode_attention(q, kc, vc, pos + 1,
+                                             unroll=cfg.analysis_unroll)
+                    new_c.update(k=kc, v=vc)
+            else:                                        # sliding window ring
+                w = cfg.sliding_window
+                ring = pos % w
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    c["k"], k.astype(c["k"].dtype), ring, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    c["v"], v.astype(c["v"].dtype), ring, axis=1)
+                pc = jax.lax.dynamic_update_slice_in_dim(
+                    c["pos"], positions, ring, axis=0)
+                out = L.chunked_attention(
+                    q, kc, vc, positions, pc, causal=True, window=w,
+                    chunk_kv=min(cfg.attn_chunk, w),
+                    unroll=cfg.analysis_unroll)
+                new_c.update(k=kc, v=vc, pos=pc)
+            h = h + (out.reshape(b, 1, nh * hd) @ p["wo"])
+        elif slot.mixer == "mamba":
+            x = L.rms_norm(h, p["norm_mix"])[:, 0]       # [B, d]
+            xi = x @ p["in_x"]
+            z = x @ p["in_z"]
+            conv_win = jnp.concatenate(
+                [c["conv"], xi[:, None, :].astype(c["conv"].dtype)], axis=1)
+            xi = jax.nn.silu(
+                sum(conv_win[:, i, :] * p["conv_w"][i][None, :]
+                    for i in range(cfg.ssm_conv_width)))
+            delta = jax.nn.softplus(
+                (xi @ p["dt_down"]) @ p["dt_up"] + p["dt_bias"])
+            y, state = ssm_lib.ssm_step(
+                xi, delta, p["a_log"], xi @ p["w_b"], xi @ p["w_c"],
+                p["d_skip"], c["state"])
+            out = (y * jax.nn.silu(z)) @ p["out"]
+            h = h + out[:, None, :]
+            new_c.update(conv=conv_win[:, 1:], state=state)
+        elif slot.mixer == "rwkv":
+            hh, dh = cfg.rwkv_heads, cfg.rwkv_head_dim
+            x = L.rms_norm(h, p["norm_mix"])[:, 0]
+            prev = c["shift_t"]
+            mix = lambda mu: x + mu * (prev - x)
+            r = (mix(p["mu_r"]) @ p["wr"]).reshape(b, hh, dh)
+            k = (mix(p["mu_k"]) @ p["wk_t"]).reshape(b, hh, dh)
+            v = (mix(p["mu_v"]) @ p["wv_t"]).reshape(b, hh, dh)
+            g = jax.nn.silu(mix(p["mu_g"]) @ p["wg"])
+            xw = mix(p["mu_w"])
+            w = rwkv_lib.data_dependent_decay(
+                xw[:, None, :], p["w0"], p["wa"], p["wb"], hh)[:, 0]
+            out, state = rwkv_lib.wkv6_step(r, k, v, w, p["u"], c["state"])
+            out = L.rms_norm(out.reshape(b, -1), p["gn"])
+            h = h + ((out * g) @ p["wo"])[:, None, :]
+            new_c.update(shift_t=x.astype(c["shift_t"].dtype), state=state)
+        # ---- ffn ----
+        if slot.ffn != "none":
+            if slot.ffn == "rwkv_cmix":
+                x = L.rms_norm(h, p["norm_ffn"])[:, 0]
+                prev = c["shift_c"]
+                xs = x + p["mu_c"] * (prev - x)
+                rg = jax.nn.sigmoid(xs @ p["cm_r"])
+                val = jnp.square(jax.nn.relu(xs @ p["cm_k"])) @ p["cm_v"]
+                h = h + (rg * val)[:, None, :]
+                new_c["shift_c"] = x.astype(c["shift_c"].dtype)
+            else:
+                aux: dict = {}
+                h = h + _ffn(self.cfg, slot, p, h, aux)
+        return h, new_c

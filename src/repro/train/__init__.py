@@ -1,0 +1,8 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+from repro.train.step import (TrainState, lm_loss, make_serve_step,
+                              make_train_step, train_state_init)
+
+__all__ = [
+    "AdamWConfig", "TrainState", "adamw_init", "adamw_update", "lm_loss",
+    "make_serve_step", "make_train_step", "train_state_init",
+]

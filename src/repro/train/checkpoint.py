@@ -1,0 +1,70 @@
+"""Msgpack-based checkpointing with pytree structure preservation.
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
+encoded as nested dicts/lists. Restore optionally re-shards onto a mesh
+(sharding-aware restore for the distributed runtime).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+Pytree = Any
+
+_ARR = "__arr__"
+_SCALAR_TYPES = (int, float, bool, str, type(None))
+
+
+def _encode(node):
+    if isinstance(node, (jax.Array, np.ndarray)):
+        arr = np.asarray(node)
+        return {_ARR: True, "dtype": str(arr.dtype),
+                "shape": list(arr.shape), "data": arr.tobytes()}
+    if isinstance(node, dict):
+        return {k: _encode(v) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return {"__list__": [_encode(v) for v in node],
+                "__tuple__": isinstance(node, tuple)}
+    if isinstance(node, _SCALAR_TYPES):
+        return node
+    raise TypeError(f"cannot checkpoint {type(node)}")
+
+
+def _decode(node):
+    if isinstance(node, dict):
+        if node.get(_ARR):
+            arr = np.frombuffer(node["data"], dtype=node["dtype"])
+            return jnp.asarray(arr.reshape(node["shape"]))
+        if "__list__" in node:
+            items = [_decode(v) for v in node["__list__"]]
+            return tuple(items) if node.get("__tuple__") else items
+        return {k: _decode(v) for k, v in node.items()}
+    return node
+
+
+def save_checkpoint(path: str, tree: Pytree, step: int | None = None) -> str:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"tree": _encode(jax.device_get(tree))}
+    if step is not None:
+        payload["step"] = int(step)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+    return path
+
+
+def load_checkpoint(path: str, shardings: Pytree | None = None
+                    ) -> tuple[Pytree, int | None]:
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False, strict_map_key=False)
+    tree = _decode(payload["tree"])
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
+    return tree, payload.get("step")

@@ -1,0 +1,50 @@
+"""Training loop driver (CPU-runnable; the launcher adds mesh sharding)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+import jax
+import numpy as np
+
+from repro.models.model import ModelConfig
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optim import AdamWConfig
+from repro.train.step import TrainState, make_train_step, train_state_init
+
+
+def train_loop(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    batches: Iterable[dict],
+    num_steps: int,
+    *,
+    seed: int = 0,
+    log_every: int = 10,
+    ckpt_path: str | None = None,
+    ckpt_every: int = 200,
+    log_fn: Callable[[str], None] = print,
+    state: TrainState | None = None,
+) -> tuple[TrainState, list[dict]]:
+    if state is None:
+        state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history: list[dict] = []
+    t0 = time.perf_counter()
+    it = iter(batches)
+    for i in range(num_steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["wall_s"] = time.perf_counter() - t0
+            history.append(m)
+            log_fn(f"step {i+1:5d}  loss {m['loss']:.4f}  "
+                   f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
+                   f"({m['wall_s']:.1f}s)")
+        if ckpt_path and (i + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_path, {"params": state.params,
+                                        "opt": state.opt},
+                            step=i + 1)
+    return state, history

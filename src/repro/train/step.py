@@ -1,0 +1,118 @@
+"""Train / serve step builders shared by smoke tests, the launcher and the
+dry-run.
+
+The loss never materializes f32 logits for the full vocab: logits stay in
+``compute_dtype`` (vocab-shardable over the ``model`` axis) and the
+per-token logsumexp/gather run in f32 on the fly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model, ModelConfig
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+Pytree = Any
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["params", "opt", "step"], meta_fields=[])
+@dataclasses.dataclass
+class TrainState:
+    params: Pytree
+    opt: Pytree
+    step: jax.Array
+
+
+def train_state_init(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     key: jax.Array) -> TrainState:
+    model = Model(cfg)
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(opt_cfg, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def lm_loss(model: Model, params: Pytree, batch: dict) -> tuple[jax.Array,
+                                                                dict]:
+    """batch: tokens [B,S] (optional), embeds [B,Se,d] (optional),
+    targets [B,St], loss_mask [B,St]. Targets align with the LAST St
+    positions of the sequence (text tail for VLM, full seq for LM/audio)."""
+    logits, aux = model.forward(params, tokens=batch.get("tokens"),
+                                embeds=batch.get("embeds"))
+    targets = batch["targets"]
+    st = targets.shape[1]
+    logits = logits[:, -st:, :]
+    logits_f = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits_f, axis=-1)
+    gold = jnp.take_along_axis(logits_f, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss
+    if "load_balance_loss" in aux:
+        total = total + 0.01 * aux["load_balance_loss"] \
+            + 0.001 * aux["router_z_loss"]
+    metrics = {"ce_loss": loss, **aux}
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    grad_specs=None):
+    """Returns train_step(state, batch) → (state, metrics).
+
+    ``grad_specs`` (optional pytree of PartitionSpec) pins gradients to the
+    parameter layout right after backward: GSPMD then lowers the cross-batch
+    gradient reduction as reduce-scatter into the FSDP shards instead of a
+    full-tensor all-reduce (§Perf — the CPU pipeline lacks XLA's
+    reduce-scatter-creation pass)."""
+    model = Model(cfg)
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> tuple[TrainState, dict]:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: lm_loss(model, p, batch), has_aux=True)(state.params)
+        if grad_specs is not None:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, grad_specs)
+        params, opt, opt_metrics = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return TrainState(params=params, opt=opt, step=state.step + 1), \
+            metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, cache, tokens [B,1], pos) →
+    (logits [B,V], cache) — ONE new token against a seq_len cache."""
+    model = Model(cfg)
+
+    def serve_step(params: Pytree, cache: Pytree, tokens: jax.Array,
+                   pos: jax.Array):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig):
+    """Returns prefill(params, tokens/embeds) → logits (encoder forward or
+    prompt processing; inference, no grads)."""
+    model = Model(cfg)
+
+    def prefill(params: Pytree, batch: dict) -> jax.Array:
+        logits, _ = model.forward(params, tokens=batch.get("tokens"),
+                                  embeds=batch.get("embeds"))
+        return logits
+
+    return prefill

@@ -1,0 +1,10 @@
+"""Test configuration.
+
+x64 is enabled for the paper-faithful numerics (KRR solves); all model-zoo
+code uses explicit dtypes so this does not affect the transformer substrate.
+Do NOT set XLA_FLAGS device-count here — smoke tests must see 1 device; only
+launch/dryrun.py forces 512 placeholder devices (in its own process).
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

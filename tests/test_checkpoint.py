@@ -1,0 +1,53 @@
+"""Checkpoint round-trip tests (msgpack pytree serialization)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.train import AdamWConfig, train_state_init
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+
+def test_roundtrip_nested_pytree(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16), "d": 3, "e": "tag"},
+        "f": [jnp.zeros((1,), jnp.int32), 2.5, None],
+        "g": (jnp.full((2, 2), 7, jnp.int8),),
+    }
+    path = save_checkpoint(str(tmp_path / "ck.msgpack"), tree, step=42)
+    loaded, step = load_checkpoint(path)
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(loaded["a"]),
+                                  np.asarray(tree["a"]))
+    assert loaded["b"]["c"].dtype == jnp.bfloat16
+    assert loaded["b"]["d"] == 3 and loaded["b"]["e"] == "tag"
+    assert isinstance(loaded["f"], list) and loaded["f"][2] is None
+    assert isinstance(loaded["g"], tuple)
+    np.testing.assert_array_equal(np.asarray(loaded["g"][0]),
+                                  np.asarray(tree["g"][0]))
+
+
+def test_roundtrip_train_state(tmp_path):
+    cfg = get_arch("smollm_135m").config.reduced()
+    opt = AdamWConfig(total_steps=10)
+    state = train_state_init(cfg, opt, jax.random.PRNGKey(0))
+    path = save_checkpoint(str(tmp_path / "state.msgpack"),
+                           {"params": state.params, "opt": state.opt},
+                           step=7)
+    loaded, step = load_checkpoint(path)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(loaded["params"]),
+                    jax.tree.leaves(state.params)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            np.asarray(a, dtype=np.float32), np.asarray(b, np.float32))
+
+
+def test_atomic_overwrite(tmp_path):
+    p = str(tmp_path / "ck.msgpack")
+    save_checkpoint(p, {"x": jnp.zeros(3)}, step=1)
+    save_checkpoint(p, {"x": jnp.ones(3)}, step=2)
+    loaded, step = load_checkpoint(p)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(loaded["x"]), np.ones(3))

@@ -1,0 +1,242 @@
+"""System tests for the DeKRR-DDRF solver (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CentralizedKRR, DKLA, DKLAConfig, DeKRRConfig,
+                        DeKRRSolver, NodeData, circulant, rse, sample_rff,
+                        select_features)
+from repro.data.synthetic import (make_dataset, partition, pooled,
+                                  train_test_split_nodes)
+
+SIGMA, LAM = 1.0, 1e-6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("houses", subsample=1200, seed=0)
+    topo = circulant(6, (1, 2))
+    nodes = partition(ds, 6, mode="noniid_y")
+    train, test = train_test_split_nodes(nodes)
+    return ds, topo, train, test
+
+
+def _maps(ds, train, D, method="energy", seed=0):
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(train))
+    if method == "shared":
+        fm = sample_rff(keys[0], ds.dim, D, SIGMA)
+        return [fm] * len(train)
+    return [
+        select_features(keys[j], ds.dim, D, SIGMA, train[j].x, train[j].y,
+                        method=method, candidate_ratio=10)
+        for j in range(len(train))
+    ]
+
+
+def test_iteration_converges_to_exact_fixed_point(setup):
+    ds, topo, train, test = setup
+    fmaps = _maps(ds, train, 20)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.01 * n, num_iters=800))
+    exact = solver.solve_exact()
+    iterated = solver.solve()
+    for a, b in zip(exact.theta, iterated.theta):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_fixed_point_is_stationary_point_of_objective(setup):
+    """∇L = 0 at the solve_exact() solution (finite-difference check)."""
+    ds, topo, train, _ = setup
+    fmaps = _maps(ds, train, 12)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n))
+    theta = solver.solve_exact().theta
+    obj0 = float(solver.objective(theta))
+    rng = np.random.default_rng(0)
+    for j in [0, len(theta) // 2]:
+        for _ in range(3):
+            pert = [t for t in theta]
+            eps = jnp.asarray(rng.normal(size=theta[j].shape)) * 1e-4
+            pert[j] = theta[j] + eps
+            assert float(solver.objective(pert)) >= obj0 - 1e-12
+
+
+def test_shared_features_match_dkla_solution(setup):
+    """With identical features on all nodes, DeKRR's limit and DKLA's limit
+    both solve (approximately) the same consensus problem."""
+    ds, topo, train, test = setup
+    fmaps = _maps(ds, train, 24, method="shared")
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.5 * n))
+    st = solver.solve_exact()
+    dkla = DKLA(topo, fmaps[0], train, DKLAConfig(lam=LAM, num_iters=600))
+    th_dkla = dkla.solve()
+    ys = jnp.concatenate([t.y for t in test])
+    pred_ours = jnp.concatenate(
+        [solver.predict(st.theta, test[j].x, node=j) for j in range(len(test))])
+    pred_dkla = jnp.concatenate(
+        [dkla.predict(th_dkla, test[j].x, node=j) for j in range(len(test))])
+    assert abs(rse(pred_ours, ys) - rse(pred_dkla, ys)) < 0.05
+
+
+def test_consensus_tightens_with_penalty(setup):
+    """Larger c ⇒ smaller cross-node decision-function disagreement."""
+    ds, topo, train, _ = setup
+    fmaps = _maps(ds, train, 16)
+    n = sum(t.num_samples for t in train)
+    xs = pooled(train).x[:, :200]
+
+    def disagreement(c):
+        solver = DeKRRSolver(topo, fmaps, train,
+                             DeKRRConfig(lam=LAM, c_nei=c))
+        theta = solver.solve_exact().theta
+        preds = jnp.stack([solver.predict(theta, xs, node=j)
+                           for j in range(len(train))])
+        return float(jnp.mean(jnp.var(preds, axis=0)))
+
+    d_small, d_big = disagreement(0.001 * n), disagreement(1.0 * n)
+    assert d_big < d_small
+
+
+def test_consensus_generalizes_starved_node_beyond_local_data(setup):
+    """Consensus transfers information: the node whose local labels are
+    nearly constant (last node under the non-IID |y| split) must still
+    produce a decision function that generalizes to the *network's* test
+    distribution — a purely local fit cannot."""
+    ds, topo, train, test = setup
+    fmaps = _maps(ds, train, 24)
+    n = sum(t.num_samples for t in train)
+    j_last = len(train) - 1
+    te = pooled(test)
+
+    # local-only ridge on the starved node
+    from repro.core.rff import featurize
+    z = featurize(fmaps[j_last], train[j_last].x)
+    g = z @ z.T + LAM * z.shape[1] * jnp.eye(z.shape[0])
+    th_local = jnp.linalg.solve(g, z @ train[j_last].y)
+    rse_local = rse(th_local @ featurize(fmaps[j_last], te.x), te.y)
+
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n))
+    theta = solver.solve_exact().theta
+    rse_cons = rse(solver.predict(theta, te.x, node=j_last), te.y)
+    assert rse_cons < rse_local
+
+
+def test_variable_feature_counts_supported(setup):
+    """The paper's headline flexibility: different D_j per node."""
+    ds, topo, train, test = setup
+    keys = jax.random.split(jax.random.PRNGKey(7), len(train))
+    d_per_node = [8, 12, 16, 20, 24, 28]
+    fmaps = [
+        select_features(keys[j], ds.dim, d_per_node[j], SIGMA,
+                        train[j].x, train[j].y, method="energy",
+                        candidate_ratio=10)
+        for j in range(len(train))
+    ]
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n))
+    st = solver.solve_exact()
+    assert [t.shape[0] for t in st.theta] == d_per_node
+    ys = jnp.concatenate([t.y for t in test])
+    pred = jnp.concatenate(
+        [solver.predict(st.theta, test[j].x, node=j) for j in range(len(test))])
+    assert rse(pred, ys) < 0.9
+
+
+def test_centralized_krr_reference(setup):
+    ds, topo, train, test = setup
+    tr, te = pooled(train), pooled(test)
+    model = CentralizedKRR(SIGMA, LAM).fit(tr.x, tr.y)
+    assert rse(model.predict(te.x), te.y) < 0.3
+
+
+def test_dekrr_ddrf_beats_dkla_noniid():
+    """The paper's headline claim (Tab. 2 direction) on the stand-in data,
+    following the paper's protocol: c_nei selected from a grid, DKLA averaged
+    over feature draws. J=10 circulant(1,2) — the paper's exact topology."""
+    ds = make_dataset("houses", subsample=2000, seed=0)
+    topo = circulant(10, (1, 2))
+    train, test = train_test_split_nodes(partition(ds, 10, mode="noniid_y"))
+    n = sum(t.num_samples for t in train)
+    D = 20
+    ys = jnp.concatenate([t.y for t in test])
+    keys = jax.random.split(jax.random.PRNGKey(0), 10)
+
+    fmaps_ddrf = [
+        select_features(keys[j], ds.dim, D, SIGMA, train[j].x, train[j].y,
+                        method="energy", candidate_ratio=20)
+        for j in range(10)
+    ]
+    rse_ours = np.inf
+    for c in (0.002, 0.01, 0.05):
+        solver = DeKRRSolver(topo, fmaps_ddrf, train,
+                             DeKRRConfig(lam=LAM, c_nei=c * n))
+        st = solver.solve_exact()
+        pred = jnp.concatenate(
+            [solver.predict(st.theta, test[j].x, node=j) for j in range(10)])
+        rse_ours = min(rse_ours, rse(pred, ys))
+
+    rs = []
+    for s in range(3):
+        fm = sample_rff(jax.random.PRNGKey(50 + s), ds.dim, D, SIGMA)
+        dkla = DKLA(topo, fm, train, DKLAConfig(lam=LAM, num_iters=400))
+        th = dkla.solve()
+        pred_d = jnp.concatenate(
+            [dkla.predict(th, test[j].x, node=j) for j in range(10)])
+        rs.append(rse(pred_d, ys))
+    assert rse_ours < np.mean(rs)
+
+
+def test_chebyshev_acceleration_fewer_rounds(setup):
+    """Beyond-paper: Chebyshev semi-iteration reaches the Eq. 19 limit in
+    ≥3× fewer communication rounds (identical per-round exchange)."""
+    import jax.numpy as jnp
+
+    from repro.core.acceleration import (power_iteration_mu_max,
+                                         rounds_to_tolerance)
+    from repro.dist import pack_problem
+
+    ds, topo, train, _ = setup
+    fmaps = _maps(ds, train, 16)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n))
+    packed = pack_problem(solver)
+    exact = solver.solve_exact()
+    dmax = packed.d.shape[1]
+    theta_star = jnp.stack(
+        [jnp.pad(t, (0, dmax - t.shape[0])) for t in exact.theta])
+    plain, cheb = rounds_to_tolerance(
+        packed, theta_star, tol=1e-6, max_rounds=4000)
+    assert cheb < plain / 3, (plain, cheb)
+
+
+def test_chebyshev_reaches_same_solution(setup):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.acceleration import (chebyshev_solve_packed,
+                                         estimate_spectral_interval)
+    from repro.dist import pack_problem
+
+    ds, topo, train, _ = setup
+    fmaps = _maps(ds, train, 12)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.01 * n))
+    packed = pack_problem(solver)
+    exact = solver.solve_exact()
+    lo, hi = estimate_spectral_interval(packed)
+    theta = chebyshev_solve_packed(packed, hi, mu_min=lo, num_iters=300)
+    dmax = packed.d.shape[1]
+    theta_star = jnp.stack(
+        [jnp.pad(t, (0, dmax - t.shape[0])) for t in exact.theta])
+    np.testing.assert_allclose(np.asarray(theta), np.asarray(theta_star),
+                               rtol=1e-4, atol=1e-7)

@@ -1,0 +1,42 @@
+"""Dry-run integration smoke: one (arch × shape) pair lowers + compiles on
+the 512-placeholder-device platform, in a subprocess so the forced device
+count never leaks into this session."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen1_5_0_5b", "decode_32k"),
+    ("smollm_135m", "train_4k"),
+])
+def test_dryrun_pair_compiles(arch, shape, tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.load(open(tmp_path / f"16x16_{arch}_{shape}.json"))
+    assert out["status"] == "ok"
+    assert out["chips"] == 256
+    assert out["flops_per_device"] > 0
+    assert out["dominant"] in ("compute", "memory", "collective")
+
+
+def test_dryrun_skip_recorded(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "hubert_xlarge", "--shape", "decode_32k",
+         "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.load(open(tmp_path / "16x16_hubert_xlarge_decode_32k.json"))
+    assert out["status"] == "skip"

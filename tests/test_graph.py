@@ -1,0 +1,56 @@
+import numpy as np
+import pytest
+
+from repro.core.graph import (Topology, circulant, complete, erdos_renyi,
+                              ring, star)
+
+
+def test_circulant_paper_topology():
+    t = circulant(10, (1, 2))
+    assert t.num_nodes == 10
+    assert all(t.degree(j) == 4 for j in range(10))
+    assert t.circulant_offsets == (1, 2)
+    assert sorted(t.neighbors(0)) == [1, 2, 8, 9]
+
+
+def test_ring_and_complete():
+    assert all(ring(6).degree(j) == 2 for j in range(6))
+    assert all(complete(5).degree(j) == 4 for j in range(5))
+
+
+def test_star_degrees():
+    t = star(7)
+    assert t.degree(0) == 6
+    assert all(t.degree(j) == 1 for j in range(1, 7))
+    assert t.max_degree == 6
+
+
+def test_erdos_renyi_connected_symmetric():
+    t = erdos_renyi(12, 0.3, seed=3)
+    a = t.adjacency
+    assert np.array_equal(a, a.T)
+    assert not np.any(np.diag(a))
+
+
+def test_rejects_disconnected():
+    a = np.zeros((4, 4), dtype=bool)
+    a[0, 1] = a[1, 0] = True
+    a[2, 3] = a[3, 2] = True
+    with pytest.raises(ValueError, match="connected"):
+        Topology(adjacency=a)
+
+
+def test_rejects_asymmetric():
+    a = np.zeros((3, 3), dtype=bool)
+    a[0, 1] = True
+    with pytest.raises(ValueError, match="undirected"):
+        Topology(adjacency=a)
+
+
+def test_neighbor_table_padding():
+    t = star(5)
+    idx, mask = t.neighbor_table()
+    assert idx.shape == (5, 4) and mask.shape == (5, 4)
+    assert mask[0].all()                      # hub has 4 neighbors
+    assert mask[1].sum() == 1                 # leaves have 1
+    assert (idx[1][~mask[1]] == 1).all()      # padded with self-index

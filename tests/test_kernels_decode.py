@@ -1,0 +1,80 @@
+"""Flash-decode Pallas kernel: allclose sweeps vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.ref import chunked_decode_attention_ref
+
+CASES = [
+    # (B, H, K, dh, S, cur)
+    (2, 8, 8, 64, 256, 200),        # MHA
+    (2, 8, 2, 64, 512, 512),        # GQA 4:1, full cache
+    (1, 16, 16, 128, 1024, 37),     # qwen-ish heads, short valid prefix
+    (4, 4, 1, 80, 300, 123),        # MQA, unaligned dh & S
+    (3, 6, 3, 32, 96, 50),          # small everything
+]
+
+
+def _oracle(q, k, v, cur):
+    s = k.shape[1]
+    mask = (jnp.arange(s) < cur)[None, :]
+    mask = jnp.broadcast_to(mask, (q.shape[0], s))
+    # GQA: repeat kv heads
+    g = q.shape[2] // k.shape[2]
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    return chunked_decode_attention_ref(
+        q[:, 0], kk, vv, scale=q.shape[-1] ** -0.5, mask=mask)[:, None]
+
+
+@pytest.mark.parametrize("b,h,kh,dh,s,cur", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_flash_decode_matches_oracle(b, h, kh, dh, s, cur, dtype):
+    key = jax.random.PRNGKey(b * 1000 + s)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, 1, h, dh), dtype)
+    k = jax.random.normal(kk, (b, s, kh, dh), dtype)
+    v = jax.random.normal(kv, (b, s, kh, dh), dtype)
+    got = ops.flash_decode(q, k, v, jnp.asarray(cur, jnp.int32),
+                           interpret=True)
+    want = _oracle(q, k, v, cur)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(b=st.integers(1, 3), kh=st.integers(1, 4), g=st.integers(1, 4),
+       dh=st.sampled_from([16, 32, 64]), s=st.integers(8, 400),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_flash_decode_property(b, kh, g, dh, s, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kc = jax.random.split(key, 4)
+    h = kh * g
+    cur = int(jax.random.randint(kc, (), 1, s + 1))
+    q = jax.random.normal(kq, (b, 1, h, dh))
+    k = jax.random.normal(kk, (b, s, kh, dh))
+    v = jax.random.normal(kv, (b, s, kh, dh))
+    got = ops.flash_decode(q, k, v, jnp.asarray(cur, jnp.int32),
+                           interpret=True)
+    want = _oracle(q, k, v, cur)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_decode_ignores_stale_cache_tail():
+    """Entries beyond cur_index must not affect the output."""
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (1, 1, 4, 32))
+    k = jax.random.normal(kk, (1, 128, 4, 32))
+    v = jax.random.normal(kv, (1, 128, 4, 32))
+    cur = jnp.asarray(64, jnp.int32)
+    out1 = ops.flash_decode(q, k, v, cur, interpret=True)
+    k2 = k.at[:, 64:].set(999.0)
+    v2 = v.at[:, 64:].set(-999.0)
+    out2 = ops.flash_decode(q, k2, v2, cur, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,162 @@
+"""Unit tests for the launch layer: sharding rules, HLO analyzer, specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.launch.hlo_analysis import (HloCosts, analyze_hlo_text,
+                                       model_flops_per_step)
+from repro.launch.sharding import ShardingRules
+from repro.models.model import Model
+
+
+def _rules(multi_pod=False):
+    if multi_pod:
+        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    else:
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+    return ShardingRules(mesh)
+
+
+def test_param_specs_dense():
+    rules = _rules()
+    cfg = get_arch("granite_3_8b").config
+    params = jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0)))
+    specs = rules.params_specs(params)
+    assert specs["embed"] == P(None, "data")       # 49155 % 16 != 0 → None
+    assert specs["lm_head"] == P("data", None)
+    assert specs["slot0"]["wq"] == P(None, "data", "model")
+    assert specs["slot0"]["wo"] == P(None, "model", "data")
+    assert specs["slot0"]["w_down"] == P(None, "model", "data")
+    assert specs["slot0"]["norm_mix"] == P(None, None)
+
+
+def test_param_specs_divisibility_fallback():
+    """smollm: 9 heads · 64 = 576 flat — not divisible by 16 → replicated."""
+    rules = _rules()
+    cfg = get_arch("smollm_135m").config
+    params = jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0)))
+    specs = rules.params_specs(params)
+    assert specs["slot0"]["wq"] == P(None, "data", "model")  # 576%16==0
+    assert specs["embed"] == P("model", "data")              # 49152%16==0
+
+
+def test_param_specs_moe_expert_parallel():
+    rules = _rules()
+    cfg = get_arch("deepseek_moe_16b").config
+    params = jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0)))
+    specs = rules.params_specs(params)
+    assert specs["slot0"]["moe_gate"] == P(None, "model", "data", None)
+    assert specs["slot0"]["moe_down"] == P(None, "model", None, "data")
+
+
+def test_multi_pod_fsdp_uses_both_axes():
+    rules = _rules(multi_pod=True)
+    assert rules.dp_size == 32
+    cfg = get_arch("jamba_1_5_large_398b").config
+    params = jax.eval_shape(lambda: Model(cfg).init(jax.random.PRNGKey(0)))
+    specs = rules.params_specs(params)
+    # d_model 8192 % 32 == 0 → fsdp over (pod, data)
+    assert specs["slot1"]["in_x"] == P(None, ("pod", "data"), "model")
+
+
+def test_cache_specs_batch_vs_seq_sharding():
+    rules = _rules()
+    cfg = get_arch("granite_3_8b").config
+    model = Model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(128, 32768))
+    specs = rules.cache_specs(cache, 128)
+    # batch 128 % 16 == 0 → batch on data; kv heads 8 < 16 → the cache
+    # seq dim takes the model axis (flash-decode layout; §Perf pair 2)
+    assert specs["slot0"]["k"] == P(None, "data", "model", None, None)
+    # batch 1 → sequence-sharded (context parallelism)
+    cache1 = jax.eval_shape(lambda: model.init_cache(1, 524288))
+    specs1 = rules.cache_specs(cache1, 1)
+    assert specs1["slot0"]["k"] == P(None, None, "data", None, None)
+
+
+# ---------------------------------------------------------------- HLO parser
+SAMPLE_HLO = """
+HloModule test
+
+%region_body (p: (s32[], f32[16,128])) -> (s32[], f32[16,128]) {
+  %p = (s32[], /*index=1*/f32[16,128]{1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[16,128]{1,0} get-tuple-element(%p), index=1
+  %w = f32[128,128]{1,0} constant({...})
+  %d = f32[16,128]{1,0} dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[16,128]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %one = s32[] constant(1)
+  %next = s32[] add(%g0, %one)
+  ROOT %t = (s32[], f32[16,128]{1,0}) tuple(%next, %ar)
+}
+
+%region_cond (p2: (s32[], f32[16,128])) -> pred[] {
+  %p2 = (s32[], /*index=1*/f32[16,128]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+%sum (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (x: f32[16,128]) -> f32[16,128] {
+  %x = f32[16,128]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %init = (s32[], f32[16,128]{1,0}) tuple(%c0, %x)
+  %w8 = (s32[], f32[16,128]{1,0}) while(%init), condition=%region_cond, body=%region_body
+  ROOT %out = f32[16,128]{1,0} get-tuple-element(%w8), index=1
+}
+"""
+
+
+def test_hlo_parser_trip_count_multiplies_costs():
+    costs = analyze_hlo_text(SAMPLE_HLO)
+    assert costs.num_whiles == 1
+    assert costs.unknown_trip_counts == 0
+    # dot flops = 2·16·128·128 per iteration × 12 iterations
+    expected = 12 * 2 * 16 * 128 * 128
+    assert abs(costs.flops - expected) / expected < 0.05
+    # all-reduce bytes = 16·128·4 × 12
+    assert costs.coll_bytes["all-reduce"] == 12 * 16 * 128 * 4
+
+
+def test_hlo_parser_known_trip_count_config():
+    txt = SAMPLE_HLO.replace(
+        "body=%region_body",
+        'body=%region_body, backend_config={"known_trip_count":{"n":"7"}}')
+    costs = analyze_hlo_text(txt)
+    assert costs.coll_bytes["all-reduce"] == 7 * 16 * 128 * 4
+
+
+def test_model_flops_per_step():
+    cfg = get_arch("qwen1_5_0_5b").config
+    shape = INPUT_SHAPES["train_4k"]
+    mf = model_flops_per_step(cfg, shape, 6.2e8)
+    assert abs(mf - 6 * 6.2e8 * 256 * 4096) < 1e6
+
+
+def test_variant_config_swa_transform():
+    from repro.launch.specs import variant_config
+
+    spec = get_arch("granite_3_8b")
+    cfg = variant_config(spec, "long_500k")
+    assert all(s.mixer == "swa" for s in cfg.slots)
+    assert cfg.sliding_window == 8192
+    assert cfg.param_dtype == "bfloat16"
+    # jamba runs long-context natively — attn slots unchanged
+    jcfg = variant_config(get_arch("jamba_1_5_large_398b"), "long_500k")
+    assert jcfg.slots[0].mixer == "attn"
+
+
+def test_variant_config_rejects_skips():
+    with pytest.raises(ValueError, match="skips"):
+        variant = get_arch("hubert_xlarge")
+        from repro.launch.specs import variant_config as vc
+        vc(variant, "decode_32k")

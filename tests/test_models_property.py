@@ -1,0 +1,174 @@
+"""Property tests for the model-zoo substrates: numerical invariants that
+must hold across tiling/grouping choices (the knobs the sharding layer and
+§Perf iterations turn)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+
+
+# ---------------------------------------------------------------- attention
+@given(sq=st.integers(1, 24), skv=st.integers(1, 48),
+       chunk=st.sampled_from([4, 8, 16, 64]), seed=st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_chunk_size_invariance(sq, skv, chunk, seed):
+    """Online-softmax chunking must not change the result."""
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, h, kh, dh = 2, 4, 2, 16
+    q = jax.random.normal(kq, (b, sq, h, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, skv, kh, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, skv, kh, dh), jnp.float32)
+    qp = jnp.arange(sq, dtype=jnp.int32) + (skv - sq if skv >= sq else 0)
+    kp = jnp.arange(skv, dtype=jnp.int32)
+    ref = L.chunked_attention(q, k, v, qp, kp, causal=True,
+                              chunk_kv=max(skv, 1))
+    got = L.chunked_attention(q, k, v, qp, kp, causal=True, chunk_kv=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_sliding_window_equals_truncated_context():
+    """Window-w attention over a long context == full attention over the
+    last w keys (for the final query position)."""
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, h, dh, s, w = 1, 2, 16, 40, 8
+    q = jax.random.normal(kq, (b, 1, h, dh))
+    k = jax.random.normal(kk, (b, s, h, dh))
+    v = jax.random.normal(kv, (b, s, h, dh))
+    qp = jnp.asarray([s - 1], jnp.int32)
+    kp = jnp.arange(s, dtype=jnp.int32)
+    win = L.chunked_attention(q, k, v, qp, kp, causal=True, window=w,
+                              chunk_kv=16)
+    trunc = L.chunked_attention(q, k[:, s - w:], v[:, s - w:], qp,
+                                kp[s - w:], causal=True, chunk_kv=16)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(trunc),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- MoE
+@pytest.mark.parametrize("groups", [1, 2, 4])
+def test_moe_groups_equivalence_without_drops(groups):
+    """Grouped dispatch (the data-sharded layout) must equal single-group
+    dispatch when capacity never binds — drops are the only legitimate
+    difference."""
+    key = jax.random.PRNGKey(0)
+    t, d, e, f, k = 32, 16, 4, 24, 2
+    dims = moe_lib.MoEDims(num_experts=e, experts_per_token=k, d_model=d,
+                           d_ff=f, capacity_factor=16.0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (t, d))
+    router = jax.random.normal(ks[1], (d, e)) * 0.5
+    wg = jax.random.normal(ks[2], (e, d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[3], (e, d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[4], (e, f, d)) / np.sqrt(f)
+    out1, aux1 = moe_lib.moe_forward(x, router, wg, wu, wd, dims, groups=1)
+    outg, auxg = moe_lib.moe_forward(x, router, wg, wu, wd, dims,
+                                     groups=groups)
+    np.testing.assert_allclose(np.asarray(outg), np.asarray(out1),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(auxg["load_balance_loss"]),
+                               float(aux1["load_balance_loss"]), rtol=1e-6)
+
+
+def test_moe_capacity_drops_reduce_output_norm():
+    """With a tiny capacity factor, some tokens must be dropped (their
+    routed contribution is zero) — output norm strictly below no-drop."""
+    key = jax.random.PRNGKey(1)
+    t, d, e, f, k = 64, 8, 4, 16, 2
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (t, d))
+    router = jax.random.normal(ks[1], (d, e)) * 2.0   # concentrated routing
+    wg = jax.random.normal(ks[2], (e, d, f)) / np.sqrt(d)
+    wu = jax.random.normal(ks[3], (e, d, f)) / np.sqrt(d)
+    wd = jax.random.normal(ks[4], (e, f, d)) / np.sqrt(f)
+    big = moe_lib.MoEDims(e, k, d, f, capacity_factor=16.0)
+    small = dataclasses.replace(big, capacity_factor=0.25)
+    out_big, _ = moe_lib.moe_forward(x, router, wg, wu, wd, big)
+    out_small, _ = moe_lib.moe_forward(x, router, wg, wu, wd, small)
+    assert float(jnp.linalg.norm(out_small)) < \
+        float(jnp.linalg.norm(out_big))
+
+
+# ------------------------------------------------------------------ scans
+@given(s=st.integers(1, 70), chunk=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_wkv6_chunk_invariance_and_step_consistency(s, chunk, seed):
+    """Chunked WKV6 == per-step recurrence, for any chunk size; the final
+    scan state equals sequential wkv6_step application."""
+    key = jax.random.PRNGKey(seed)
+    b, h, dh = 2, 2, 8
+    kr, kk, kv, kw = jax.random.split(key, 4)
+    r = jax.random.normal(kr, (b, s, h, dh))
+    k = jax.random.normal(kk, (b, s, h, dh))
+    v = jax.random.normal(kv, (b, s, h, dh))
+    w = jax.nn.sigmoid(jax.random.normal(kw, (b, s, h, dh))) * 0.9 + 0.05
+    u = jnp.zeros((h, dh)) + 0.1
+    st0 = jnp.zeros((b, h, dh, dh))
+    out_c, state_c = rwkv_lib.wkv6_chunk_scan(r, k, v, w, u, st0,
+                                              chunk=chunk)
+    state = st0
+    outs = []
+    for t in range(s):
+        o, state = rwkv_lib.wkv6_step(r[:, t], k[:, t], v[:, t], w[:, t],
+                                      u, state)
+        outs.append(o)
+    out_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_seq),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state_c), np.asarray(state),
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(s=st.integers(1, 60), chunk=st.sampled_from([4, 16]),
+       seed=st.integers(0, 999))
+@settings(max_examples=15, deadline=None)
+def test_ssm_chunk_invariance_and_step_consistency(s, chunk, seed):
+    key = jax.random.PRNGKey(seed)
+    b, di, n = 2, 6, 4
+    kx, kd, kb, kc, ka = jax.random.split(key, 5)
+    x = jax.random.normal(kx, (b, s, di))
+    delta = jax.nn.softplus(jax.random.normal(kd, (b, s, di)))
+    b_t = jax.random.normal(kb, (b, s, n))
+    c_t = jax.random.normal(kc, (b, s, n))
+    a_log = jax.random.normal(ka, (di, n)) * 0.3
+    d_skip = jnp.ones((di,)) * 0.5
+    st0 = jnp.zeros((b, di, n))
+    y_c, state_c = ssm_lib.ssm_chunk_scan(x, delta, a_log, b_t, c_t,
+                                          d_skip, st0, chunk=chunk)
+    state = st0
+    ys = []
+    for t in range(s):
+        y, state = ssm_lib.ssm_step(x[:, t], delta[:, t], a_log, b_t[:, t],
+                                    c_t[:, t], d_skip, state)
+        ys.append(y)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state_c), np.asarray(state),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_data_dependent_decay_in_unit_interval():
+    key = jax.random.PRNGKey(0)
+    b, s, d, r, h = 2, 10, 16, 4, 2
+    x = jax.random.normal(key, (b, s, d)) * 3
+    w0 = jnp.full((d,), -0.6)
+    wa = jax.random.normal(jax.random.PRNGKey(1), (d, r))
+    wb = jax.random.normal(jax.random.PRNGKey(2), (r, d))
+    w = rwkv_lib.data_dependent_decay(x, w0, wa, wb, h)
+    assert float(w.min()) > 0.0 and float(w.max()) < 1.0
+    # decay must actually depend on the data (Finch's headline feature)
+    x2 = x.at[:, 0].set(-x[:, 0])
+    w2 = rwkv_lib.data_dependent_decay(x2, w0, wa, wb, h)
+    assert float(jnp.max(jnp.abs(w[:, 0] - w2[:, 0]))) > 1e-6
