@@ -12,6 +12,12 @@ from __future__ import annotations
 import time
 
 import jax
+
+# Paper-faithful numerics, same as tests/conftest.py: the exact KRR solves
+# and round-count benchmarks are meaningless at float32 (tol=1e-6 targets
+# sit below the f32 noise floor of solve_exact vs the iteration limit).
+jax.config.update("jax_enable_x64", True)
+
 import jax.numpy as jnp
 import numpy as np
 

@@ -17,8 +17,10 @@ Iteration (communicates only θ, Alg. 1 lines 9–14):
   θ_j^{k+1} = G_j ( d_j + S_j θ_j^k + Σ_{p∈N_j} P_{j,p} θ_p^k )      (Eq. 19)
 
 This module is the *reference* (ragged, per-node loop) implementation; the
-SPMD nodes-on-devices runtime lives in repro/dist/dekrr_spmd.py and is pinned
-to this one by parity tests.
+packed/batched and SPMD nodes-on-devices runtimes live in
+repro/dist/dekrr_spmd.py (`pack_problem` / `step_batched` /
+`make_spmd_solver`) and are pinned to this one by the parity tests in
+tests/test_dekrr_spmd.py.
 """
 from __future__ import annotations
 
@@ -188,8 +190,6 @@ class DeKRRSolver:
         θ^{k+1} = M θ^k + b is the Eq. 19 iteration. Requires assembling the
         global system (fusion-center only) — used for tests/benches as the
         limit point of Algorithm 1, never in the decentralized runtime."""
-        import numpy as np
-
         dims = [fm.num_features for fm in self.feature_maps]
         off = np.concatenate([[0], np.cumsum(dims)])
         dt = int(off[-1])
@@ -209,8 +209,6 @@ class DeKRRSolver:
 
     def spectral_radius(self) -> float:
         """ρ(M) of the iteration matrix — convergence rate diagnostic."""
-        import numpy as np
-
         dims = [fm.num_features for fm in self.feature_maps]
         off = np.concatenate([[0], np.cumsum(dims)])
         dt = int(off[-1])
@@ -270,6 +268,9 @@ def prop1_required_c_self(solver: DeKRRSolver) -> np.ndarray:
             acc = acc + ct_p * solver._gram(j, p)
         lam_max = jnp.linalg.eigvalsh(acc)[-1]
         lam_min = jnp.linalg.eigvalsh(gram_jj)[0]
-        ct_req = deg * ct_nei / 2.0 + lam_max / (2.0 * jnp.maximum(lam_min, 1e-300))
+        # dtype-aware floor: a 1e-300 literal flushes to 0.0 in float32,
+        # turning a degenerate λ_min into inf/NaN instead of a huge bound
+        tiny = jnp.finfo(lam_min.dtype).tiny
+        ct_req = deg * ct_nei / 2.0 + lam_max / (2.0 * jnp.maximum(lam_min, tiny))
         req[j] = float(ct_req) * n * (deg + 1)   # un-normalize c̃ → c
     return req

@@ -3,8 +3,9 @@
 The paper (§IV) uses a connected undirected graph with J=10 nodes, each with
 4 neighbors — i.e. the circulant graph C_10(1, 2). Circulant graphs are the
 TPU-native case: one-hop exchange maps onto ``lax.ppermute`` ring shifts of
-offsets ±1, ±2 (see repro/dist/dekrr_spmd.py). Arbitrary connected graphs are
-supported through the adjacency structure + masked all-gather fallback.
+offsets ±1, ±2 (``repro.dist.make_spmd_solver(mode="ppermute")``). Arbitrary
+connected graphs are supported through ``neighbor_table()`` + the masked
+all-gather fallback (``mode="allgather"``).
 """
 from __future__ import annotations
 

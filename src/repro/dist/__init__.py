@@ -1,0 +1,21 @@
+"""Distributed runtimes for the paper's solvers.
+
+`repro.core` holds the ragged, auditably paper-faithful reference
+implementations; this package holds their production counterparts — packed
+batched execution and SPMD nodes-on-devices execution — pinned to the
+reference by parity tests. See `repro.dist.dekrr_spmd` for the design.
+"""
+from repro.dist.dekrr_spmd import (PackedProblem, comm_bytes_per_round,
+                                   make_spmd_solver, pack_problem, pack_theta,
+                                   solve_batched, step_batched, unpack_theta)
+
+__all__ = [
+    "PackedProblem",
+    "comm_bytes_per_round",
+    "make_spmd_solver",
+    "pack_problem",
+    "pack_theta",
+    "solve_batched",
+    "step_batched",
+    "unpack_theta",
+]

@@ -1,6 +1,9 @@
 import os
 os.environ["XLA_FLAGS"] = os.environ.get(
     "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# The dry run compiles against placeholder *host* devices by construction;
+# never let a TPU-enabled jaxlib spend minutes probing for real hardware.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 """Multi-pod dry-run: lower + compile every (architecture × input shape) on
 the production meshes, record memory/cost/collective analysis.
@@ -29,10 +32,13 @@ from repro.models.model import active_param_count, analytic_param_count
 
 
 def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh_grid: tuple[int, int] = (16, 16),
              out_dir: str | None = None, verbose: bool = True) -> dict:
     spec = get_arch(arch)
     plan = spec.shape_plan(shape_name)
-    mesh_name = "2x16x16" if multi_pod else "16x16"
+    data_ax, model_ax = mesh_grid
+    mesh_name = (f"2x{data_ax}x{model_ax}" if multi_pod
+                 else f"{data_ax}x{model_ax}")
     result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "plan": plan}
     if plan == "skip":
@@ -41,7 +47,8 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         return result
 
     t0 = time.perf_counter()
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod, data=data_ax,
+                                model=model_ax)
     rules = ShardingRules(mesh)
     shape = INPUT_SHAPES[shape_name]
 
@@ -120,8 +127,23 @@ def main():
                     choices=list(INPUT_SHAPES) + [None])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default="16x16",
+                    help="data x model grid, e.g. 16x16 (production) or 4x4 "
+                         "(smoke; pair with DRYRUN_XLA_FLAGS device count)")
     ap.add_argument("--out", default="experiments/dryrun")
     args = ap.parse_args()
+    try:
+        mesh_grid = tuple(int(v) for v in args.mesh.split("x"))
+    except ValueError:
+        mesh_grid = ()
+    if len(mesh_grid) != 2:
+        ap.error(f"--mesh must be DxM (e.g. 4x4), got {args.mesh!r}")
+    if "DRYRUN_XLA_FLAGS" not in os.environ:
+        # keep the placeholder platform in lockstep with --mesh; this runs
+        # before any jax device query, so the module-top default is replaced
+        need = (2 if args.multi_pod else 1) * mesh_grid[0] * mesh_grid[1]
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={need}")
 
     pairs: list[tuple[str, str]] = []
     if args.all:
@@ -134,7 +156,8 @@ def main():
     failures = []
     for arch, shape in pairs:
         try:
-            run_pair(arch, shape, multi_pod=args.multi_pod, out_dir=args.out)
+            run_pair(arch, shape, multi_pod=args.multi_pod,
+                     mesh_grid=mesh_grid, out_dir=args.out)
         except Exception as e:  # noqa: BLE001 — report every pair
             failures.append((arch, shape, repr(e)))
             print(f"FAILED {arch} × {shape}: {e}")

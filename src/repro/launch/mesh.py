@@ -13,10 +13,24 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False,
+                         data: int = 16, model: int = 16):
+    """(data, model) default to the production 16×16 pod; smoke tests pass a
+    smaller grid (e.g. 4×4) to exercise the identical SPMD pipeline cheaply."""
+    shape = (2, data, model) if multi_pod else (data, model)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_abstract_mesh(shape, axes):
+    """Device-free AbstractMesh across jax versions: 0.4.x takes a tuple of
+    (name, size) pairs, newer jax takes (axis_sizes, axis_names)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_cpu_mesh(num_devices: int | None = None, axis: str = "nodes"):

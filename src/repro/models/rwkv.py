@@ -87,7 +87,12 @@ def data_dependent_decay(x: jax.Array, w0: jax.Array, w_a: jax.Array,
     b, s, d = x.shape
     lora = jnp.tanh(x @ w_a) @ w_b                      # [B, S, d]
     log_w = w0[None, None, :] + lora
-    w = jnp.exp(-jnp.exp(log_w.astype(jnp.float32)))
+    # clamp the decay rate on both ends so w = exp(−rate) stays in the open
+    # interval (0, 1) in the f32 compute dtype: rate ≥ 1e-6 keeps w < 1 when
+    # exp(log_w) underflows to 0, rate ≤ 80 keeps w > 0 when it overflows
+    # (casting to a lower-precision x.dtype may still round the endpoints)
+    rate = jnp.clip(jnp.exp(log_w.astype(jnp.float32)), 1e-6, 80.0)
+    w = jnp.exp(-rate)
     return w.reshape(b, s, num_heads, d // num_heads).astype(x.dtype)
 
 

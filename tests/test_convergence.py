@@ -3,21 +3,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
+from conftest import cached_fmaps, cached_split
 
-from repro.core import (DeKRRConfig, DeKRRSolver, NodeData, circulant,
-                        prop1_required_c_self, sample_rff, select_features)
-from repro.data.synthetic import make_dataset, partition, train_test_split_nodes
+from repro.core import (DeKRRConfig, DeKRRSolver, circulant,
+                        prop1_required_c_self)
 
 
-def _small_problem(J=5, D=10, n_sub=600, seed=0, method="energy"):
-    ds = make_dataset("air_quality", subsample=n_sub, seed=seed)
+def _small_problem(J=5, D=10, n_sub=400, seed=0, method="energy"):
     topo = circulant(J, (1, 2))
-    train, _ = train_test_split_nodes(partition(ds, J, mode="noniid_y"))
-    keys = jax.random.split(jax.random.PRNGKey(seed), J)
-    fmaps = [select_features(keys[j], ds.dim, D, 1.0, train[j].x,
-                             train[j].y, method=method, candidate_ratio=10)
-             for j in range(J)]
+    _, train, _ = cached_split("air_quality", J, subsample=n_sub, seed=seed)
+    fmaps = cached_fmaps("air_quality", J, (D,) * J, method=method,
+                         candidate_ratio=10, subsample=n_sub, seed=seed)
     return topo, fmaps, train
 
 

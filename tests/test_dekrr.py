@@ -4,34 +4,34 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import cached_fmaps, cached_split
 from repro.core import (CentralizedKRR, DKLA, DKLAConfig, DeKRRConfig,
-                        DeKRRSolver, NodeData, circulant, rse, sample_rff,
+                        DeKRRSolver, circulant, rse, sample_rff,
                         select_features)
-from repro.data.synthetic import (make_dataset, partition, pooled,
-                                  train_test_split_nodes)
+from repro.data.synthetic import pooled
 
 SIGMA, LAM = 1.0, 1e-6
+# the module-wide problem every `setup`-based test shares
+DS_NAME, J, SUB = "houses", 6, 1200
 
 
 @pytest.fixture(scope="module")
 def setup():
-    ds = make_dataset("houses", subsample=1200, seed=0)
-    topo = circulant(6, (1, 2))
-    nodes = partition(ds, 6, mode="noniid_y")
-    train, test = train_test_split_nodes(nodes)
+    ds, train, test = cached_split(DS_NAME, J, subsample=SUB, seed=0)
+    topo = circulant(J, (1, 2))
     return ds, topo, train, test
 
 
 def _maps(ds, train, D, method="energy", seed=0):
+    """Feature maps for the shared `setup` split (cached per (D, method))."""
     keys = jax.random.split(jax.random.PRNGKey(seed), len(train))
     if method == "shared":
         fm = sample_rff(keys[0], ds.dim, D, SIGMA)
         return [fm] * len(train)
-    return [
-        select_features(keys[j], ds.dim, D, SIGMA, train[j].x, train[j].y,
-                        method=method, candidate_ratio=10)
-        for j in range(len(train))
-    ]
+    assert len(train) == J, "_maps is tied to the module's cached split"
+    return cached_fmaps(DS_NAME, J, (D,) * J, sigma=SIGMA, method=method,
+                        candidate_ratio=10, subsample=SUB, seed=seed,
+                        split_seed=0)
 
 
 def test_iteration_converges_to_exact_fixed_point(setup):
@@ -161,19 +161,15 @@ def test_dekrr_ddrf_beats_dkla_noniid():
     """The paper's headline claim (Tab. 2 direction) on the stand-in data,
     following the paper's protocol: c_nei selected from a grid, DKLA averaged
     over feature draws. J=10 circulant(1,2) — the paper's exact topology."""
-    ds = make_dataset("houses", subsample=2000, seed=0)
+    ds, train, test = cached_split("houses", 10, subsample=2000, seed=0)
     topo = circulant(10, (1, 2))
-    train, test = train_test_split_nodes(partition(ds, 10, mode="noniid_y"))
     n = sum(t.num_samples for t in train)
     D = 20
     ys = jnp.concatenate([t.y for t in test])
-    keys = jax.random.split(jax.random.PRNGKey(0), 10)
 
-    fmaps_ddrf = [
-        select_features(keys[j], ds.dim, D, SIGMA, train[j].x, train[j].y,
-                        method="energy", candidate_ratio=20)
-        for j in range(10)
-    ]
+    fmaps_ddrf = cached_fmaps("houses", 10, (D,) * 10, sigma=SIGMA,
+                              method="energy", candidate_ratio=20,
+                              subsample=2000, seed=0)
     rse_ours = np.inf
     for c in (0.002, 0.01, 0.05):
         solver = DeKRRSolver(topo, fmaps_ddrf, train,

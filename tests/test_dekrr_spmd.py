@@ -3,28 +3,22 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (DeKRRConfig, DeKRRSolver, circulant, erdos_renyi,
-                        select_features, star)
-from repro.data.synthetic import make_dataset, partition, train_test_split_nodes
+from conftest import REPO_ROOT, cached_fmaps, cached_split, subprocess_env
+from repro.core import DeKRRConfig, DeKRRSolver, circulant, erdos_renyi, star
 from repro.dist import (comm_bytes_per_round, pack_problem, solve_batched,
                         step_batched)
 
 
-def _problem(topo, D_per_node, sub=800, seed=0):
-    ds = make_dataset("air_quality", subsample=sub, seed=seed)
+def _problem(topo, D_per_node, sub=400, seed=0):
+    """Parity is exact algebra, so a small cached subsample loses nothing."""
     j = topo.num_nodes
-    train, _ = train_test_split_nodes(partition(ds, j, mode="noniid_y"))
-    keys = jax.random.split(jax.random.PRNGKey(seed), j)
-    fmaps = [
-        select_features(keys[i], ds.dim, D_per_node[i], 1.0, train[i].x,
-                        train[i].y, method="energy", candidate_ratio=5)
-        for i in range(j)
-    ]
+    ds, train, _ = cached_split("air_quality", j, subsample=sub, seed=seed)
+    fmaps = cached_fmaps("air_quality", j, tuple(D_per_node),
+                         subsample=sub, seed=seed)
     n = sum(t.num_samples for t in train)
     return DeKRRSolver(topo, fmaps, train,
                        DeKRRConfig(lam=1e-6, c_nei=0.02 * n))
@@ -97,7 +91,7 @@ SPMD_SCRIPT = textwrap.dedent("""
     from repro.dist import make_spmd_solver, pack_problem, solve_batched
 
     J = {J}
-    ds = make_dataset("air_quality", subsample=600, seed=0)
+    ds = make_dataset("air_quality", subsample=400, seed=0)
     topo = circulant(J, (1, 2))
     train, _ = train_test_split_nodes(partition(ds, J, mode="noniid_y"))
     keys = jax.random.split(jax.random.PRNGKey(0), J)
@@ -127,9 +121,8 @@ def test_spmd_parity_on_10_devices(num_nodes):
     proc = subprocess.run(
         [sys.executable, "-c", SPMD_SCRIPT.format(J=num_nodes)],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
-        cwd="/root/repo",
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "SPMD-PARITY-OK" in proc.stdout

@@ -1,11 +1,21 @@
-"""Dry-run integration smoke: one (arch × shape) pair lowers + compiles on
-the 512-placeholder-device platform, in a subprocess so the forced device
-count never leaks into this session."""
+"""Dry-run integration smoke: one (arch × shape) pair lowers + compiles on a
+forced-placeholder-device platform, in a subprocess so the forced device
+count never leaks into this session.
+
+The smoke runs the production pipeline (sharding rules → lower → compile →
+HLO/memory analysis) on a 4×4 mesh over 16 placeholder devices: identical
+code path to the 16×16 deployment mesh at a small fraction of the XLA SPMD
+partitioning cost (the 256-chip compile takes 10+ minutes on CPU).
+"""
 import json
 import subprocess
 import sys
 
 import pytest
+from conftest import REPO_ROOT, subprocess_env
+
+SMOKE_ENV = subprocess_env(
+    DRYRUN_XLA_FLAGS="--xla_force_host_platform_device_count=16")
 
 
 @pytest.mark.parametrize("arch,shape", [
@@ -15,15 +25,15 @@ import pytest
 def test_dryrun_pair_compiles(arch, shape, tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
-         "--arch", arch, "--shape", shape, "--out", str(tmp_path)],
+         "--arch", arch, "--shape", shape, "--mesh", "4x4",
+         "--out", str(tmp_path)],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=SMOKE_ENV, cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
-    out = json.load(open(tmp_path / f"16x16_{arch}_{shape}.json"))
+    out = json.load(open(tmp_path / f"4x4_{arch}_{shape}.json"))
     assert out["status"] == "ok"
-    assert out["chips"] == 256
+    assert out["chips"] == 16
     assert out["flops_per_device"] > 0
     assert out["dominant"] in ("compute", "memory", "collective")
 
@@ -32,11 +42,10 @@ def test_dryrun_skip_recorded(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-m", "repro.launch.dryrun",
          "--arch", "hubert_xlarge", "--shape", "decode_32k",
-         "--out", str(tmp_path)],
+         "--mesh", "4x4", "--out", str(tmp_path)],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=SMOKE_ENV, cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
-    out = json.load(open(tmp_path / "16x16_hubert_xlarge_decode_32k.json"))
+    out = json.load(open(tmp_path / "4x4_hubert_xlarge_decode_32k.json"))
     assert out["status"] == "skip"

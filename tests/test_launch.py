@@ -3,20 +3,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_arch
 from repro.launch.hlo_analysis import (HloCosts, analyze_hlo_text,
                                        model_flops_per_step)
+from repro.launch.mesh import make_abstract_mesh
 from repro.launch.sharding import ShardingRules
 from repro.models.model import Model
 
 
 def _rules(multi_pod=False):
     if multi_pod:
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
     else:
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = make_abstract_mesh((16, 16), ("data", "model"))
     return ShardingRules(mesh)
 
 

@@ -2,7 +2,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.ddrf import (energy_scores, leverage_scores, select_features)
 from repro.core.rff import (featurize, gaussian_kernel, sample_rff)
