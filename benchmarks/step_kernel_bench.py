@@ -1,0 +1,133 @@
+"""Fused Pallas round kernel vs XLA-vmap round: per-round latency across
+packed-problem scales, emitting ``BENCH_step.json`` for the perf trajectory.
+
+Grid: J ∈ {16, 64, 256} nodes × D_max ∈ {128, 512}, K = 4 circulant slots
+(the paper's C_J(1, 2) degree), f32. On CPU the Pallas kernel executes in
+interpret mode — per-block Python evaluation, bit-accurate but meaningless
+for timing — so wall time is measured on the XLA-vmap path (the current
+production round) and the fused kernel is reported twice: interpret-mode
+wall (labelled as such) and the analytic TPU roofline (HBM-bound streaming
+of the [J, D, D] blocks at `repro.launch.mesh.HBM_BANDWIDTH`, the same
+model as `kernel_bench.py`). On a TPU backend both paths are timed for
+real and `pallas_us` is the compiled kernel.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.dist import PackedProblem, step_batched
+from repro.dist.dekrr_spmd import _circulant_slot_table
+from repro.launch.mesh import HBM_BANDWIDTH, PEAK_FLOPS_BF16
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_step.json")
+
+CASES = [
+    # (J, D_max) at K = 4 — paper topology degree; D spans Tab. 2's D̄ and
+    # the packed production target.
+    (16, 128), (16, 512),
+    (64, 128), (64, 512),
+    (256, 128), (256, 512),
+]
+OFFSETS = (1, 2)
+
+
+def _synthetic_packed(j_nodes: int, d_max: int,
+                      dtype=jnp.float32) -> PackedProblem:
+    """A random packed problem with the circulant C_J(1,2) slot layout
+    (contraction spectra do not matter for latency, only shapes)."""
+    key = jax.random.PRNGKey(j_nodes * 7919 + d_max)
+    kg, kd, ks, kp = jax.random.split(key, 4)
+    k_slots = 2 * len(OFFSETS)
+    scale = 1.0 / d_max                      # keep iterates bounded
+    nbr_idx = _circulant_slot_table(OFFSETS, j_nodes)
+    return PackedProblem(
+        g=jax.random.normal(kg, (j_nodes, d_max, d_max), dtype) * scale,
+        d=jax.random.normal(kd, (j_nodes, d_max), dtype),
+        s=jax.random.normal(ks, (j_nodes, d_max, d_max), dtype) * scale,
+        p=jax.random.normal(
+            kp, (j_nodes, k_slots, d_max, d_max), dtype) * scale,
+        theta_mask=jnp.ones((j_nodes, d_max), dtype),
+        nbr_idx=jnp.asarray(nbr_idx),
+        nbr_mask=jnp.ones((j_nodes, k_slots), dtype),
+        offsets=OFFSETS,
+        node_dims=tuple([d_max] * j_nodes),
+    )
+
+
+def _time_step(packed, theta, backend: str, reps: int) -> float:
+    step_batched(packed, theta, backend=backend).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        step_batched(packed, theta, backend=backend).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def analytic(j_nodes: int, d_max: int, k_slots: int = 4,
+             dtype_bytes: int = 4):
+    """Fused-kernel roofline: one HBM pass over the blocks, θ VMEM-resident."""
+    flops = j_nodes * 2 * (2 + k_slots) * d_max * d_max
+    hbm = (j_nodes * (2 + k_slots) * d_max * d_max       # G, S, P blocks
+           + j_nodes * d_max * 3) * dtype_bytes          # d, θ in, θ out
+    vmem = (j_nodes * d_max                              # θ table
+            + (2 + k_slots) * d_max * d_max              # one node's blocks
+            + 3 * d_max) * dtype_bytes
+    t_roof = max(flops / PEAK_FLOPS_BF16, hbm / HBM_BANDWIDTH)
+    return flops, hbm, vmem, t_roof
+
+
+def run(fast: bool = False) -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    cases = [(j, d) for j, d in CASES if j <= 64 and d <= 128] if fast \
+        else CASES
+    results = []
+    for j_nodes, d_max in cases:
+        packed = _synthetic_packed(j_nodes, d_max)
+        theta = jnp.zeros_like(packed.d)
+        xla_reps = 20 if d_max <= 128 else 5
+        xla_us = _time_step(packed, theta, "xla", xla_reps)
+        pallas_us = _time_step(packed, theta, "pallas", 1)
+
+        k_slots = packed.num_slots
+        flops, hbm, vmem, t_roof = analytic(j_nodes, d_max, k_slots)
+        row = {
+            "j_nodes": j_nodes, "d_max": d_max, "k_slots": k_slots,
+            "dtype": "float32",
+            "xla_us": round(xla_us, 1),
+            "pallas_us": round(pallas_us, 1),
+            "pallas_timing_is_interpret_mode": not on_tpu,
+            "flops": flops, "hbm_bytes": hbm, "vmem_bytes": vmem,
+            "tpu_roofline_us": round(t_roof * 1e6, 2),
+            "fits_vmem": bool(vmem < 16 * 2**20),
+        }
+        results.append(row)
+        C.csv_row(
+            f"step/J{j_nodes}_D{d_max}", xla_us,
+            f"pallas_us={row['pallas_us']};interp={not on_tpu};"
+            f"tpu_roofline_us={row['tpu_roofline_us']};"
+            f"vmem={vmem/2**20:.2f}MiB;fits_vmem={row['fits_vmem']}")
+        del packed, theta
+
+    payload = {
+        "benchmark": "dekrr_step fused Pallas round vs XLA-vmap round",
+        "backend": jax.default_backend(),
+        "note": ("pallas_us is interpret-mode (Python per grid step) wall "
+                 "time on non-TPU backends — compare trajectories on "
+                 "xla_us and tpu_roofline_us there"),
+        "cases": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"step/json,0.0,wrote={os.path.relpath(OUT_PATH, REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

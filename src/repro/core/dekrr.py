@@ -87,6 +87,7 @@ class DeKRRSolver:
         *,
         c_nei_per_node: Sequence[float] | None = None,
         gram_fn: Callable[[FeatureMap, jax.Array], jax.Array] | None = None,
+        build_aux: bool = True,
     ):
         if len(feature_maps) != topology.num_nodes:
             raise ValueError("one feature map per node required")
@@ -105,7 +106,30 @@ class DeKRRSolver:
         )
         self.c_self = [config.c_self_ratio * c for c in self.c_nei]
         self._gram_fn = gram_fn
-        self.aux = self._build_aux()
+        # build_aux=False defers the O(J·|N_j|) ragged per-node reference
+        # build — callers heading straight to the batched packed runtime
+        # (repro.dist.pack_problem, which recomputes Eq. 17 vmapped over
+        # nodes) never pay for it. `solver.aux` still works lazily.
+        self._aux: AuxMatrices | None = self._build_aux() if build_aux \
+            else None
+
+    @property
+    def aux(self) -> AuxMatrices:
+        """Ragged Eq. 17 auxiliaries, built lazily when deferred."""
+        if self._aux is None:
+            self._aux = self._build_aux()
+        return self._aux
+
+    def coupling_coefficients(self) -> tuple[np.ndarray, np.ndarray]:
+        """Normalized (c̃_self [J], c̃_nei [J]) — c̃ = c / (N |N̂_j|).
+
+        The coefficient arrays of Eq. 17 in batch layout; consumed by the
+        batched `repro.dist.pack_problem` aux build.
+        """
+        hood = self.topology.degrees.astype(np.float64) + 1.0
+        ct_self = np.asarray(self.c_self, np.float64) / (self.N * hood)
+        ct_nei = np.asarray(self.c_nei, np.float64) / (self.N * hood)
+        return ct_self, ct_nei
 
     # -- pre-iteration communication + auxiliary construction ---------------
     def cross_features(self, i: int, j: int) -> jax.Array:

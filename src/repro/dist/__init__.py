@@ -2,8 +2,12 @@
 
 `repro.core` holds the ragged, auditably paper-faithful reference
 implementations; this package holds their production counterparts — packed
-batched execution and SPMD nodes-on-devices execution — pinned to the
-reference by parity tests. See `repro.dist.dekrr_spmd` for the design.
+batched execution (with a ``backend="xla" | "pallas"`` switch between the
+vmapped-GEMM round and the fused `repro.kernels.dekrr_step` kernel) and
+SPMD nodes-on-devices execution — pinned to the reference by parity tests.
+`pack_problem` builds the Eq. 17 auxiliaries batched (one vmapped program
+over the padded [J, D_max, …] layout). See `repro.dist.dekrr_spmd` for the
+design and memory layout.
 """
 from repro.dist.dekrr_spmd import (PackedProblem, comm_bytes_per_round,
                                    make_spmd_solver, pack_problem, pack_theta,

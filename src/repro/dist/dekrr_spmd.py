@@ -22,11 +22,34 @@ three layers that are pinned to the reference by parity tests
    θ_j^{k+1} = G_j(…) has exact 0.0 in every padded coordinate. No masking
    is needed inside the iteration — the algebra is closed over the padding.
 
+   The default `method="batched"` *computes* the Eq. 17 auxiliaries itself,
+   directly in the padded [J, D_max, …] layout: one vmapped program
+   (featurize → Gram blocks → coupling products → batched inverse) over
+   numpy-staged padded inputs, traced once per problem shape regardless of
+   J. The Z Zᵀ Gram blocks can optionally be routed through the fused Pallas
+   streaming kernel (`repro.kernels.rff_gram`, ``gram_backend="pallas"``,
+   the TPU default). `method="aux"` is the legacy path that copies the
+   solver's ragged reference auxiliaries (a per-node Python loop) — kept
+   for gram_fn-customized solvers and as the reference the batched build is
+   regression-tested against.
+
 2. **Batched single-host execution** (`step_batched` / `solve_batched`):
-   the Eq. 19 round as one `vmap` over the node axis, and the full solve as
-   one `lax.scan` over rounds. This is the form XLA fuses into a handful of
-   batched GEMMs; it is also the form every beyond-paper acceleration
-   (Chebyshev semi-iteration in `repro.core.acceleration`) builds on.
+   the Eq. 19 round over all nodes at once, and the full solve as one
+   `lax.scan` over rounds. Two backends run the identical round:
+
+     * ``backend="xla"``  — one `vmap` of `_node_step` over the node axis;
+       XLA fuses it into a handful of batched GEMMs (gather of the [J, K,
+       D_max] neighbor-θ tensor materialized between them).
+     * ``backend="pallas"`` — the fused round kernel
+       (`repro.kernels.dekrr_step`): grid over nodes, per step the [D_max,
+       D_max] G/S/P blocks stream HBM→VMEM while the θ table stays
+       VMEM-resident; the neighbor gather runs inside the kernel via the
+       scalar-prefetched slot table. Interpret-mode on CPU, compiled on
+       TPU; pinned to the XLA path and the ragged reference at rtol 1e-9
+       under x64 by `tests/test_kernels_dekrr_step.py`.
+
+   Every beyond-paper acceleration (Chebyshev semi-iteration in
+   `repro.core.acceleration`) builds on this round.
 
 3. **SPMD nodes-on-devices execution** (`make_spmd_solver`): the same round
    under `shard_map` on a 1-D device mesh, one node per device, exchanging
@@ -41,8 +64,12 @@ three layers that are pinned to the reference by parity tests
        slot-table gather. Works for arbitrary connected graphs (star,
        Erdős–Rényi, …) at the cost of J·(J−1)·D_max words per round.
 
-   Both modes run the identical per-node arithmetic (`_node_step`) as the
-   batched runtime, so parity holds at near machine precision.
+   Both modes accept the same ``backend`` switch: "xla" runs `_node_step`
+   per device; "pallas" runs the fused kernel on the device-local [1 + K,
+   D_max] θ table ``[own θ; received neighbor θs]`` (the kernel's
+   `self_idx` indirection exists exactly so the J-node and 1-node-per-
+   device layouts share one kernel). Parity across all paths holds at near
+   machine precision.
 
 `comm_bytes_per_round` exposes the §II-C cost model for both modes so
 benchmarks can report paper-comparable communication totals.
@@ -152,8 +179,8 @@ def _circulant_slot_table(
     return idx
 
 
-def pack_problem(solver) -> PackedProblem:
-    """Pack a `DeKRRSolver`'s ragged auxiliaries into a `PackedProblem`.
+def _slot_table(solver):
+    """(nbr_idx [J, K] int32, nbr_mask [J, K] float, offsets | None).
 
     Circulant topologies get the ppermute slot layout (and `offsets`
     recorded) whenever every node's ±s neighbors are distinct, i.e. the
@@ -162,20 +189,59 @@ def pack_problem(solver) -> PackedProblem:
     generic padded adjacency table from `Topology.neighbor_table()`.
     """
     topo = solver.topology
+    dtype = np.asarray(solver.data[0].x).dtype
+    offsets = topo.circulant_offsets
+    if offsets is not None and topo.max_degree == 2 * len(offsets):
+        nbr_idx = _circulant_slot_table(offsets, topo.num_nodes)
+        nbr_mask = np.ones(nbr_idx.shape, dtype=dtype)
+        return nbr_idx, nbr_mask, tuple(int(s) for s in offsets)
+    nbr_idx, live = topo.neighbor_table()
+    return nbr_idx, live.astype(dtype), None
+
+
+_PACK_METHODS = ("batched", "aux")
+
+
+def pack_problem(solver, *, method: str = "batched",
+                 gram_backend: str | None = None) -> PackedProblem:
+    """Build a `PackedProblem` from a `DeKRRSolver`.
+
+    ``method="batched"`` (default) computes the Eq. 17 auxiliaries directly
+    in the padded layout: one vmapped featurize→Gram→inverse program over
+    numpy-staged [J, …] inputs, traced once per problem shape — no per-node
+    Python iteration over traced computation, so packing scales to large J
+    (construct the solver with ``build_aux=False`` to skip the ragged
+    reference build entirely). ``gram_backend`` picks how the Z Zᵀ blocks
+    are computed: "xla" (batched GEMM) or "pallas" (the fused streaming
+    `repro.kernels.rff_gram` kernel; default on TPU, cos_bias maps only).
+
+    ``method="aux"`` copies the solver's ragged reference auxiliaries
+    (`solver.aux`, the per-node loop) — bit-identical to the reference, and
+    the only path that honors a custom ``gram_fn`` or mixed feature kinds.
+    """
+    if method not in _PACK_METHODS:
+        raise ValueError(f"method must be one of {_PACK_METHODS}, "
+                         f"got {method!r}")
+    if gram_backend not in (None, "xla", "pallas"):
+        raise ValueError(f"unknown gram_backend {gram_backend!r}")
+    kinds = {fm.kind for fm in solver.feature_maps}
+    if method == "batched" and (
+            len(kinds) > 1                       # mixed cos_sin/cos_bias
+            or getattr(solver, "_gram_fn", None) is not None):
+        method = "aux"          # only the ragged build honors those
+    if method == "aux":
+        return _pack_problem_from_aux(solver)
+    staged = _stage_packed_inputs(solver, gram_backend=gram_backend)
+    return _finish_packed(staged, _build_packed_aux(**staged))
+
+
+def _pack_problem_from_aux(solver) -> PackedProblem:
+    """Legacy packing: per-node Python loop copying `solver.aux` (ragged)."""
     j_nodes = solver.J
     dims = tuple(fm.num_features for fm in solver.feature_maps)
     d_max = max(dims)
     dtype = np.asarray(solver.aux.d[0]).dtype
-
-    offsets = topo.circulant_offsets
-    if offsets is not None and topo.max_degree == 2 * len(offsets):
-        nbr_idx = _circulant_slot_table(offsets, j_nodes)
-        nbr_mask = np.ones(nbr_idx.shape, dtype=dtype)
-        offsets = tuple(int(s) for s in offsets)
-    else:
-        nbr_idx, live = topo.neighbor_table()
-        nbr_mask = live.astype(dtype)
-        offsets = None
+    nbr_idx, nbr_mask, offsets = _slot_table(solver)
     k_slots = nbr_idx.shape[1]
 
     g = np.zeros((j_nodes, d_max, d_max), dtype=dtype)
@@ -203,6 +269,263 @@ def pack_problem(solver) -> PackedProblem:
         nbr_idx=jnp.asarray(nbr_idx), nbr_mask=jnp.asarray(nbr_mask),
         offsets=offsets, node_dims=dims,
     )
+
+
+# --------------------------------------------------------------------------
+# Batched Eq. 17 aux build (default pack_problem path)
+# --------------------------------------------------------------------------
+# Number of times the batched builder has been *traced* (not called) — the
+# regression test asserts this does not grow with J or with repeat packing.
+_PACK_TRACE_COUNT = 0
+
+
+def pack_trace_count() -> int:
+    return _PACK_TRACE_COUNT
+
+
+def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
+    """Numpy-stage padded [J, …] inputs for the batched Eq. 17 build.
+
+    All cross-node gathering (neighbor Ω/b/X/masks by slot) happens here
+    with vectorized fancy indexing, so the traced builder is a pure vmap
+    over the leading node axis — which is what makes the per-node batch-of-1
+    replay in the regression test bit-identical to the batched call.
+    """
+    if gram_backend is None:
+        gram_backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    kind = solver.feature_maps[0].kind
+    j_nodes = solver.J
+    dtype = np.asarray(solver.data[0].x).dtype
+
+    freqs = np.array([fm.num_frequencies for fm in solver.feature_maps])
+    dims = np.array([fm.num_features for fm in solver.feature_maps])
+    sizes = np.array([nd.num_samples for nd in solver.data])
+    f_max, d_max, n_max = int(freqs.max()), int(dims.max()), int(sizes.max())
+    dim_in = solver.data[0].x.shape[0]
+
+    omega = np.zeros((j_nodes, f_max, dim_in), dtype=dtype)
+    bias = np.zeros((j_nodes, f_max), dtype=dtype)
+    x = np.zeros((j_nodes, dim_in, n_max), dtype=dtype)
+    y = np.zeros((j_nodes, n_max), dtype=dtype)
+    for j, (fm, nd) in enumerate(zip(solver.feature_maps, solver.data)):
+        omega[j, :freqs[j]] = np.asarray(fm.omega)
+        if fm.bias is not None:
+            bias[j, :freqs[j]] = np.asarray(fm.bias)
+        x[j, :, :sizes[j]] = np.asarray(nd.x)
+        y[j, :sizes[j]] = np.asarray(nd.y).reshape(-1)
+    col_mask = (np.arange(n_max)[None, :] < sizes[:, None]).astype(dtype)
+    feat_mask = (np.arange(d_max)[None, :] < dims[:, None]).astype(dtype)
+
+    # Row map from raw featurize space (size F_max or 2·F_max) into the
+    # packed feature space: identity for cos_bias; for cos_sin node j's live
+    # rows are [0, F_j) ∪ [F_max, F_max + F_j) made contiguous.
+    if kind == "cos_bias":
+        feat_idx = np.broadcast_to(np.arange(d_max, dtype=np.int32),
+                                   (j_nodes, d_max)).copy()
+        scale = np.sqrt(2.0 / freqs).astype(dtype)
+    else:
+        feat_idx = np.zeros((j_nodes, d_max), dtype=np.int32)
+        for j, fj in enumerate(freqs):
+            feat_idx[j, :2 * fj] = np.concatenate(
+                [np.arange(fj), f_max + np.arange(fj)])
+        scale = (1.0 / np.sqrt(freqs)).astype(dtype)
+
+    ct_self, ct_nei = solver.coupling_coefficients()
+    degs = solver.topology.degrees.astype(dtype)
+    nbr_idx, nbr_mask, offsets = _slot_table(solver)
+
+    gather = lambda a: a[nbr_idx]            # [J, K, …] by slot table
+    staged = dict(
+        omega=omega, bias=bias, x=x, y=y,
+        col_mask=col_mask, feat_mask=feat_mask, feat_idx=feat_idx,
+        scale=scale,
+        omega_n=gather(omega), bias_n=gather(bias), x_n=gather(x),
+        col_mask_n=gather(col_mask), feat_mask_n=gather(feat_mask),
+        feat_idx_n=gather(feat_idx), scale_n=gather(scale),
+        ct_self=ct_self.astype(dtype), ct_nei=ct_nei.astype(dtype),
+        ct_nei_n=gather(ct_nei.astype(dtype)),
+        degree=degs, nbr_mask=nbr_mask.astype(dtype),
+        lam_over_j=np.full((j_nodes,),
+                           solver.config.lam / solver.J, dtype=dtype),
+        n_total=np.full((j_nodes,), float(solver.N), dtype=dtype),
+        kind=kind,
+    )
+    if gram_backend == "pallas" and kind == "cos_bias" and j_nodes > 0:
+        staged.update(_pallas_gram_blocks(staged))
+    # bookkeeping for _finish_packed (not builder inputs)
+    staged["_meta"] = (tuple(int(v) for v in dims), nbr_idx, offsets)
+    return staged
+
+
+def _pallas_gram_blocks(staged: dict) -> dict:
+    """Route the Eq. 17 Z Zᵀ blocks through the fused streaming Pallas
+    kernel (`repro.kernels.ops.rff_gram_batched`), unit-scale frequency
+    space: gram_jj/zy for every node and Gram(Z_{j,p}) for every slot.
+    Per-node √(2/D_j) scaling and feature masking happen in `_node_aux`.
+    """
+    from repro.kernels.ops import rff_gram_batched
+
+    omega, bias = staged["omega"], staged["bias"]
+    x, y, cm = staged["x"], staged["y"], staged["col_mask"]
+    j_nodes, k_slots = staged["nbr_mask"].shape
+    graw, zyraw = rff_gram_batched(
+        jnp.asarray(omega), jnp.asarray(bias), jnp.asarray(x),
+        jnp.asarray(y), jnp.asarray(cm))
+    f_max, dim_in = omega.shape[1:]
+    if k_slots == 0:
+        gcross = np.zeros((j_nodes, 0, f_max, f_max), x.dtype)
+        return dict(gram_raw=np.asarray(graw), zy_raw=np.asarray(zyraw),
+                    gram_cross_raw=gcross)
+    # Z_{j,p}: node j's map on each slot-neighbor's data, flattened (j, k)
+    om_rep = np.broadcast_to(omega[:, None], (j_nodes, k_slots) +
+                             omega.shape[1:]).reshape(-1, f_max, dim_in)
+    bi_rep = np.broadcast_to(bias[:, None],
+                             (j_nodes, k_slots, f_max)).reshape(-1, f_max)
+    x_n = staged["x_n"].reshape((-1,) + x.shape[1:])
+    cm_n = staged["col_mask_n"].reshape(-1, cm.shape[1])
+    gcross, _ = rff_gram_batched(
+        jnp.asarray(om_rep), jnp.asarray(bi_rep), jnp.asarray(x_n),
+        jnp.zeros(cm_n.shape, x.dtype), jnp.asarray(cm_n))
+    return dict(
+        gram_raw=np.asarray(graw), zy_raw=np.asarray(zyraw),
+        gram_cross_raw=np.asarray(gcross).reshape(
+            j_nodes, k_slots, f_max, f_max))
+
+
+def _gauss_jordan_inv(a: jax.Array) -> jax.Array:
+    """Unpivoted Gauss-Jordan inverse (safe: Eq. 17's matrix is SPD, and the
+    padding is an identity block). Used instead of `jnp.linalg.inv` because
+    LAPACK's blocked getrf rounds differently at different batch sizes —
+    this form is built from batch-invariant elementwise ops, which is what
+    lets the per-node regression replay match the batched build bit-for-bit
+    (accuracy is Cholesky-grade on SPD inputs, ~1e-15 residual)."""
+    dim = a.shape[0]
+    aug = jnp.concatenate([a, jnp.eye(dim, dtype=a.dtype)], axis=1)
+
+    def body(i, aug):
+        piv = aug[i] / aug[i, i]
+        aug = aug - jnp.outer(aug[:, i], piv)
+        return aug.at[i].set(piv)
+
+    aug = jax.lax.fori_loop(0, dim, body, aug)
+    return aug[:, dim:]
+
+
+def _featurize_raw(omega, bias, x, kind):
+    """Unscaled raw features on one node: [F, dim] × [dim, N] → [R, N]."""
+    proj = jnp.einsum("fd,dn->fn", omega, x,
+                      precision=jax.lax.Precision.HIGHEST)
+    if kind == "cos_bias":
+        return jnp.cos(proj + bias[:, None])
+    return jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=0)
+
+
+def _node_aux(omega, bias, x, y, col_mask, feat_mask, feat_idx, scale,
+              omega_n, bias_n, x_n, col_mask_n, feat_mask_n, feat_idx_n,
+              scale_n, ct_self, ct_nei, ct_nei_n, degree, nbr_mask,
+              lam_over_j, n_total, *, kind,
+              gram_raw=None, zy_raw=None, gram_cross_raw=None):
+    """Eq. 17 auxiliaries for ONE node in the padded layout (vmapped over
+    the node axis by `_build_packed_aux`). All neighbor inputs arrive
+    pre-gathered per slot ([K, …]); masked slots carry nbr_mask 0 and the
+    node's own arrays, so their contributions cancel exactly.
+    """
+    hi = jax.lax.Precision.HIGHEST
+    pack = lambda raw, idx, fm, sc, cm: (            # raw [R, N] → Z [D, N]
+        jnp.take(raw, idx, axis=0) * sc * fm[:, None] * cm[None, :])
+
+    z = pack(_featurize_raw(omega, bias, x, kind),
+             feat_idx, feat_mask, scale, col_mask)          # Z_jj [D, N]
+    # neighbor maps on own data / own map on neighbor data / neighbor-own
+    raw_n_on_j = jax.vmap(
+        lambda om, b: _featurize_raw(om, b, x, kind))(omega_n, bias_n)
+    z_n_on_j = jax.vmap(pack)(
+        raw_n_on_j, feat_idx_n, feat_mask_n, scale_n,
+        jnp.broadcast_to(col_mask, (omega_n.shape[0],) + col_mask.shape))
+    raw_j_on_n = jax.vmap(
+        lambda xn: _featurize_raw(omega, bias, xn, kind))(x_n)
+    z_j_on_n = jax.vmap(
+        lambda raw, cm: pack(raw, feat_idx, feat_mask, scale, cm))(
+            raw_j_on_n, col_mask_n)
+    raw_nn = jax.vmap(
+        lambda om, b, xn: _featurize_raw(om, b, xn, kind))(
+            omega_n, bias_n, x_n)
+    z_nn = jax.vmap(pack)(raw_nn, feat_idx_n, feat_mask_n, scale_n,
+                          col_mask_n)                       # Z_pp [K, D, N]
+
+    if gram_raw is not None:
+        # Pallas streaming kernel output (unit-scale frequency space ==
+        # packed feature space for cos_bias); mask + scale here.
+        fouter = feat_mask[:, None] * feat_mask[None, :]
+        gram_jj = gram_raw * scale**2 * fouter
+        d_vec = zy_raw * scale * feat_mask / n_total
+        gram_cross = (gram_cross_raw * scale**2 * fouter[None])
+    else:
+        gram_jj = jnp.einsum("an,bn->ab", z, z, precision=hi)
+        # mult+sum rather than a matvec: XLA's gemv rounds differently at
+        # different batch sizes, this form is batch-invariant (regression
+        # replay in tests/test_dist_property.py)
+        d_vec = jnp.sum(z * y[None, :], axis=1) / n_total
+        gram_cross = jnp.einsum("kan,kbn->kab", z_j_on_n, z_j_on_n,
+                                precision=hi)
+
+    a = (1.0 / n_total + 2.0 * ct_self + degree * ct_nei) * gram_jj
+    a = a + lam_over_j * jnp.diag(feat_mask)
+    a = a + jnp.einsum("k,kab->ab", nbr_mask * ct_nei_n, gram_cross,
+                       precision=hi)
+    g = _gauss_jordan_inv(a + jnp.diag(1.0 - feat_mask))
+    g = g * feat_mask[:, None] * feat_mask[None, :]
+
+    s = 2.0 * ct_self * gram_jj
+    p = (ct_nei * jnp.einsum("an,kbn->kab", z, z_n_on_j, precision=hi)
+         + ct_nei_n[:, None, None]
+         * jnp.einsum("kan,kbn->kab", z_j_on_n, z_nn, precision=hi))
+    p = p * nbr_mask[:, None, None]
+    return g, d_vec, s, p
+
+
+@partial(jax.jit, static_argnames=("kind",))
+def _vmapped_node_aux(kind, **arrays):
+    global _PACK_TRACE_COUNT
+    _PACK_TRACE_COUNT += 1          # Python side effect: counts traces only
+    return jax.vmap(partial(_node_aux, kind=kind))(**arrays)
+
+
+def _build_packed_aux(*, kind, _meta=None, **staged):
+    """One traced program for the whole network (trace count independent of
+    J) — see `_vmapped_node_aux` for the counter the regression test pins."""
+    return _vmapped_node_aux(kind=kind, **{k: jnp.asarray(v)
+                                           for k, v in staged.items()})
+
+
+def _finish_packed(staged: dict, built) -> PackedProblem:
+    g, d, s, p = built
+    dims, nbr_idx, offsets = staged["_meta"]
+    return PackedProblem(
+        g=g, d=d, s=s, p=p,
+        theta_mask=jnp.asarray(staged["feat_mask"]),
+        nbr_idx=jnp.asarray(nbr_idx),
+        nbr_mask=jnp.asarray(staged["nbr_mask"]),
+        offsets=offsets, node_dims=dims,
+    )
+
+
+def _pack_problem_pernode(solver, *, gram_backend: str | None = None
+                          ) -> PackedProblem:
+    """The removed per-node Python loop, kept as the regression target: the
+    same staged inputs and the same vmapped program, but replayed one
+    batch-of-1 call per node. `pack_problem(method="batched")` must produce
+    bit-identical contents (tests/test_dist_property.py)."""
+    staged = _stage_packed_inputs(solver, gram_backend=gram_backend)
+    meta, kind = staged.pop("_meta"), staged.pop("kind")
+    parts = [
+        _build_packed_aux(kind=kind, **{k: v[j:j + 1]
+                                        for k, v in staged.items()})
+        for j in range(solver.J)
+    ]
+    built = tuple(jnp.concatenate(col, axis=0) for col in zip(*parts))
+    staged.update(_meta=meta, kind=kind)
+    return _finish_packed(staged, built)
 
 
 def pack_theta(packed: PackedProblem,
@@ -237,28 +560,47 @@ def _node_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     return g @ (d + s @ theta + coupled)
 
 
-@jax.jit
-def step_batched(packed: PackedProblem, theta: jax.Array) -> jax.Array:
-    """One synchronous Jacobi round of Eq. 19, vmapped over nodes.
+_BACKENDS = ("xla", "pallas")
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def step_batched(packed: PackedProblem, theta: jax.Array,
+                 backend: str = "xla") -> jax.Array:
+    """One synchronous Jacobi round of Eq. 19 over all nodes.
 
     theta: [J, D_max] → [J, D_max]. Padding is preserved exactly (zero in,
     zero out) — see the module docstring for why no mask is needed.
+
+    ``backend="xla"`` is the vmapped-GEMM round; ``backend="pallas"`` the
+    fused `repro.kernels.dekrr_step` kernel (in-kernel slot-table gather, θ
+    VMEM-resident; interpret-mode on CPU). Both run the same arithmetic and
+    agree at rtol 1e-9 under x64.
     """
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, "
+                         f"got {backend!r}")
+    if backend == "pallas":
+        from repro.kernels.ops import dekrr_step
+
+        self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
+        return dekrr_step(packed.g, packed.d, packed.s, packed.p, theta,
+                          packed.nbr_idx, self_idx, packed.nbr_mask)
     nbr_theta = theta[packed.nbr_idx]                  # [J, K, D_max]
     return jax.vmap(_node_step)(
         packed.g, packed.d, packed.s, packed.p, theta, nbr_theta,
         packed.nbr_mask)
 
 
-@partial(jax.jit, static_argnames=("num_iters",))
+@partial(jax.jit, static_argnames=("num_iters", "backend"))
 def solve_batched(packed: PackedProblem, num_iters: int,
-                  theta0: jax.Array | None = None) -> jax.Array:
+                  theta0: jax.Array | None = None,
+                  backend: str = "xla") -> jax.Array:
     """Run `num_iters` batched rounds from θ = 0 (or theta0) via lax.scan."""
     if theta0 is None:
         theta0 = jnp.zeros_like(packed.d)
 
     def round_fn(theta, _):
-        return step_batched(packed, theta), None
+        return step_batched(packed, theta, backend=backend), None
 
     theta, _ = lax.scan(round_fn, theta0, None, length=num_iters)
     return theta
@@ -270,7 +612,8 @@ def solve_batched(packed: PackedProblem, num_iters: int,
 _MODES = ("ppermute", "allgather")
 
 
-def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute"):
+def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
+                     backend: str = "xla"):
     """Build `run(packed, num_iters) -> [J, D_max]` on a 1-D node mesh.
 
     One node per device along `axis_name`; device index along the axis IS
@@ -283,11 +626,17 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute"):
       * ``"allgather"`` — `lax.all_gather` θ then gather slots locally;
         any topology; J·(J−1)·D_max words per round.
 
-    The per-node arithmetic is `_node_step`, identical to `step_batched`,
-    which is what makes rtol-1e-9 parity with the batched runtime hold.
+    ``backend`` picks the per-device arithmetic: "xla" runs `_node_step`
+    (identical to `step_batched`); "pallas" runs the fused
+    `repro.kernels.dekrr_step` kernel on the local θ table ``[own θ;
+    received neighbor θs]`` with `self_idx = [0]` — the same kernel as the
+    batched runtime, which is what makes rtol-1e-9 parity hold everywhere.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, "
+                         f"got {backend!r}")
     if axis_name not in mesh.shape:
         raise ValueError(f"mesh has no axis {axis_name!r}: {mesh.shape}")
 
@@ -298,6 +647,7 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute"):
     @partial(jax.jit, static_argnames=("num_iters", "offsets"))
     def _run(g, d, s, p, nbr_idx, nbr_mask, *, num_iters, offsets):
         j_nodes = d.shape[0]
+        k_slots = p.shape[1]
 
         def node_program(g, d, s, p, nbr_idx, nbr_mask):
             # Every operand arrives with a leading per-device axis of 1.
@@ -323,9 +673,20 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute"):
 
             def round_fn(theta, _):
                 nbr_theta = exchange(theta)
-                new = _node_step(g[0], d[0], s[0], p[0], theta[0],
-                                 nbr_theta, nbr_mask[0])
-                return new[None], None
+                if backend == "pallas":
+                    from repro.kernels.ops import dekrr_step
+
+                    # local θ table: row 0 = own θ, rows 1…K = neighbors
+                    table = jnp.concatenate([theta, nbr_theta], axis=0)
+                    local_idx = jnp.arange(
+                        1, k_slots + 1, dtype=jnp.int32)[None]
+                    new = dekrr_step(
+                        g, d, s, p, table, local_idx,
+                        jnp.zeros((1,), jnp.int32), nbr_mask)
+                else:
+                    new = _node_step(g[0], d[0], s[0], p[0], theta[0],
+                                     nbr_theta, nbr_mask[0])[None]
+                return new, None
 
             theta0 = jnp.zeros_like(d)
             theta, _ = lax.scan(round_fn, theta0, None, length=num_iters)
@@ -335,6 +696,9 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute"):
             node_program, mesh=mesh,
             in_specs=(spec, spec, spec, spec, spec, spec),
             out_specs=spec,
+            # jax 0.4.x has no replication rule for pallas_call; every
+            # operand/output here is explicitly sharded anyway.
+            check_rep=(backend != "pallas"),
         )
         return sharded(g, d, s, p, nbr_idx, nbr_mask)
 

@@ -4,6 +4,9 @@
                        Eq. 17 pre-iteration hot-spot; features never leave
                        VMEM)
 * rff_features.py    — fused featurize for the cross-feature exchange
+* dekrr_step.py      — fused packed Eq. 19 round for all J nodes (slot-table
+                       neighbor gather + Σ P θ reduction + G GEMM, θ
+                       VMEM-resident; the `repro.dist` backend="pallas" path)
 * decode_attention.py— flash-decode for the serving path (§Perf pair 2)
 
 ops.py holds the jit'd public wrappers (padding/alignment, backend
@@ -11,8 +14,8 @@ dispatch: interpret=True on non-TPU backends); ref.py the pure-jnp
 oracles every kernel is allclose-tested against.
 """
 from repro.kernels import ops
-from repro.kernels.ops import (flash_decode, gram_fn_for_solver, rff_features,
-                               rff_gram)
+from repro.kernels.ops import (dekrr_step, flash_decode, gram_fn_for_solver,
+                               rff_features, rff_gram, rff_gram_batched)
 
-__all__ = ["flash_decode", "gram_fn_for_solver", "ops", "rff_features",
-           "rff_gram"]
+__all__ = ["dekrr_step", "flash_decode", "gram_fn_for_solver", "ops",
+           "rff_features", "rff_gram", "rff_gram_batched"]

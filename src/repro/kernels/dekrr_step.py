@@ -1,0 +1,146 @@
+"""Fused packed DeKRR round (Eq. 19) for all J nodes — Pallas TPU kernel.
+
+One Eq. 19 round on the packed problem is, per node j,
+
+    θ_j ← G_j (d_j + S_j θ_j + Σ_k m_{j,k} P_{j,k} θ_{nbr(j,k)})
+
+with G/S [D, D], P [K, D, D] blocks padded to the network maximum D = D_max.
+The XLA path (`repro.dist.step_batched`) expresses this as a gather plus a
+vmapped chain of batched GEMMs; XLA materializes the gathered [J, K, D]
+neighbor-θ tensor and the [J, D] intermediates in HBM between them. This
+kernel fuses the whole round so that per grid step only node j's blocks move
+HBM→VMEM and θ never leaves VMEM:
+
+    grid = (J,)  — one program per node, blocks streamed by BlockSpec:
+      θ table   [T, D]        VMEM-resident across the whole grid (the
+                              reduction operand; T = J in batched mode)
+      G_j, S_j  [1, D, D]     streamed per step
+      P_j       [1, K, D, D]  streamed per step
+      d_j       [1, D]        streamed per step
+    per step j: acc  = d_j + S_j θ_{self(j)}            (MXU)
+                acc += Σ_k m_{j,k} · P_{j,k} θ_{row(j,k)}   (MXU, K unrolled)
+                out_j = G_j acc                         (MXU)
+
+The neighbor gather is done *inside* the kernel with the slot table: the
+int32 tables `nbr_idx` [J, K] / `self_idx` [J] arrive via scalar prefetch
+(`PrefetchScalarGridSpec`, SMEM) and index dynamic [1, D] row reads of the
+VMEM θ table — no one-hot matmul, no gathered [J, K, D] tensor in HBM.
+
+Decoupling the θ-table row from the node id (`self_idx`) lets the SPMD
+per-device node program reuse the identical kernel: a device holding one
+node calls it with J = 1, the table [1 + K, D] = [own θ; received neighbor
+θs], self_idx = [0] and nbr_idx = [[1 … K]] (see
+`repro.dist.make_spmd_solver(backend="pallas")`).
+
+Padding contract (same closure argument as `repro.dist.pack_problem`): rows
+i ≥ D_j of G_j are zero, so padded coordinates of the output are *exact*
+zeros; masked slots carry zero P blocks, so the `nbr_mask` multiply is
+belt-and-braces. Vectors are kept as [1, D] rows and every product is a
+dot_general contracting the matrix's second axis (computing (M v)ᵀ without
+materializing any transpose).
+
+VMEM working set per step: T·D (θ) + (2 + K)·D² (G, S, P) + 3·D (d, acc,
+out) floats — for the paper's D ≤ 512, K = 4 at f32 that is ~6.3 MB, within
+the 16 MB/core budget. All dims must be padded by the `ops.dekrr_step`
+wrapper: D to lane multiples of 128, the θ table to sublane multiples of 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# (M v)ᵀ as a row vector: contract [1, D] with [D', D] over the second axis.
+_ROW_TIMES_MAT_T = (((1,), (1,)), ((), ()))
+
+
+def _dekrr_step_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                       theta_ref, g_ref, d_ref, s_ref, p_ref, out_ref):
+    """One node's Eq. 19 update; grid position = node id.
+
+    Scalar prefetch (SMEM): nbr_idx [J, K] int32, self_idx [J] int32,
+    nbr_mask [J, K] int32. Tensor operands: theta [T, D] (full table,
+    VMEM-resident), g/s [1, D, D], d [1, D], p [1, K, D, D]; out [1, D].
+    """
+    j = pl.program_id(0)
+    num_slots = nbr_idx_ref.shape[1]
+    dtype = theta_ref.dtype
+
+    def row_times(row, mat):
+        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+        return jax.lax.dot_general(
+            row, mat, _ROW_TIMES_MAT_T,
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=dtype)
+
+    theta_self = theta_ref[pl.ds(self_idx_ref[j], 1), :]     # [1, D]
+    acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
+    for k in range(num_slots):                               # K static unroll
+        theta_k = theta_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+        mask_k = nbr_mask_ref[j, k].astype(dtype)
+        acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ_nbr
+    out_ref[...] = row_times(acc, g_ref[0])                  # G (…)
+
+
+def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
+                      p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
+                      self_idx: jax.Array, nbr_mask: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """Raw pallas_call. All dims must already be padded/aligned:
+
+      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
+      of 128; theta [T, D] with T a multiple of 8; nbr_idx [J, K] int32
+      rows into theta; self_idx [J] int32; nbr_mask [J, K] int32.
+    Returns the post-round θ rows, [J, D] (row r for node r — callers with
+    T ≠ J re-assemble their table themselves).
+    """
+    j_nodes, d_feat = d.shape
+    k_slots = p.shape[1]
+    t_rows = theta.shape[0]
+    assert d_feat % 128 == 0 and t_rows % 8 == 0, (d_feat, t_rows)
+    assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # nbr_idx, self_idx, nbr_mask
+        grid=(j_nodes,),
+        in_specs=[
+            pl.BlockSpec((t_rows, d_feat), lambda j, *_: (0, 0)),   # θ table
+            pl.BlockSpec((1, d_feat, d_feat), lambda j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, d_feat), lambda j, *_: (j, 0)),
+            pl.BlockSpec((1, d_feat, d_feat), lambda j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, k_slots, d_feat, d_feat),
+                         lambda j, *_: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d_feat), lambda j, *_: (j, 0)),
+    )
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    return pl.pallas_call(
+        _dekrr_step_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+        cost_estimate=pl.CostEstimate(
+            flops=j_nodes * flops_per_node,
+            bytes_accessed=(t_rows * d_feat
+                            + j_nodes * (3 + k_slots) * d_feat * d_feat
+                            ) * theta.dtype.itemsize,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(nbr_idx, self_idx, nbr_mask, theta, g, d, s, p)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                         *, interpret: bool = False):
+    """Pure-jnp oracle with the raw kernel's exact contract (padded shapes,
+    θ-table indirection) — what `tests/test_kernels_dekrr_step.py` pins the
+    kernel against before any repro.dist plumbing is involved."""
+    del interpret
+    nbr_theta = theta[nbr_idx]                        # [J, K, D]
+    coupled = jnp.einsum("jkab,jkb->ja", p,
+                         nbr_theta * nbr_mask[..., None].astype(theta.dtype))
+    own = jnp.einsum("jab,jb->ja", s, theta[self_idx])
+    return jnp.einsum("jab,jb->ja", g, d + own + coupled)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.rff import FeatureMap
+from repro.kernels.dekrr_step import dekrr_step_pallas
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_gram import rff_gram_pallas
 
@@ -118,6 +119,78 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                               block_s=bs, interpret=interpret)
     out = out[:, :, :dh].reshape(b, kh, g, dh).reshape(b, 1, h, dh)
     return out.astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
+               theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
+               nbr_mask: jax.Array, *,
+               interpret: bool | None = None) -> jax.Array:
+    """Fused packed Eq. 19 round: θ_j ← G_j(d_j + S_j θ_sj + Σ m P_jk θ_rk).
+
+    g/s [J, D, D], d [J, D], p [J, K, D, D], theta [T, D] (θ table),
+    nbr_idx [J, K] / self_idx [J] rows into the table, nbr_mask [J, K]
+    (any dtype; nonzero = live slot) → [J, D].
+
+    Pads D to lane multiples of 128, the θ table to sublane multiples of 8
+    and the slot axis to K ≥ 1 (an all-masked zero-P slot), then slices the
+    padding back off. Zero padding is exact under the round's algebra (see
+    `repro.dist.dekrr_spmd`), so this matches `step_batched` to the last
+    ulp-scale rounding of the reordered contractions (rtol 1e-9 under x64).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    j_nodes, d_feat = d.shape
+
+    g_p = _pad_to(_pad_to(g, 1, 128), 2, 128)
+    s_p = _pad_to(_pad_to(s, 1, 128), 2, 128)
+    d_p = _pad_to(d, 1, 128)
+    p_p = _pad_to(_pad_to(p, 2, 128), 3, 128)
+    if p_p.shape[1] == 0:                       # K = 0 (edgeless graph)
+        p_p = jnp.zeros((j_nodes, 1) + p_p.shape[2:], p_p.dtype)
+        nbr_idx = jnp.zeros((j_nodes, 1), jnp.int32)
+        nbr_mask = jnp.zeros((j_nodes, 1), jnp.int32)
+    theta_p = _pad_to(_pad_to(theta, 1, 128), 0, 8)
+
+    out = dekrr_step_pallas(
+        g_p, d_p, s_p, p_p, theta_p,
+        nbr_idx.astype(jnp.int32), self_idx.astype(jnp.int32),
+        (nbr_mask != 0).astype(jnp.int32),
+        interpret=interpret)
+    return out[:, :d_feat]
+
+
+@partial(jax.jit, static_argnames=("block_n", "interpret"))
+def rff_gram_batched(omega: jax.Array, bias: jax.Array, x: jax.Array,
+                     y: jax.Array, col_mask: jax.Array, *,
+                     block_n: int = 1024,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """vmapped fused streaming Gram over a leading node axis (cos_bias, the
+    unit-scale form): omega [J, F, d], bias [J, F], x [J, d, N], y [J, N],
+    col_mask [J, N] → (gram [J, F, F], zy [J, F]) with Z = cos(Ω X + b).
+
+    The per-node √(2/D_j) scale is *not* applied (it is a per-node constant,
+    which a single pallas_call cannot close over) — callers fold it in as
+    s_j²·gram / s_j·zy. Rows of padded frequencies come out as cos(0) = 1
+    and must be masked by the caller; padded *columns* are masked here.
+    Used by `repro.dist.pack_problem` for the batched Eq. 17 Z Zᵀ blocks.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    f_feat, n = omega.shape[1], x.shape[2]
+
+    bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    omega_p = _pad_to(_pad_to(omega, 1, 8), 2, 128).astype(x.dtype)
+    bias_p = _pad_to(bias[..., None], 1, 8).astype(x.dtype)
+    x_p = _pad_to(_pad_to(x, 1, 128), 2, bn)
+    y_p = _pad_to(y[:, None, :].astype(x.dtype), 2, bn)
+    mask_p = _pad_to(col_mask[:, None, :].astype(x.dtype), 2, bn)
+
+    gram, zy = jax.vmap(
+        partial(rff_gram_pallas, scale=1.0, block_n=bn, interpret=interpret)
+    )(omega_p, bias_p, x_p, y_p, mask_p)
+    return gram[:, :f_feat, :f_feat], zy[:, :f_feat, 0]
 
 
 # ---------------------------------------------------------------- integration

@@ -1,0 +1,226 @@
+"""Property tests for the packed runtime: pack/unpack round-trips, slot-table
+invariants, the §II-C comm cost model, and the batched `pack_problem`
+regression (no per-node tracing; bit-identical to the per-node replay)."""
+import types
+
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+
+from conftest import cached_fmaps, cached_split
+from repro.core import DeKRRConfig, DeKRRSolver, circulant, erdos_renyi
+from repro.dist import (PackedProblem, comm_bytes_per_round, pack_problem,
+                        pack_theta, unpack_theta)
+from repro.dist.dekrr_spmd import (_pack_problem_pernode, _slot_table,
+                                   pack_trace_count)
+
+
+def _synthetic_packed(node_dims, topo, dtype=np.float64) -> PackedProblem:
+    """A structurally valid PackedProblem (zero matrices) for a topology."""
+    fake = types.SimpleNamespace(
+        topology=topo, data=[types.SimpleNamespace(x=np.zeros(1, dtype))])
+    nbr_idx, nbr_mask, offsets = _slot_table(fake)
+    j, k = nbr_idx.shape
+    d_max = max(node_dims)
+    theta_mask = (np.arange(d_max)[None, :]
+                  < np.asarray(node_dims)[:, None]).astype(dtype)
+    return PackedProblem(
+        g=jnp.zeros((j, d_max, d_max), dtype),
+        d=jnp.zeros((j, d_max), dtype),
+        s=jnp.zeros((j, d_max, d_max), dtype),
+        p=jnp.zeros((j, k, d_max, d_max), dtype),
+        theta_mask=jnp.asarray(theta_mask),
+        nbr_idx=jnp.asarray(nbr_idx), nbr_mask=jnp.asarray(nbr_mask),
+        offsets=offsets, node_dims=tuple(int(v) for v in node_dims),
+    )
+
+
+# --------------------------------------------------------------------------
+# pack_theta / unpack_theta round-trips
+# --------------------------------------------------------------------------
+@given(j_nodes=st.integers(3, 12), d_lo=st.integers(1, 6),
+       d_hi=st.integers(7, 20), seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_theta_pack_unpack_round_trip(j_nodes, d_lo, d_hi, seed):
+    rng = np.random.default_rng(seed)
+    dims = rng.integers(d_lo, d_hi + 1, j_nodes)
+    packed = _synthetic_packed(dims, circulant(j_nodes, (1,)))
+
+    ragged = [jnp.asarray(rng.normal(size=dj)) for dj in dims]
+    theta = pack_theta(packed, ragged)
+    assert theta.shape == (j_nodes, max(dims))
+    # padded slots are exact zeros == theta_mask complement
+    assert not np.any(np.asarray(theta)[np.asarray(packed.theta_mask) == 0])
+    back = unpack_theta(packed, theta)
+    for a, b in zip(ragged, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and the other direction: unpack → pack is the identity on padded θ
+    np.testing.assert_array_equal(
+        np.asarray(pack_theta(packed, back)), np.asarray(theta))
+
+
+# --------------------------------------------------------------------------
+# Slot-table invariants
+# --------------------------------------------------------------------------
+def _slot_table_for(topo):
+    fake = types.SimpleNamespace(
+        topology=topo, data=[types.SimpleNamespace(x=np.zeros(1))])
+    return _slot_table(fake)
+
+
+@given(j_nodes=st.integers(5, 14), p_edge=st.sampled_from([0.3, 0.5, 0.8]),
+       seed=st.integers(0, 2**10))
+@settings(max_examples=10, deadline=None)
+def test_generic_slot_table_invariants(j_nodes, p_edge, seed):
+    """Live slots enumerate each node's true neighbors exactly once; padded
+    slots are masked and point at the node itself (harmless gather)."""
+    topo = erdos_renyi(j_nodes, p_edge, seed=seed)
+    nbr_idx, nbr_mask, offsets = _slot_table_for(topo)
+    if offsets is not None:     # an ER draw can happen to be circulant
+        return
+    for j in range(j_nodes):
+        live = nbr_mask[j] != 0
+        assert sorted(nbr_idx[j][live].tolist()) == topo.neighbors(j)
+        assert np.all(nbr_idx[j][~live] == j)
+        # mask is a prefix: live slots first, padding after
+        assert not np.any(np.diff(live.astype(int)) > 0)
+
+
+@given(j_nodes=st.integers(5, 16), use_two=st.sampled_from([False, True]))
+@settings(max_examples=10, deadline=None)
+def test_circulant_slot_table_is_ppermute_ordered(j_nodes, use_two):
+    offsets = (1, 2) if use_two and j_nodes >= 5 else (1,)
+    topo = circulant(j_nodes, offsets)
+    nbr_idx, nbr_mask, got_offsets = _slot_table_for(topo)
+    assert got_offsets == offsets
+    assert np.all(nbr_mask == 1)            # circulant layout has no padding
+    for j in range(j_nodes):
+        want = []
+        for s in offsets:
+            want.extend([(j + s) % j_nodes, (j - s) % j_nodes])
+        assert nbr_idx[j].tolist() == want
+
+
+def test_packed_masked_slots_carry_zero_p_blocks():
+    """The iteration's padding closure relies on masked slots having
+    *zero* P blocks, not merely a mask bit."""
+    topo = erdos_renyi(6, 0.4, seed=3)
+    ds, train, _ = cached_split("air_quality", 6, subsample=400, seed=0)
+    fmaps = cached_fmaps("air_quality", 6, (8, 10, 12, 8, 10, 12),
+                         subsample=400, seed=0)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=1e-6, c_nei=0.02 * n))
+    packed = pack_problem(solver)
+    mask = np.asarray(packed.nbr_mask)
+    p = np.asarray(packed.p)
+    for j in range(6):
+        for k in range(mask.shape[1]):
+            if not mask[j, k]:
+                assert not np.any(p[j, k])
+        # padded θ coordinates: zero rows/cols everywhere
+        dj = packed.node_dims[j]
+        assert not np.any(np.asarray(packed.g)[j, dj:, :])
+        assert not np.any(np.asarray(packed.g)[j, :, dj:])
+        assert not np.any(np.asarray(packed.d)[j, dj:])
+
+
+# --------------------------------------------------------------------------
+# §II-C comm cost model: ppermute vs allgather consistency
+# --------------------------------------------------------------------------
+@given(j_nodes=st.integers(5, 16), use_two=st.sampled_from([False, True]),
+       d_max=st.sampled_from([8, 24, 64]))
+@settings(max_examples=12, deadline=None)
+def test_comm_bytes_consistency_on_circulant_graphs(j_nodes, use_two, d_max):
+    offsets = (1, 2) if use_two and j_nodes >= 5 else (1,)
+    topo = circulant(j_nodes, offsets)
+    dims = [d_max - (j % 3) for j in range(j_nodes)]
+    packed = _synthetic_packed(dims, topo)
+    itemsize = np.dtype(packed.d.dtype).itemsize
+
+    pp = comm_bytes_per_round(packed, "ppermute")
+    ag = comm_bytes_per_round(packed, "allgather")
+    # ppermute moves exactly the paper's Σ_j |N_j| padded words…
+    assert pp == int(topo.degrees.sum()) * max(dims) * itemsize
+    # …allgather moves the full network state minus the own shard…
+    assert ag == j_nodes * (j_nodes - 1) * max(dims) * itemsize
+    # …and the two models agree on the shared factors: for a circulant
+    # graph ppermute/allgather == degree/(J−1) exactly.
+    assert pp * (j_nodes - 1) == ag * int(topo.degrees[0])
+
+
+def test_comm_bytes_equal_on_complete_circulant():
+    """On a complete graph both exchanges move the same bytes."""
+    from repro.core import complete
+    topo = complete(7)
+    packed = _synthetic_packed([16] * 7, topo)
+    assert (comm_bytes_per_round(packed, "ppermute")
+            == comm_bytes_per_round(packed, "allgather"))
+
+
+# --------------------------------------------------------------------------
+# Batched pack_problem regression (the removed per-node Python loop)
+# --------------------------------------------------------------------------
+def _regression_solver():
+    topo = circulant(8, (1, 2))
+    dims = (8, 12, 16, 20, 8, 12, 16, 20)
+    ds, train, _ = cached_split("air_quality", 8, subsample=400, seed=0)
+    fmaps = cached_fmaps("air_quality", 8, dims, subsample=400, seed=0)
+    n = sum(t.num_samples for t in train)
+    return DeKRRSolver(topo, fmaps, train,
+                       DeKRRConfig(lam=1e-6, c_nei=0.02 * n),
+                       build_aux=False)
+
+
+def test_batched_pack_traces_once_and_matches_pernode_loop_bitwise():
+    """The batched Eq. 17 build must (a) trace one program per problem
+    shape — never once per node, and not again on repeat packing — and
+    (b) produce bit-identical PackedProblem contents to the removed
+    per-node Python loop (`_pack_problem_pernode`, batch-of-1 replay of
+    the same program) on a fixed seed."""
+    solver = _regression_solver()
+
+    t0 = pack_trace_count()
+    packed = pack_problem(solver)
+    traced_first = pack_trace_count() - t0
+    assert traced_first <= 1, \
+        f"batched pack traced {traced_first}× (per-node tracing?)"
+
+    t1 = pack_trace_count()
+    repacked = pack_problem(solver)
+    assert pack_trace_count() - t1 == 0, "repeat packing re-traced"
+
+    loop = _pack_problem_pernode(solver)
+    for name in ("g", "d", "s", "p", "theta_mask", "nbr_idx", "nbr_mask"):
+        batched = np.asarray(getattr(packed, name))
+        np.testing.assert_array_equal(
+            batched, np.asarray(getattr(repacked, name)),
+            err_msg=f"{name}: repeat packing changed bits")
+        np.testing.assert_array_equal(
+            batched, np.asarray(getattr(loop, name)),
+            err_msg=f"{name}: batched != per-node loop")
+    assert packed.offsets == loop.offsets
+    assert packed.node_dims == loop.node_dims
+    # the batched path must never materialize the ragged reference aux
+    assert solver._aux is None
+
+
+def test_batched_pack_matches_reference_aux_pack():
+    """Same contents as the legacy `method="aux"` pack (which copies the
+    ragged reference build) at solver-parity tolerance — different
+    summation orders make bitwise equality impossible across the two
+    computations, rtol 1e-9 is the module's contract."""
+    solver = _regression_solver()
+    batched = pack_problem(solver)
+    legacy = pack_problem(solver, method="aux")
+    for name in ("d", "s", "p"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(batched, name)),
+            np.asarray(getattr(legacy, name)), rtol=1e-9, atol=1e-15,
+            err_msg=name)
+    # g is an inverse, so its entrywise agreement degrades with cond(A):
+    # looser rtol plus an atol scaled to ||g||_max instead of the 1e-9 used
+    # for the directly-computed d/s/p blocks
+    g_b, g_l = np.asarray(batched.g), np.asarray(legacy.g)
+    np.testing.assert_allclose(g_b, g_l, rtol=1e-6,
+                               atol=1e-9 * np.max(np.abs(g_l)))

@@ -1,0 +1,203 @@
+"""Parity sweeps for the fused packed DeKRR round kernel (interpret mode).
+
+Three layers are pinned to each other at rtol 1e-9 under x64, all on CPU:
+
+  ragged reference (`DeKRRSolver.step`)
+    == batched XLA round (`step_batched(backend="xla")`)
+    == fused Pallas round (`step_batched(backend="pallas")`,
+       `repro.kernels.dekrr_step` in interpret mode)
+
+sweeping ragged D_j sets, circulant and arbitrary graphs, and the J=1 /
+single-neighbor / full-graph edge cases; plus the raw kernel against its
+pure-jnp oracle on random shapes (θ-table indirection, masked slots), the
+solve-level backend agreement, and the SPMD backend="pallas" path.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from conftest import REPO_ROOT, cached_fmaps, cached_split, subprocess_env
+from repro.core import (DeKRRConfig, DeKRRSolver, Topology, circulant,
+                        complete, erdos_renyi, star)
+from repro.dist import pack_problem, solve_batched, step_batched
+from repro.kernels import ops
+from repro.kernels.dekrr_step import dekrr_step_reference
+
+TOL = dict(rtol=1e-9, atol=1e-12)
+
+
+def _solver(topo, dims, sub=400, seed=0):
+    j = topo.num_nodes
+    ds, train, _ = cached_split("air_quality", j, subsample=sub, seed=seed)
+    fmaps = cached_fmaps("air_quality", j, tuple(dims),
+                         subsample=sub, seed=seed)
+    n = sum(t.num_samples for t in train)
+    return DeKRRSolver(topo, fmaps, train,
+                       DeKRRConfig(lam=1e-6, c_nei=0.02 * n))
+
+
+def _single_node_topology():
+    return Topology(adjacency=np.zeros((1, 1), dtype=bool))
+
+
+CASES = [
+    # (topology, ragged D_j set) — the kernel must be exact under both slot
+    # layouts (circulant ppermute order and generic padded adjacency) and
+    # at every degree extreme.
+    (circulant(10, (1, 2)), [8, 12, 16, 20, 24, 8, 12, 16, 20, 24]),
+    (circulant(6, (1,)), [10, 14, 10, 14, 10, 14]),
+    (star(5), [6, 8, 10, 12, 14]),                  # worst degree imbalance
+    (erdos_renyi(7, 0.5, seed=1), [9, 13, 9, 13, 9, 13, 9]),
+    (complete(5), [7, 9, 11, 9, 7]),                # full graph
+    (circulant(2, (1,)), [8, 12]),                  # single neighbor
+    (_single_node_topology(), [10]),                # J=1, no neighbors
+]
+
+
+@pytest.mark.parametrize("topo,dims", CASES,
+                         ids=[f"J{t.num_nodes}_deg{t.max_degree}"
+                              for t, _ in CASES])
+def test_fused_kernel_matches_xla_and_ragged_reference(topo, dims):
+    solver = _solver(topo, dims)
+    packed = pack_problem(solver)
+    state = solver.init_state()
+    th_xla = jnp.zeros_like(packed.d)
+    th_pal = jnp.zeros_like(packed.d)
+    for _ in range(5):
+        state = solver.step(state)
+        th_xla = step_batched(packed, th_xla, backend="xla")
+        th_pal = step_batched(packed, th_pal, backend="pallas")
+    for j in range(topo.num_nodes):
+        ref = np.asarray(state.theta[j])
+        np.testing.assert_allclose(np.asarray(th_pal[j][:dims[j]]),
+                                   ref, **TOL)
+        np.testing.assert_allclose(np.asarray(th_pal[j]),
+                                   np.asarray(th_xla[j]), **TOL)
+        # padding must stay identically zero through the fused kernel too
+        assert not np.any(np.asarray(th_pal[j][dims[j]:]))
+
+
+@given(j_nodes=st.integers(1, 6), k_slots=st.integers(0, 4),
+       d_feat=st.integers(1, 40), extra_rows=st.integers(0, 3),
+       seed=st.integers(0, 2**16))
+@settings(max_examples=15, deadline=None)
+def test_raw_kernel_matches_oracle_random_shapes(j_nodes, k_slots, d_feat,
+                                                 extra_rows, seed):
+    """Property: the fused kernel equals the jnp oracle for arbitrary
+    (unaligned) shapes, arbitrary θ-table indirection (T ≥ J rows,
+    self_idx a permutation) and arbitrary slot masks."""
+    rng = np.random.default_rng(seed)
+    t_rows = j_nodes + extra_rows
+    g = jnp.asarray(rng.normal(size=(j_nodes, d_feat, d_feat)))
+    d = jnp.asarray(rng.normal(size=(j_nodes, d_feat)))
+    s = jnp.asarray(rng.normal(size=(j_nodes, d_feat, d_feat)))
+    p = jnp.asarray(rng.normal(size=(j_nodes, k_slots, d_feat, d_feat)))
+    theta = jnp.asarray(rng.normal(size=(t_rows, d_feat)))
+    nbr_idx = jnp.asarray(
+        rng.integers(0, t_rows, (j_nodes, k_slots)), jnp.int32)
+    self_idx = jnp.asarray(rng.permutation(t_rows)[:j_nodes], jnp.int32)
+    nbr_mask = jnp.asarray(
+        rng.integers(0, 2, (j_nodes, k_slots)), jnp.int32)
+
+    got = ops.dekrr_step(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                         interpret=True)
+    want = dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx,
+                                nbr_mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_solve_batched_backends_agree():
+    topo = circulant(8, (1, 2))
+    solver = _solver(topo, [10, 12, 14, 16, 10, 12, 14, 16])
+    packed = pack_problem(solver)
+    th_xla = solve_batched(packed, 30, backend="xla")
+    th_pal = solve_batched(packed, 30, backend="pallas")
+    np.testing.assert_allclose(np.asarray(th_pal), np.asarray(th_xla),
+                               **TOL)
+
+
+def test_backends_reach_same_round_count():
+    """Convergence: iterating to a fixed tolerance must take the *same*
+    number of rounds under both backends (the fused kernel cannot change
+    the iteration's contraction)."""
+    topo = circulant(6, (1,))
+    solver = _solver(topo, [10, 14, 10, 14, 10, 14])
+    packed = pack_problem(solver)
+
+    def rounds_to_tol(backend, tol=1e-8, max_rounds=2000):
+        theta = jnp.zeros_like(packed.d)
+        for k in range(max_rounds):
+            new = step_batched(packed, theta, backend=backend)
+            delta = float(jnp.max(jnp.abs(new - theta)))
+            theta = new
+            if delta < tol:
+                return k + 1
+        return max_rounds
+
+    assert rounds_to_tol("xla") == rounds_to_tol("pallas")
+
+
+def test_step_batched_rejects_unknown_backend():
+    topo = circulant(2, (1,))
+    solver = _solver(topo, [8, 12])
+    packed = pack_problem(solver)
+    with pytest.raises(ValueError, match="backend"):
+        step_batched(packed, jnp.zeros_like(packed.d), backend="cuda")
+
+
+SPMD_PALLAS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={J}"
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import DeKRRConfig, DeKRRSolver, circulant, select_features
+    from repro.data.synthetic import make_dataset, partition, train_test_split_nodes
+    from repro.dist import make_spmd_solver, pack_problem, solve_batched
+
+    J = {J}
+    ds = make_dataset("air_quality", subsample=300, seed=0)
+    topo = circulant(J, (1,))
+    train, _ = train_test_split_nodes(partition(ds, J, mode="noniid_y"))
+    keys = jax.random.split(jax.random.PRNGKey(0), J)
+    dims = [8 + 2 * (j % 2) for j in range(J)]
+    fmaps = [select_features(keys[j], ds.dim, dims[j], 1.0, train[j].x,
+                             train[j].y, method="energy", candidate_ratio=5)
+             for j in range(J)]
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=1e-6, c_nei=0.02 * n))
+    packed = pack_problem(solver)
+    want = solve_batched(packed, 25)
+
+    mesh = Mesh(np.array(jax.devices()), ("nodes",))
+    for mode in ("ppermute", "allgather"):
+        got = make_spmd_solver(mesh, "nodes", mode, backend="pallas")(
+            packed, 25)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-12)
+    print("SPMD-PALLAS-PARITY-OK")
+""")
+
+
+def test_spmd_pallas_backend_parity_on_4_devices():
+    """The SPMD per-device node program runs the same fused kernel on its
+    local [1 + K, D_max] θ table; subprocess so the forced device count
+    does not leak into this session."""
+    proc = subprocess.run(
+        [sys.executable, "-c", SPMD_PALLAS_SCRIPT.format(J=4)],
+        capture_output=True, text=True, timeout=600,
+        env=subprocess_env(),
+        cwd=REPO_ROOT,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SPMD-PALLAS-PARITY-OK" in proc.stdout
