@@ -25,7 +25,8 @@ def main() -> None:
                             convergence_curve, kernel_bench,
                             paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
                             paper_fig3_imbalanced, paper_fig4_pernode,
-                            paper_table2, roofline, step_kernel_bench)
+                            paper_table2, roofline, solve_bench,
+                            step_kernel_bench)
 
     suites = {
         "table2": paper_table2.run,
@@ -39,6 +40,7 @@ def main() -> None:
         "chebyshev": chebyshev_bench.run,
         "kernel": kernel_bench.run,
         "step": step_kernel_bench.run,
+        "solve": solve_bench.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

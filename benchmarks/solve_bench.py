@@ -1,0 +1,140 @@
+"""Whole-solve latency: fused multi-round Pallas kernel vs per-round kernel
+scan vs XLA scan, emitting ``BENCH_solve.json`` for the perf trajectory.
+
+This is the benchmark `BENCH_step.json` cannot be: the per-round step bench
+times one round in isolation, so the R kernel dispatches and the R θ
+HBM-round-trips of a real solve — the costs the fused
+`solve_batched(backend="pallas_fused")` path deletes — are invisible to
+it. Here the unit is the full solve at the paper's round counts
+(rounds ∈ {100, 1000}; ρ(M) ≈ 0.95–0.999 needs hundreds-to-thousands),
+and each backend's ``round_dispatches`` is recorded next to its wall
+time: R separate round invocations for the scan backends, one fused
+pallas_call (per chunk) for "pallas_fused".
+
+On CPU both Pallas paths execute in interpret mode — per-grid-step
+evaluation, bit-accurate but meaningless for timing — so those columns
+are honestly labeled placeholders (``pallas_timing_is_interpret_mode``):
+measured at a capped round count (interpret wall is ~0.5 s/round at
+J = 64 — a 1000-round interpret solve is pointless to sit through) and
+scaled linearly to the nominal rounds, with the cap recorded in
+``pallas_interpret_rounds_measured``. Wall time is measured for real on
+the XLA scan, and the fused kernel is additionally reported as the
+analytic TPU roofline (HBM-bound streaming of the [J, D, D] blocks at
+`repro.launch.mesh.HBM_BANDWIDTH`, same model as `step_kernel_bench.py`
+— identical per round for fused and per-round paths; what the fusion
+removes is the per-dispatch overhead and θ traffic *between* rounds,
+which a roofline by construction excludes). On a TPU backend all three
+columns are real compiled timings over the full round count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from benchmarks.step_kernel_bench import OFFSETS, _synthetic_packed, analytic
+from repro.dist import solve_batched
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_solve.json")
+
+CASES = [
+    # (J, D_max, rounds) at K = 4 circulant slots — the paper topology
+    # degree; round counts span the ρ(M) ≈ 0.95 → 0.999 operating range.
+    (16, 128, 100), (16, 128, 1000),
+    (64, 128, 100), (64, 128, 1000),
+]
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+
+def _time_solve(packed, rounds: int, backend: str, reps: int) -> float:
+    solve_batched(packed, rounds, backend=backend).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        solve_batched(packed, rounds, backend=backend).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False) -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    # interpret-mode placeholder columns: measure this many rounds and
+    # scale linearly (compiled TPU timings use the full count)
+    interp_cap = 10 if fast else 50
+    cases = [(j, d, r) for j, d, r in CASES if j <= 16 and r <= 100] \
+        if fast else CASES
+    results = []
+    for j_nodes, d_max, rounds in cases:
+        packed = _synthetic_packed(j_nodes, d_max)
+        k_slots = packed.num_slots
+
+        times = {}
+        for backend in BACKENDS:
+            measured = rounds if (on_tpu or backend == "xla") \
+                else min(rounds, interp_cap)
+            # interpret-mode Pallas is slow; one rep is representative
+            reps = 3 if (backend == "xla" and rounds <= 100) else 1
+            times[backend] = (_time_solve(packed, measured, backend, reps)
+                              * (rounds / measured))
+
+        flops1, hbm1, _, t_roof1 = analytic(j_nodes, d_max, k_slots)
+        vmem_fused = (2 * j_nodes * d_max                  # two θ tables
+                      + 2 * (2 + k_slots) * d_max * d_max  # dbl-buf blocks
+                      + 3 * d_max) * 4
+        row = {
+            "j_nodes": j_nodes, "d_max": d_max, "k_slots": k_slots,
+            "rounds": rounds, "dtype": "float32",
+            "xla_us": round(times["xla"], 1),
+            "pallas_us": round(times["pallas"], 1),
+            "pallas_fused_us": round(times["pallas_fused"], 1),
+            "pallas_timing_is_interpret_mode": not on_tpu,
+            "pallas_interpret_rounds_measured": (
+                None if on_tpu else min(rounds, interp_cap)),
+            # what the fusion is FOR: dispatch counts per solve
+            "round_dispatches": {
+                "xla": rounds, "pallas": rounds, "pallas_fused": 1},
+            # θ words crossing HBM between rounds (zero once fused)
+            "theta_hbm_bytes_between_rounds": {
+                "per_round": 2 * rounds * j_nodes * d_max * 4,
+                "pallas_fused": 0},
+            "flops": rounds * flops1,
+            "hbm_bytes": rounds * hbm1,
+            "vmem_bytes": vmem_fused,
+            "tpu_roofline_us": round(rounds * t_roof1 * 1e6, 2),
+            "fits_vmem": bool(vmem_fused < 16 * 2**20),
+        }
+        results.append(row)
+        C.csv_row(
+            f"solve/J{j_nodes}_D{d_max}_R{rounds}", times["xla"],
+            f"pallas_us={row['pallas_us']};"
+            f"fused_us={row['pallas_fused_us']};interp={not on_tpu};"
+            f"dispatches=1/{rounds};"
+            f"tpu_roofline_us={row['tpu_roofline_us']};"
+            f"vmem={vmem_fused/2**20:.2f}MiB")
+        del packed
+
+    payload = {
+        "benchmark": ("dekrr_solve fused multi-round kernel vs per-round "
+                      "kernel scan vs XLA scan (whole-solve latency)"),
+        "backend": jax.default_backend(),
+        "circulant_offsets": list(OFFSETS),
+        "note": ("pallas_us / pallas_fused_us are interpret-mode (Python "
+                 "per grid step) wall times on non-TPU backends, measured "
+                 "over pallas_interpret_rounds_measured rounds and scaled "
+                 "linearly — placeholders for the compiled columns; "
+                 "compare trajectories on xla_us, round_dispatches and "
+                 "tpu_roofline_us there"),
+        "cases": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"solve/json,0.0,wrote={os.path.relpath(OUT_PATH, REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    run(fast="--fast" in sys.argv)

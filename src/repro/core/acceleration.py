@@ -47,19 +47,20 @@ def safe_mu(mu_est: float, margin: float = 0.02) -> float:
 
 
 def power_iteration_mu_max(packed: PackedProblem, iters: int = 50,
-                           seed: int = 0) -> float:
+                           seed: int = 0, backend: str = "xla") -> float:
     """Estimate ρ(M) with power iteration on the *homogeneous* part of F
     (b cancels in differences). Decentralized: each step is one Eq. 19
     round; the normalization uses a global norm (one scalar all-reduce —
-    available in-network via gossip in practice)."""
+    available in-network via gossip in practice). ``backend`` picks the
+    round implementation (`step_batched`'s switch)."""
     v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
                           packed.d.dtype)
     v = v * packed.theta_mask
     zero = jnp.zeros_like(packed.d)
-    b = step_batched(packed, zero)               # F(0) = b
+    b = step_batched(packed, zero, backend=backend)  # F(0) = b
     lam = 0.0
     for _ in range(iters):
-        fv = step_batched(packed, v) - b         # M v
+        fv = step_batched(packed, v, backend=backend) - b      # M v
         lam = float(jnp.linalg.norm(fv) / jnp.maximum(
             jnp.linalg.norm(v), 1e-30))
         v = fv / jnp.maximum(jnp.linalg.norm(fv), 1e-30)
@@ -67,7 +68,8 @@ def power_iteration_mu_max(packed: PackedProblem, iters: int = 50,
 
 
 def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
-                           iters: int = 50, seed: int = 1) -> float:
+                           iters: int = 50, seed: int = 1,
+                           backend: str = "xla") -> float:
     """Estimate the BOTTOM of spec(M) via power iteration on the shifted
     operator μ_max·I − M (its top eigenvalue is μ_max − μ_min). The Eq. 19
     operator is similar to a symmetric matrix (real spectrum) but not PSD
@@ -78,10 +80,10 @@ def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
                           packed.d.dtype)
     v = v * packed.theta_mask
     zero = jnp.zeros_like(packed.d)
-    b = step_batched(packed, zero)
+    b = step_batched(packed, zero, backend=backend)
     lam = 0.0
     for _ in range(iters):
-        mv = step_batched(packed, v) - b
+        mv = step_batched(packed, v, backend=backend) - b
         fv = mu_max * v - mv
         lam = float(jnp.linalg.norm(fv) / jnp.maximum(
             jnp.linalg.norm(v), 1e-30))
@@ -89,12 +91,14 @@ def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
     return mu_max - lam
 
 
-def estimate_spectral_interval(packed: PackedProblem, iters: int = 60
+def estimate_spectral_interval(packed: PackedProblem, iters: int = 60,
+                               backend: str = "xla"
                                ) -> tuple[float, float]:
     """Safe (μ_min, μ_max) for Chebyshev: power-iteration estimates with
     outward safety margins on both ends."""
-    mu_hi = safe_mu(power_iteration_mu_max(packed, iters))
-    mu_lo_est = power_iteration_mu_min(packed, mu_hi, iters)
+    mu_hi = safe_mu(power_iteration_mu_max(packed, iters, backend=backend))
+    mu_lo_est = power_iteration_mu_min(packed, mu_hi, iters,
+                                       backend=backend)
     spread = mu_hi - mu_lo_est
     mu_lo = mu_lo_est - 0.05 * spread - 0.002
     return mu_lo, mu_hi
@@ -138,9 +142,15 @@ def chebyshev_solve(
 
 def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
                            mu_min: float = 0.0,
-                           num_iters: int = 100) -> jax.Array:
-    """Chebyshev on the packed batched runtime (same exchange as Alg. 1)."""
-    apply_f = lambda th: step_batched(packed, th)
+                           num_iters: int = 100,
+                           backend: str = "xla") -> jax.Array:
+    """Chebyshev on the packed batched runtime (same exchange as Alg. 1).
+    ``backend`` routes each F-application through `step_batched`'s switch
+    — "pallas" runs the fused round kernel per Chebyshev step (the
+    recurrence needs every residual r_k = F(θ_k) − θ_k, so rounds cannot
+    be fused past the α/β update; the fused-solve kernel applies to the
+    plain iteration only)."""
+    apply_f = lambda th: step_batched(packed, th, backend=backend)
     return chebyshev_solve(apply_f, jnp.zeros_like(packed.d), mu_max,
                            mu_min, num_iters)
 
@@ -148,11 +158,12 @@ def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
 def rounds_to_tolerance(packed: PackedProblem, theta_star: jax.Array,
                         tol: float = 1e-6, max_rounds: int = 5000,
                         mu_max: float | None = None,
-                        mu_min: float | None = None
+                        mu_min: float | None = None,
+                        backend: str = "xla"
                         ) -> tuple[int, int]:
     """(plain rounds, chebyshev rounds) to reach relative error ≤ tol."""
     if mu_max is None or mu_min is None:
-        lo, hi = estimate_spectral_interval(packed)
+        lo, hi = estimate_spectral_interval(packed, backend=backend)
         mu_max = hi if mu_max is None else mu_max
         mu_min = lo if mu_min is None else mu_min
     norm_star = float(jnp.linalg.norm(theta_star))
@@ -161,13 +172,13 @@ def rounds_to_tolerance(packed: PackedProblem, theta_star: jax.Array,
     theta = jnp.zeros_like(packed.d)
     plain = max_rounds
     for k in range(max_rounds):
-        theta = step_batched(packed, theta)
+        theta = step_batched(packed, theta, backend=backend)
         if float(jnp.linalg.norm(theta - theta_star)) <= tol * norm_star:
             plain = k + 1
             break
 
     # chebyshev
-    apply_f = lambda th: step_batched(packed, th)
+    apply_f = lambda th: step_batched(packed, th, backend=backend)
     a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
     d = (a_lo + b_hi) / 2.0
     c = (b_hi - a_lo) / 2.0

@@ -198,10 +198,13 @@ class DeKRRSolver:
         for _ in range(iters):
             new = self.step(state)
             if self.config.tol > 0:
-                delta = max(
-                    float(jnp.max(jnp.abs(a - b)))
+                # One fused on-device reduction, ONE host sync per round —
+                # float() inside a per-node loop would block on the device
+                # J times per round.
+                delta = float(jnp.max(jnp.stack([
+                    jnp.max(jnp.abs(a - b))
                     for a, b in zip(new.theta, state.theta)
-                )
+                ])))
                 state = new
                 if delta < self.config.tol:
                     break

@@ -2,9 +2,12 @@
 
 `repro.core` holds the ragged, auditably paper-faithful reference
 implementations; this package holds their production counterparts — packed
-batched execution (with a ``backend="xla" | "pallas"`` switch between the
-vmapped-GEMM round and the fused `repro.kernels.dekrr_step` kernel) and
-SPMD nodes-on-devices execution — pinned to the reference by parity tests.
+batched execution (with a ``backend="xla" | "pallas" | "pallas_fused"``
+switch between the vmapped-GEMM round, the fused per-round
+`repro.kernels.dekrr_step` kernel, and the multi-round
+`repro.kernels.dekrr_solve` kernel that keeps θ VMEM-resident across the
+whole solve) and SPMD nodes-on-devices execution — pinned to the reference
+by parity tests.
 `pack_problem` builds the Eq. 17 auxiliaries batched (one vmapped program
 over the padded [J, D_max, …] layout). See `repro.dist.dekrr_spmd` for the
 design and memory layout.

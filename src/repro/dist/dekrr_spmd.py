@@ -34,22 +34,34 @@ three layers that are pinned to the reference by parity tests
    regression-tested against.
 
 2. **Batched single-host execution** (`step_batched` / `solve_batched`):
-   the Eq. 19 round over all nodes at once, and the full solve as one
-   `lax.scan` over rounds. Two backends run the identical round:
+   the Eq. 19 round over all nodes at once, and the full solve over
+   rounds. Three backends run the identical arithmetic:
 
      * ``backend="xla"``  — one `vmap` of `_node_step` over the node axis;
        XLA fuses it into a handful of batched GEMMs (gather of the [J, K,
-       D_max] neighbor-θ tensor materialized between them).
+       D_max] neighbor-θ tensor materialized between them); the solve is
+       a `lax.scan` of that round.
      * ``backend="pallas"`` — the fused round kernel
        (`repro.kernels.dekrr_step`): grid over nodes, per step the [D_max,
        D_max] G/S/P blocks stream HBM→VMEM while the θ table stays
        VMEM-resident; the neighbor gather runs inside the kernel via the
-       scalar-prefetched slot table. Interpret-mode on CPU, compiled on
+       scalar-prefetched slot table. The solve is still a `lax.scan`, one
+       kernel dispatch per round. Interpret-mode on CPU, compiled on
        TPU; pinned to the XLA path and the ragged reference at rtol 1e-9
        under x64 by `tests/test_kernels_dekrr_step.py`.
+     * ``backend="pallas_fused"`` — the multi-round solve kernel
+       (`repro.kernels.dekrr_solve`): the whole scan moves INSIDE one
+       pallas_call with grid (rounds, nodes); two VMEM θ tables alternate
+       by round parity so θ never round-trips HBM between rounds and the
+       per-round dispatch overhead (the dominant cost at the paper's
+       ρ(M) ≈ 0.95–0.999 round counts) disappears. With ``tol > 0`` the
+       solve runs round-chunked — θ surfaces every `chunk_rounds` rounds
+       for the on-device convergence check. Pinned by
+       `tests/test_kernels_dekrr_solve.py`.
 
    Every beyond-paper acceleration (Chebyshev semi-iteration in
-   `repro.core.acceleration`) builds on this round.
+   `repro.core.acceleration`, its power-iteration spectral estimates)
+   builds on this round via the same ``backend`` switch.
 
 3. **SPMD nodes-on-devices execution** (`make_spmd_solver`): the same round
    under `shard_map` on a 1-D device mesh, one node per device, exchanging
@@ -77,6 +89,7 @@ benchmarks can report paper-comparable communication totals.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Sequence
 
@@ -228,8 +241,30 @@ def pack_problem(solver, *, method: str = "batched",
     if method == "batched" and (
             len(kinds) > 1                       # mixed cos_sin/cos_bias
             or getattr(solver, "_gram_fn", None) is not None):
+        reason = ("the solver has a custom gram_fn"
+                  if getattr(solver, "_gram_fn", None) is not None
+                  else f"the solver mixes feature kinds {sorted(kinds)}")
+        if gram_backend == "pallas":
+            raise ValueError(
+                f"pack_problem(gram_backend='pallas') is impossible here: "
+                f"{reason}, which only the ragged method='aux' build "
+                f"honors — and the aux path computes its Gram blocks "
+                f"through the solver, ignoring gram_backend. Drop "
+                f"gram_backend or use a uniform cos_bias solver without "
+                f"gram_fn.")
+        warnings.warn(
+            f"pack_problem(method='batched') downgraded to method='aux': "
+            f"{reason}. The aux build runs a per-node Python loop over "
+            f"traced computation (re-traces with J) — expect it to be "
+            f"slow at scale.", UserWarning, stacklevel=2)
         method = "aux"          # only the ragged build honors those
     if method == "aux":
+        if gram_backend == "pallas":
+            raise ValueError(
+                "pack_problem(method='aux') copies the solver's ragged "
+                "reference auxiliaries and ignores gram_backend — "
+                "gram_backend='pallas' would silently not be honored. "
+                "Use method='batched' for the Pallas streaming Gram path.")
         return _pack_problem_from_aux(solver)
     staged = _stage_packed_inputs(solver, gram_backend=gram_backend)
     return _finish_packed(staged, _build_packed_aux(**staged))
@@ -530,8 +565,28 @@ def _pack_problem_pernode(solver, *, gram_backend: str | None = None
 
 def pack_theta(packed: PackedProblem,
                theta: Sequence[jax.Array]) -> jax.Array:
-    """Ragged per-node θ list → padded [J, D_max] (inverse of unpack)."""
+    """Ragged per-node θ list → padded [J, D_max] (inverse of unpack).
+
+    Validates each vector against the packed layout — a θ_j longer than
+    its node's D_j (from `packed.node_dims`, or D_max when dims were not
+    recorded) would either crash deep in `jnp.pad` with a negative pad
+    width or silently put mass on padded coordinates the iteration
+    treats as dead.
+    """
+    theta = list(theta)
+    if len(theta) != packed.num_nodes:
+        raise ValueError(
+            f"pack_theta got {len(theta)} θ vectors for a packed problem "
+            f"with {packed.num_nodes} nodes")
     d_max = packed.max_features
+    for j, t in enumerate(theta):
+        limit = (packed.node_dims[j] if packed.node_dims is not None
+                 else d_max)
+        if t.shape[0] > limit:
+            raise ValueError(
+                f"theta[{j}] has {t.shape[0]} coordinates but node {j} "
+                f"has D_j = {limit} (D_max = {d_max}) — θ vectors must "
+                f"fit the packed.node_dims layout")
     return jnp.stack([jnp.pad(t, (0, d_max - t.shape[0])) for t in theta])
 
 
@@ -560,7 +615,18 @@ def _node_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     return g @ (d + s @ theta + coupled)
 
 
-_BACKENDS = ("xla", "pallas")
+_BACKENDS = ("xla", "pallas", "pallas_fused")
+# Backends whose per-round arithmetic is the fused Pallas round kernel.
+_PALLAS_BACKENDS = ("pallas", "pallas_fused")
+# Default tol-check cadence for the fused solve: surfacing θ every round
+# would defeat the whole point of fusing the scan into the kernel.
+_FUSED_CHUNK_DEFAULT = 32
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, "
+                         f"got {backend!r}")
 
 
 @partial(jax.jit, static_argnames=("backend",))
@@ -573,13 +639,13 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
 
     ``backend="xla"`` is the vmapped-GEMM round; ``backend="pallas"`` the
     fused `repro.kernels.dekrr_step` kernel (in-kernel slot-table gather, θ
-    VMEM-resident; interpret-mode on CPU). Both run the same arithmetic and
-    agree at rtol 1e-9 under x64.
+    VMEM-resident; interpret-mode on CPU). ``backend="pallas_fused"`` only
+    differs from "pallas" at the *solve* level (rounds fused into one
+    kernel); a single step runs the same per-round kernel. All run the
+    same arithmetic and agree at rtol 1e-9 under x64.
     """
-    if backend not in _BACKENDS:
-        raise ValueError(f"backend must be one of {_BACKENDS}, "
-                         f"got {backend!r}")
-    if backend == "pallas":
+    _check_backend(backend)
+    if backend in _PALLAS_BACKENDS:
         from repro.kernels.ops import dekrr_step
 
         self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
@@ -591,18 +657,107 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
         packed.nbr_mask)
 
 
-@partial(jax.jit, static_argnames=("num_iters", "backend"))
+def _run_rounds(packed: PackedProblem, theta: jax.Array, num_rounds: int,
+                backend: str) -> jax.Array:
+    """`num_rounds` Eq. 19 rounds from `theta` — the one place the solve
+    backends diverge: "pallas_fused" runs them as ONE pallas_call of the
+    multi-round kernel (θ VMEM-resident across rounds, one dispatch);
+    "xla"/"pallas" scan the per-round step (one dispatch per round)."""
+    if num_rounds == 0:
+        return theta
+    if backend == "pallas_fused":
+        from repro.kernels.ops import dekrr_solve
+
+        self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
+        return dekrr_solve(packed.g, packed.d, packed.s, packed.p, theta,
+                           packed.nbr_idx, self_idx, packed.nbr_mask,
+                           num_rounds=num_rounds)
+
+    def round_fn(th, _):
+        return step_batched(packed, th, backend=backend), None
+
+    theta, _ = lax.scan(round_fn, theta, None, length=num_rounds)
+    return theta
+
+
+@partial(jax.jit, static_argnames=("num_iters", "backend", "tol",
+                                   "chunk_rounds", "return_rounds"))
 def solve_batched(packed: PackedProblem, num_iters: int,
                   theta0: jax.Array | None = None,
-                  backend: str = "xla") -> jax.Array:
-    """Run `num_iters` batched rounds from θ = 0 (or theta0) via lax.scan."""
+                  backend: str = "xla", *, tol: float = 0.0,
+                  chunk_rounds: int | None = None,
+                  return_rounds: bool = False) -> jax.Array:
+    """Run up to `num_iters` batched rounds from θ = 0 (or theta0).
+
+    ``backend="xla"|"pallas"`` scans the per-round step (`lax.scan`, one
+    kernel dispatch per round); ``backend="pallas_fused"`` runs whole
+    blocks of rounds inside one `repro.kernels.dekrr_solve` pallas_call —
+    the θ table stays VMEM-resident across rounds and per-round dispatch
+    overhead disappears. All three agree at rtol 1e-9 under x64.
+
+    ``tol > 0`` enables early stopping on max|θ^{k+c} − θ^k| < tol, checked
+    every `chunk_rounds` rounds (default: 1 for the per-round backends —
+    matching `DeKRRSolver.solve`'s per-round check — and
+    ``_FUSED_CHUNK_DEFAULT`` for "pallas_fused", which only surfaces θ at
+    chunk boundaries). The delta is computed on device inside the scan:
+    no host synchronization per round, one device→host transfer total.
+    ``chunk_rounds`` without tol forces the same round-chunked scan (used
+    by the chunk-equivalence tests and benchmarks).
+
+    ``return_rounds=True`` additionally returns the number of rounds
+    actually run (an int32 scalar array; == num_iters unless tol stopped
+    the solve early).
+    """
+    _check_backend(backend)
+    if tol < 0:
+        raise ValueError(f"tol must be >= 0, got {tol}")
+    if chunk_rounds is not None and chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
     if theta0 is None:
         theta0 = jnp.zeros_like(packed.d)
+    num_iters = int(num_iters)
 
-    def round_fn(theta, _):
-        return step_batched(packed, theta, backend=backend), None
+    if tol == 0.0:
+        # No early stop: straight-line rounds (chunked only on request).
+        if chunk_rounds is None or chunk_rounds >= max(num_iters, 1):
+            theta = _run_rounds(packed, theta0, num_iters, backend)
+        else:
+            n_full, rem = divmod(num_iters, chunk_rounds)
 
-    theta, _ = lax.scan(round_fn, theta0, None, length=num_iters)
+            def chunk_fn(th, _):
+                return _run_rounds(packed, th, chunk_rounds, backend), None
+
+            theta, _ = lax.scan(chunk_fn, theta0, None, length=n_full)
+            theta = _run_rounds(packed, theta, rem, backend)
+        if return_rounds:
+            return theta, jnp.asarray(num_iters, jnp.int32)
+        return theta
+
+    chunk = chunk_rounds if chunk_rounds is not None else (
+        _FUSED_CHUNK_DEFAULT if backend == "pallas_fused" else 1)
+    chunk = min(chunk, max(num_iters, 1))
+    n_full, rem = divmod(num_iters, chunk)
+
+    def cond_fn(carry):
+        _, rounds, converged = carry
+        return jnp.logical_not(converged) & (rounds < n_full * chunk)
+
+    def body_fn(carry):
+        th, rounds, _ = carry
+        new = _run_rounds(packed, th, chunk, backend)
+        delta = jnp.max(jnp.abs(new - th))       # one fused on-device delta
+        return new, rounds + chunk, delta < tol
+
+    theta, rounds, converged = lax.while_loop(
+        cond_fn, body_fn,
+        (theta0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))
+    if rem:
+        theta = lax.cond(converged, lambda th: th,
+                         lambda th: _run_rounds(packed, th, rem, backend),
+                         theta)
+        rounds = jnp.where(converged, rounds, rounds + rem)
+    if return_rounds:
+        return theta, rounds
     return theta
 
 
@@ -626,17 +781,21 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
       * ``"allgather"`` — `lax.all_gather` θ then gather slots locally;
         any topology; J·(J−1)·D_max words per round.
 
-    ``backend`` picks the per-device arithmetic: "xla" runs `_node_step`
-    (identical to `step_batched`); "pallas" runs the fused
-    `repro.kernels.dekrr_step` kernel on the local θ table ``[own θ;
-    received neighbor θs]`` with `self_idx = [0]` — the same kernel as the
-    batched runtime, which is what makes rtol-1e-9 parity hold everywhere.
+    ``backend`` picks the per-device arithmetic through the same switch as
+    `step_batched`/`solve_batched`: "xla" runs `_node_step` (identical to
+    `step_batched`); "pallas" runs the fused `repro.kernels.dekrr_step`
+    kernel on the local θ table ``[own θ; received neighbor θs]`` with
+    `self_idx = [0]` — the same kernel as the batched runtime, which is
+    what makes rtol-1e-9 parity hold everywhere. "pallas_fused" is
+    accepted for plumbing uniformity but runs the per-round kernel too:
+    each SPMD round is bounded by the inter-device θ exchange
+    (ppermute/all_gather), so rounds cannot be fused across the
+    collective — cross-round fusion exists only in the single-core
+    batched runtime (`solve_batched(backend="pallas_fused")`).
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
-    if backend not in _BACKENDS:
-        raise ValueError(f"backend must be one of {_BACKENDS}, "
-                         f"got {backend!r}")
+    _check_backend(backend)
     if axis_name not in mesh.shape:
         raise ValueError(f"mesh has no axis {axis_name!r}: {mesh.shape}")
 
@@ -673,7 +832,7 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
 
             def round_fn(theta, _):
                 nbr_theta = exchange(theta)
-                if backend == "pallas":
+                if backend in _PALLAS_BACKENDS:
                     from repro.kernels.ops import dekrr_step
 
                     # local θ table: row 0 = own θ, rows 1…K = neighbors
@@ -698,7 +857,7 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
             out_specs=spec,
             # jax 0.4.x has no replication rule for pallas_call; every
             # operand/output here is explicitly sharded anyway.
-            check_rep=(backend != "pallas"),
+            check_rep=(backend not in _PALLAS_BACKENDS),
         )
         return sharded(g, d, s, p, nbr_idx, nbr_mask)
 

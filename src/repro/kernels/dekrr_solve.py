@@ -1,0 +1,179 @@
+"""Fused multi-round DeKRR solve (Eq. 19) — one Pallas TPU kernel.
+
+`repro.kernels.dekrr_step` fuses one Eq. 19 round; the solve is still a
+`lax.scan` around it, which means one kernel dispatch per round and one
+HBM round-trip of the θ table per round. The paper's operating points have
+ρ(M) ≈ 0.95–0.999, i.e. hundreds-to-thousands of rounds, so once the round
+itself is fused the per-round launch/dispatch overhead is what's left on
+the table. This kernel runs the *entire* solve in one `pallas_call`:
+
+    grid = (R, J)  — rounds outer, nodes inner (row-major, j fastest):
+      θ0 table    [T, D]        fetched once (constant index map)
+      G_j, S_j    [1, D, D]     streamed per (r, j) step — the index map
+      P_j         [1, K, D, D]  depends only on j, so the Pallas pipeline
+      d_j         [1, D]        double-buffers the HBM→VMEM block streams
+                                across steps and rounds
+      scratch     2 × [T, D]    VMEM θ tables (even/odd round parity)
+
+Jacobi needs two θ tables: every node in round r reads the table round
+r−1 wrote. The two VMEM scratch tables alternate roles by round parity —
+round r reads table r mod 2 and writes table (r+1) mod 2. Both are
+initialized from θ0 at the first grid step so that table rows owned by no
+node (T > J callers) stay at their θ0 values under either parity, exactly
+as the pure-jnp oracle keeps them. θ never touches HBM between rounds;
+the only per-round HBM traffic is the [J, D, D] block re-streaming, which
+is inherent (the blocks do not fit in VMEM for production J·D²) and is
+hidden behind the MXU by the pipeline.
+
+The per-step arithmetic — scalar-prefetched slot-table neighbor gather,
+row-vector dot_general contractions, zero-padding closure — is identical
+to `dekrr_step._dekrr_step_kernel`; the parity suite pins this kernel to
+`solve_batched(backend="xla")` and the ragged reference at rtol 1e-9
+under x64 (`tests/test_kernels_dekrr_solve.py`).
+
+VMEM working set: 2·T·D (θ tables) + 2·(2 + K)·D² (double-buffered
+blocks) + 3·D vectors — for the paper's J ≤ 256, D ≤ 512, K = 4 at f32
+that is ~13.7 MB, within the 16 MB/core budget (J = 256 at D = 512 is
+the ceiling; larger tables need a block-sharded θ layout). All dims must
+be padded by the `ops.dekrr_solve` wrapper: D to lane multiples of 128,
+T to sublane multiples of 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.dekrr_step import dekrr_step_reference
+
+# (M v)ᵀ as a row vector: contract [1, D] with [D', D] over the second axis.
+_ROW_TIMES_MAT_T = (((1,), (1,)), ((), ()))
+
+
+def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                        theta0_ref, g_ref, d_ref, s_ref, p_ref, out_ref,
+                        tab_even_ref, tab_odd_ref):
+    """One node's Eq. 19 update at grid position (round, node).
+
+    Scalar prefetch (SMEM): nbr_idx [J, K] int32, self_idx [J] int32,
+    nbr_mask [J, K] int32. Tensor operands: theta0 [T, D] (full table,
+    fetched once), g/s [1, D, D], d [1, D], p [1, K, D, D]; out [1, D]
+    (node j's θ row, overwritten every round — the last round wins).
+    Scratch: tab_even/tab_odd [T, D] VMEM θ tables, alternating by round
+    parity.
+    """
+    r = pl.program_id(0)
+    j = pl.program_id(1)
+    num_slots = nbr_idx_ref.shape[1]
+    dtype = theta0_ref.dtype
+
+    @pl.when(jnp.logical_and(r == 0, j == 0))
+    def _init():
+        # Both parities start from θ0 so rows no node owns stay at θ0.
+        tab_even_ref[...] = theta0_ref[...]
+        tab_odd_ref[...] = theta0_ref[...]
+
+    def row_times(row, mat):
+        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+        return jax.lax.dot_general(
+            row, mat, _ROW_TIMES_MAT_T,
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=dtype)
+
+    def round_body(read_ref, write_ref):
+        theta_self = read_ref[pl.ds(self_idx_ref[j], 1), :]      # [1, D]
+        acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
+        for k in range(num_slots):                               # K unroll
+            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+            mask_k = nbr_mask_ref[j, k].astype(dtype)
+            acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ
+        new = row_times(acc, g_ref[0])                           # G (…)
+        write_ref[pl.ds(self_idx_ref[j], 1), :] = new
+        out_ref[...] = new
+
+    even_round = r % 2 == 0
+
+    @pl.when(even_round)
+    def _even():
+        round_body(tab_even_ref, tab_odd_ref)
+
+    @pl.when(jnp.logical_not(even_round))
+    def _odd():
+        round_body(tab_odd_ref, tab_even_ref)
+
+
+def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
+                       p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
+                       self_idx: jax.Array, nbr_mask: jax.Array, *,
+                       num_rounds: int,
+                       interpret: bool = False) -> jax.Array:
+    """Raw pallas_call. All dims must already be padded/aligned:
+
+      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
+      of 128; theta [T, D] with T a multiple of 8; nbr_idx [J, K] int32
+      rows into theta; self_idx [J] int32 (distinct rows); nbr_mask [J, K]
+      int32; num_rounds ≥ 1 static.
+    Returns the θ rows after `num_rounds` Jacobi rounds, [J, D] (row r for
+    node r — callers with T ≠ J re-assemble their table themselves).
+    """
+    j_nodes, d_feat = d.shape
+    k_slots = p.shape[1]
+    t_rows = theta.shape[0]
+    assert d_feat % 128 == 0 and t_rows % 8 == 0, (d_feat, t_rows)
+    assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
+    assert num_rounds >= 1, "num_rounds must be a positive static int"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,          # nbr_idx, self_idx, nbr_mask
+        grid=(num_rounds, j_nodes),
+        in_specs=[
+            pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # θ0
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, k_slots, d_feat, d_feat),
+                         lambda r, j, *_: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
+        ],
+    )
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    return pl.pallas_call(
+        _dekrr_solve_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+        cost_estimate=pl.CostEstimate(
+            flops=num_rounds * j_nodes * flops_per_node,
+            bytes_accessed=(t_rows * d_feat            # θ0, fetched once
+                            + num_rounds * j_nodes
+                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            ) * theta.dtype.itemsize,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(nbr_idx, self_idx, nbr_mask, theta, g, d, s, p)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rounds", "interpret"))
+def dekrr_solve_reference(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                          *, num_rounds: int, interpret: bool = False):
+    """Pure-jnp oracle with the raw kernel's exact contract: scan the
+    single-round oracle, scattering each round's new rows back into the
+    θ table at `self_idx` (rows owned by no node stay at θ0) — what
+    `tests/test_kernels_dekrr_solve.py` pins the kernel against before
+    any repro.dist plumbing is involved."""
+    del interpret
+
+    def one_round(table, _):
+        new = dekrr_step_reference(g, d, s, p, table, nbr_idx, self_idx,
+                                   nbr_mask)
+        return table.at[self_idx].set(new), None
+
+    table, _ = jax.lax.scan(one_round, theta, None, length=num_rounds)
+    return table[self_idx]

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.rff import FeatureMap
+from repro.kernels.dekrr_solve import dekrr_solve_pallas
 from repro.kernels.dekrr_step import dekrr_step_pallas
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_gram import rff_gram_pallas
@@ -121,6 +122,26 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return out.astype(out_dtype)
 
 
+def _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask):
+    """Shared operand padding for the DeKRR round/solve kernels: D to lane
+    multiples of 128, the θ table to sublane multiples of 8, the slot axis
+    to K ≥ 1 (an all-masked zero-P slot for edgeless graphs), index/mask
+    tables coerced to int32. One helper so `dekrr_step` and `dekrr_solve`
+    can never drift apart on the operand layout."""
+    j_nodes = d.shape[0]
+    g_p = _pad_to(_pad_to(g, 1, 128), 2, 128)
+    s_p = _pad_to(_pad_to(s, 1, 128), 2, 128)
+    d_p = _pad_to(d, 1, 128)
+    p_p = _pad_to(_pad_to(p, 2, 128), 3, 128)
+    if p_p.shape[1] == 0:                       # K = 0 (edgeless graph)
+        p_p = jnp.zeros((j_nodes, 1) + p_p.shape[2:], p_p.dtype)
+        nbr_idx = jnp.zeros((j_nodes, 1), jnp.int32)
+        nbr_mask = jnp.zeros((j_nodes, 1), jnp.int32)
+    theta_p = _pad_to(_pad_to(theta, 1, 128), 0, 8)
+    return (g_p, d_p, s_p, p_p, theta_p, nbr_idx.astype(jnp.int32),
+            (nbr_mask != 0).astype(jnp.int32))
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
@@ -140,23 +161,48 @@ def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     """
     if interpret is None:
         interpret = _interpret_default()
-    j_nodes, d_feat = d.shape
+    d_feat = d.shape[1]
 
-    g_p = _pad_to(_pad_to(g, 1, 128), 2, 128)
-    s_p = _pad_to(_pad_to(s, 1, 128), 2, 128)
-    d_p = _pad_to(d, 1, 128)
-    p_p = _pad_to(_pad_to(p, 2, 128), 3, 128)
-    if p_p.shape[1] == 0:                       # K = 0 (edgeless graph)
-        p_p = jnp.zeros((j_nodes, 1) + p_p.shape[2:], p_p.dtype)
-        nbr_idx = jnp.zeros((j_nodes, 1), jnp.int32)
-        nbr_mask = jnp.zeros((j_nodes, 1), jnp.int32)
-    theta_p = _pad_to(_pad_to(theta, 1, 128), 0, 8)
-
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
     out = dekrr_step_pallas(
         g_p, d_p, s_p, p_p, theta_p,
-        nbr_idx.astype(jnp.int32), self_idx.astype(jnp.int32),
-        (nbr_mask != 0).astype(jnp.int32),
+        nbr_idx_p, self_idx.astype(jnp.int32), nbr_mask_p,
         interpret=interpret)
+    return out[:, :d_feat]
+
+
+@partial(jax.jit, static_argnames=("num_rounds", "interpret"))
+def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
+                theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
+                nbr_mask: jax.Array, *, num_rounds: int,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused multi-round Eq. 19 solve: `num_rounds` Jacobi rounds in ONE
+    pallas_call, θ tables VMEM-resident across rounds (grid = (R, J),
+    `repro.kernels.dekrr_solve`).
+
+    Same operand contract as `dekrr_step` — g/s [J, D, D], d [J, D],
+    p [J, K, D, D], theta [T, D] θ table, nbr_idx [J, K] / self_idx [J]
+    rows into the table, nbr_mask [J, K] — plus static `num_rounds`.
+    Returns the [J, D] θ rows after the last round; table rows owned by
+    no node stay at their θ0 values throughout (oracle semantics).
+
+    Pads exactly like `dekrr_step` (D to 128 lanes, table to 8 sublanes,
+    slot axis to K ≥ 1) and slices the padding back off; `num_rounds=0`
+    returns the `self_idx` rows of θ unchanged.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat = d.shape[1]
+    self_idx = self_idx.astype(jnp.int32)
+    if num_rounds == 0:
+        return theta[self_idx]
+
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    out = dekrr_solve_pallas(
+        g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, self_idx, nbr_mask_p,
+        num_rounds=num_rounds, interpret=interpret)
     return out[:, :d_feat]
 
 

@@ -1,10 +1,12 @@
 """Property tests for the packed runtime: pack/unpack round-trips, slot-table
-invariants, the §II-C comm cost model, and the batched `pack_problem`
-regression (no per-node tracing; bit-identical to the per-node replay)."""
+invariants, the §II-C comm cost model, the batched `pack_problem`
+regression (no per-node tracing; bit-identical to the per-node replay),
+and the pack downgrade warn/raise contract."""
 import types
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from conftest import cached_fmaps, cached_split
@@ -224,3 +226,50 @@ def test_batched_pack_matches_reference_aux_pack():
     g_b, g_l = np.asarray(batched.g), np.asarray(legacy.g)
     np.testing.assert_allclose(g_b, g_l, rtol=1e-6,
                                atol=1e-9 * np.max(np.abs(g_l)))
+
+
+# --------------------------------------------------------------------------
+# pack_problem downgrade contract: warn, never silently ignore gram_backend
+# --------------------------------------------------------------------------
+def _gram_fn_solver():
+    """A solver the batched build cannot honor (custom gram_fn)."""
+    topo = circulant(4, (1,))
+    ds, train, _ = cached_split("air_quality", 4, subsample=300, seed=0)
+    fmaps = cached_fmaps("air_quality", 4, (8, 10, 8, 10),
+                         subsample=300, seed=0)
+    n = sum(t.num_samples for t in train)
+    gram_fn = lambda fm, x: (lambda z: z @ z.T)(fm(x))
+    return DeKRRSolver(topo, fmaps, train,
+                       DeKRRConfig(lam=1e-6, c_nei=0.02 * n),
+                       gram_fn=gram_fn)
+
+
+def test_pack_problem_warns_on_silent_aux_downgrade():
+    """method="batched" with a gram_fn solver must fall back to the aux
+    build LOUDLY — the downgrade swaps a vmapped one-trace program for a
+    per-node Python loop."""
+    solver = _gram_fn_solver()
+    with pytest.warns(UserWarning, match="downgraded to method='aux'"):
+        packed = pack_problem(solver)
+    # the downgrade itself still works and records layout metadata
+    assert packed.node_dims == (8, 10, 8, 10)
+
+
+def test_pack_problem_aux_explicitly_requested_does_not_warn():
+    import warnings as _w
+    solver = _gram_fn_solver()
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        pack_problem(solver, method="aux")
+    assert not [c for c in caught if "downgraded" in str(c.message)], \
+        "explicit method='aux' is not a downgrade and must not warn"
+
+
+def test_pack_problem_raises_when_pallas_gram_would_be_ignored():
+    """gram_backend="pallas" on a path that cannot run the streaming Gram
+    kernel must raise, never silently compute the blocks elsewhere."""
+    solver = _gram_fn_solver()
+    with pytest.raises(ValueError, match="gram_fn"):
+        pack_problem(solver, gram_backend="pallas")
+    with pytest.raises(ValueError, match="ignores gram_backend"):
+        pack_problem(solver, method="aux", gram_backend="pallas")

@@ -1,0 +1,306 @@
+"""Parity + regression suite for the fused multi-round DeKRR solve kernel
+(interpret mode) and the bugfixes that rode along with it.
+
+The solve-level pins, all on CPU at rtol 1e-9 under x64:
+
+  ragged reference (`DeKRRSolver.step` iterated)
+    == batched XLA solve (`solve_batched(backend="xla")`)
+    == fused multi-round Pallas solve (`solve_batched(backend="pallas_fused")`,
+       ONE `repro.kernels.dekrr_solve` pallas_call for all rounds)
+
+across circulant/star/ER/complete/J=1 graphs, plus the raw kernel against
+its pure-jnp oracle (θ-table indirection, unowned static rows, masked
+slots, round parity), round-chunked execution and tol early-stop
+equivalence, and regressions for the backend plumbing in
+`repro.core.acceleration`, the `DeKRRSolver.solve` fused tol delta, and
+the `pack_theta` length validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from conftest import cached_fmaps, cached_split
+from repro.core import (DeKRRConfig, DeKRRSolver, Topology, circulant,
+                        complete, erdos_renyi, star)
+from repro.core.acceleration import (chebyshev_solve_packed,
+                                     estimate_spectral_interval,
+                                     power_iteration_mu_max,
+                                     power_iteration_mu_min,
+                                     rounds_to_tolerance)
+from repro.dist import pack_problem, pack_theta, solve_batched
+from repro.kernels import ops
+from repro.kernels.dekrr_solve import dekrr_solve_reference
+
+TOL = dict(rtol=1e-9, atol=1e-12)
+
+
+def _solver(topo, dims, sub=400, seed=0, tol=0.0, num_iters=300):
+    j = topo.num_nodes
+    ds, train, _ = cached_split("air_quality", j, subsample=sub, seed=seed)
+    fmaps = cached_fmaps("air_quality", j, tuple(dims),
+                         subsample=sub, seed=seed)
+    n = sum(t.num_samples for t in train)
+    return DeKRRSolver(topo, fmaps, train,
+                       DeKRRConfig(lam=1e-6, c_nei=0.02 * n, tol=tol,
+                                   num_iters=num_iters))
+
+
+def _single_node_topology():
+    return Topology(adjacency=np.zeros((1, 1), dtype=bool))
+
+
+CASES = [
+    # (topology, ragged D_j set) — same sweep as the per-round kernel suite:
+    # both slot layouts (circulant ppermute order, generic padded adjacency)
+    # and every degree extreme, now iterated for a whole solve.
+    (circulant(10, (1, 2)), [8, 12, 16, 20, 24, 8, 12, 16, 20, 24]),
+    (star(5), [6, 8, 10, 12, 14]),                  # worst degree imbalance
+    (erdos_renyi(7, 0.5, seed=1), [9, 13, 9, 13, 9, 13, 9]),
+    (complete(5), [7, 9, 11, 9, 7]),                # full graph
+    (circulant(2, (1,)), [8, 12]),                  # single neighbor
+    (_single_node_topology(), [10]),                # J=1, no neighbors
+]
+
+ROUNDS = 25
+
+
+@pytest.mark.parametrize("topo,dims", CASES,
+                         ids=[f"J{t.num_nodes}_deg{t.max_degree}"
+                              for t, _ in CASES])
+def test_fused_solve_matches_xla_and_ragged_reference(topo, dims):
+    solver = _solver(topo, dims)
+    packed = pack_problem(solver)
+    th_xla = solve_batched(packed, ROUNDS, backend="xla")
+    th_fused = solve_batched(packed, ROUNDS, backend="pallas_fused")
+    np.testing.assert_allclose(np.asarray(th_fused), np.asarray(th_xla),
+                               **TOL)
+    state = solver.init_state()
+    for _ in range(ROUNDS):
+        state = solver.step(state)
+    for j in range(topo.num_nodes):
+        np.testing.assert_allclose(np.asarray(th_fused[j][:dims[j]]),
+                                   np.asarray(state.theta[j]), **TOL)
+        # padding must stay identically zero through the fused solve too
+        assert not np.any(np.asarray(th_fused[j][dims[j]:]))
+
+
+@given(j_nodes=st.integers(1, 5), k_slots=st.integers(0, 3),
+       d_feat=st.integers(1, 24), extra_rows=st.integers(0, 3),
+       num_rounds=st.integers(0, 6), seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_raw_solve_kernel_matches_oracle_random_shapes(
+        j_nodes, k_slots, d_feat, extra_rows, num_rounds, seed):
+    """Property: the fused solve equals the scanned single-round oracle
+    for arbitrary (unaligned) shapes, arbitrary θ-table indirection
+    (T ≥ J rows, self_idx a permutation — unowned rows must stay at θ0
+    under either round parity), arbitrary slot masks, and any round
+    count including 0."""
+    rng = np.random.default_rng(seed)
+    t_rows = j_nodes + extra_rows
+    scale = 0.5 / max(d_feat, 1)        # keep iterates from blowing up
+    g = jnp.asarray(rng.normal(size=(j_nodes, d_feat, d_feat))) * scale
+    d = jnp.asarray(rng.normal(size=(j_nodes, d_feat)))
+    s = jnp.asarray(rng.normal(size=(j_nodes, d_feat, d_feat))) * scale
+    p = jnp.asarray(
+        rng.normal(size=(j_nodes, k_slots, d_feat, d_feat))) * scale
+    theta = jnp.asarray(rng.normal(size=(t_rows, d_feat)))
+    nbr_idx = jnp.asarray(
+        rng.integers(0, t_rows, (j_nodes, k_slots)), jnp.int32)
+    self_idx = jnp.asarray(rng.permutation(t_rows)[:j_nodes], jnp.int32)
+    nbr_mask = jnp.asarray(
+        rng.integers(0, 2, (j_nodes, k_slots)), jnp.int32)
+
+    got = ops.dekrr_solve(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                          num_rounds=num_rounds, interpret=True)
+    want = dekrr_solve_reference(g, d, s, p, theta, nbr_idx, self_idx,
+                                 nbr_mask, num_rounds=num_rounds)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-10)
+
+
+def test_chunked_solve_is_bit_identical_to_unchunked():
+    """Round-chunking only changes WHERE the pallas_call boundaries fall,
+    never the per-round arithmetic — chunked and unchunked fused solves
+    must agree bit-for-bit (incl. a chunk size that does not divide the
+    round count), and the per-round backends must stay at rtol 1e-9."""
+    topo = circulant(8, (1, 2))
+    solver = _solver(topo, [10, 12, 14, 16, 10, 12, 14, 16])
+    packed = pack_problem(solver)
+    fused = solve_batched(packed, 30, backend="pallas_fused")
+    for chunk in (1, 7, 30, 64):
+        chunked = solve_batched(packed, 30, backend="pallas_fused",
+                                chunk_rounds=chunk)
+        np.testing.assert_array_equal(np.asarray(chunked),
+                                      np.asarray(fused),
+                                      err_msg=f"chunk_rounds={chunk}")
+    th_xla = solve_batched(packed, 30, backend="xla", chunk_rounds=7)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(th_xla), **TOL)
+
+
+def test_tol_early_stop_agrees_across_backends():
+    """With the same check cadence all three backends must stop after the
+    SAME number of rounds and land on the same θ (the fused kernel cannot
+    change the iteration's contraction)."""
+    topo = circulant(6, (1,))
+    solver = _solver(topo, [10, 14, 10, 14, 10, 14])
+    packed = pack_problem(solver)
+    results = {
+        backend: solve_batched(packed, 2000, backend=backend, tol=1e-8,
+                               chunk_rounds=10, return_rounds=True)
+        for backend in ("xla", "pallas", "pallas_fused")
+    }
+    th_ref, rounds_ref = results["xla"]
+    assert 0 < int(rounds_ref) < 2000, "tol never triggered — bad test"
+    for backend, (th, rounds) in results.items():
+        assert int(rounds) == int(rounds_ref), backend
+        np.testing.assert_allclose(np.asarray(th), np.asarray(th_ref),
+                                   err_msg=backend, **TOL)
+
+
+def test_tol_early_stop_matches_reference_solver():
+    """`solve_batched(tol=…, chunk_rounds=1)` checks max|Δθ| every round —
+    exactly `DeKRRSolver.solve`'s (fixed) early-stop loop: same round
+    count, same θ."""
+    topo = circulant(6, (1,))
+    dims = [10, 14, 10, 14, 10, 14]
+    tol = 1e-7
+    solver = _solver(topo, dims, tol=tol, num_iters=2000)
+    packed = pack_problem(solver)
+    state = solver.solve()
+    assert 0 < state.iteration < 2000, "tol never triggered — bad test"
+    theta, rounds = solve_batched(packed, 2000, backend="pallas_fused",
+                                  tol=tol, chunk_rounds=1,
+                                  return_rounds=True)
+    assert int(rounds) == state.iteration
+    for j in range(topo.num_nodes):
+        np.testing.assert_allclose(np.asarray(theta[j][:dims[j]]),
+                                   np.asarray(state.theta[j]), **TOL)
+
+
+def test_solve_batched_without_tol_runs_all_rounds():
+    topo = circulant(2, (1,))
+    solver = _solver(topo, [8, 12])
+    packed = pack_problem(solver)
+    _, rounds = solve_batched(packed, 12, backend="pallas_fused",
+                              return_rounds=True)
+    assert int(rounds) == 12
+
+
+def test_solve_batched_rejects_bad_arguments():
+    topo = circulant(2, (1,))
+    solver = _solver(topo, [8, 12])
+    packed = pack_problem(solver)
+    with pytest.raises(ValueError, match="backend"):
+        solve_batched(packed, 5, backend="cuda_fused")
+    with pytest.raises(ValueError, match="tol"):
+        solve_batched(packed, 5, tol=-1e-6)
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        solve_batched(packed, 5, chunk_rounds=0)
+
+
+# --------------------------------------------------------------------------
+# Bugfix regressions: acceleration backend plumbing
+# --------------------------------------------------------------------------
+def test_acceleration_kernels_honor_backend_switch():
+    """`power_iteration_mu_max` / `power_iteration_mu_min` /
+    `chebyshev_solve_packed` / `rounds_to_tolerance` used to hardcode the
+    default XLA round — the backend switch was dead. Every one of them
+    must now route through `step_batched(backend=…)` and agree with the
+    XLA path at solver parity."""
+    topo = circulant(6, (1,))
+    solver = _solver(topo, [10, 14, 10, 14, 10, 14])
+    packed = pack_problem(solver)
+
+    mu_hi_x = power_iteration_mu_max(packed, iters=15)
+    mu_hi_p = power_iteration_mu_max(packed, iters=15, backend="pallas")
+    np.testing.assert_allclose(mu_hi_p, mu_hi_x, rtol=1e-9)
+
+    mu_lo_x = power_iteration_mu_min(packed, mu_hi_x, iters=15)
+    mu_lo_p = power_iteration_mu_min(packed, mu_hi_x, iters=15,
+                                     backend="pallas")
+    np.testing.assert_allclose(mu_lo_p, mu_lo_x, rtol=1e-9, atol=1e-12)
+
+    lo, hi = estimate_spectral_interval(packed, iters=15)
+    cheb_x = chebyshev_solve_packed(packed, hi, lo, num_iters=30)
+    cheb_p = chebyshev_solve_packed(packed, hi, lo, num_iters=30,
+                                    backend="pallas")
+    np.testing.assert_allclose(np.asarray(cheb_p), np.asarray(cheb_x),
+                               **TOL)
+
+    theta_star = solve_batched(packed, 3000)
+    plain_x, cheb_rounds_x = rounds_to_tolerance(
+        packed, theta_star, tol=1e-5, max_rounds=800,
+        mu_max=hi, mu_min=lo)
+    plain_p, cheb_rounds_p = rounds_to_tolerance(
+        packed, theta_star, tol=1e-5, max_rounds=800,
+        mu_max=hi, mu_min=lo, backend="pallas")
+    assert (plain_p, cheb_rounds_p) == (plain_x, cheb_rounds_x)
+
+
+def test_acceleration_rejects_unknown_backend():
+    topo = circulant(2, (1,))
+    solver = _solver(topo, [8, 12])
+    packed = pack_problem(solver)
+    with pytest.raises(ValueError, match="backend"):
+        power_iteration_mu_max(packed, iters=2, backend="cuda")
+
+
+# --------------------------------------------------------------------------
+# Bugfix regressions: DeKRRSolver.solve fused tol delta
+# --------------------------------------------------------------------------
+def test_solver_tol_computes_one_fused_delta(monkeypatch):
+    """The tol check must force a single host sync per round (one fused
+    max-of-maxes), not one per node: count device→host scalar pulls by
+    intercepting float() conversions via jnp.max's return value."""
+    topo = circulant(4, (1,))
+    dims = [8, 10, 8, 10]
+    solver = _solver(topo, dims, tol=1e-7, num_iters=500)
+
+    import repro.core.dekrr as dekrr_mod
+    pulls = 0
+    real_float = float
+
+    def counting_float(x):
+        nonlocal pulls
+        if isinstance(x, jax.Array):
+            pulls += 1
+        return real_float(x)
+
+    monkeypatch.setattr(dekrr_mod, "float", counting_float, raising=False)
+    state = solver.solve()
+    assert 0 < state.iteration < 500, "tol never triggered — bad test"
+    assert pulls == state.iteration, \
+        f"{pulls} host syncs for {state.iteration} rounds (J={topo.num_nodes})"
+
+    # and the early-stopped answer still matches the run-all-rounds answer
+    ref = _solver(topo, dims, tol=0.0).solve(num_iters=state.iteration)
+    for a, b in zip(state.theta, ref.theta):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# Bugfix regressions: pack_theta length validation
+# --------------------------------------------------------------------------
+def test_pack_theta_raises_clear_error_on_oversized_theta():
+    topo = circulant(4, (1,))
+    dims = [8, 10, 8, 10]
+    solver = _solver(topo, dims)
+    packed = pack_problem(solver)
+
+    good = [jnp.zeros(dj) for dj in dims]
+    assert pack_theta(packed, good).shape == (4, 10)
+
+    bad = list(good)
+    bad[2] = jnp.zeros(11)                      # exceeds even D_max
+    with pytest.raises(ValueError, match=r"theta\[2\].*11.*D_j = 8"):
+        pack_theta(packed, bad)
+
+    sneaky = list(good)
+    sneaky[0] = jnp.zeros(10)                   # fits D_max, exceeds D_0
+    with pytest.raises(ValueError, match=r"theta\[0\].*D_j = 8"):
+        pack_theta(packed, sneaky)
+
+    with pytest.raises(ValueError, match="3 θ vectors.*4 nodes"):
+        pack_theta(packed, good[:3])

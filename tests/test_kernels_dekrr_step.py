@@ -181,18 +181,21 @@ SPMD_PALLAS_SCRIPT = textwrap.dedent("""
 
     mesh = Mesh(np.array(jax.devices()), ("nodes",))
     for mode in ("ppermute", "allgather"):
-        got = make_spmd_solver(mesh, "nodes", mode, backend="pallas")(
-            packed, 25)
-        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                                   rtol=1e-9, atol=1e-12)
+        for backend in ("pallas", "pallas_fused"):
+            got = make_spmd_solver(mesh, "nodes", mode, backend=backend)(
+                packed, 25)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-9, atol=1e-12)
     print("SPMD-PALLAS-PARITY-OK")
 """)
 
 
 def test_spmd_pallas_backend_parity_on_4_devices():
     """The SPMD per-device node program runs the same fused kernel on its
-    local [1 + K, D_max] θ table; subprocess so the forced device count
-    does not leak into this session."""
+    local [1 + K, D_max] θ table (backend="pallas_fused" routes through
+    the same switch — per-device rounds are bounded by the collective, so
+    it runs the per-round kernel too); subprocess so the forced device
+    count does not leak into this session."""
     proc = subprocess.run(
         [sys.executable, "-c", SPMD_PALLAS_SCRIPT.format(J=4)],
         capture_output=True, text=True, timeout=600,
