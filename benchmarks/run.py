@@ -21,12 +21,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (ablation_ddrf, chebyshev_bench, comm_costs,
-                            convergence_curve, kernel_bench,
-                            paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
-                            paper_fig3_imbalanced, paper_fig4_pernode,
-                            paper_table2, roofline, solve_bench,
-                            step_kernel_bench)
+    from benchmarks import (ablation_ddrf, async_gossip_bench,
+                            chebyshev_bench, comm_costs, convergence_curve,
+                            kernel_bench, paper_fig1_noniid_y,
+                            paper_fig2_noniid_xnorm, paper_fig3_imbalanced,
+                            paper_fig4_pernode, paper_table2, roofline,
+                            solve_bench, step_kernel_bench)
 
     suites = {
         "table2": paper_table2.run,
@@ -41,6 +41,7 @@ def main() -> None:
         "kernel": kernel_bench.run,
         "step": step_kernel_bench.run,
         "solve": solve_bench.run,
+        "async": async_gossip_bench.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

@@ -1,4 +1,8 @@
 """Paper core: DeKRR-DDRF (Yang et al., TNNLS 2024)."""
+from repro.core.async_gossip import (AsyncGossipConfig, AsyncGossipResult,
+                                     activation_mask, activation_masks,
+                                     async_gossip_solve, censor_schedule,
+                                     edge_list, edges_from_slot_table)
 from repro.core.baselines import (CentralizedKRR, CentralizedRF, DKLA,
                                   DKLAConfig, dkla_ddrf_feature_map)
 from repro.core.ddrf import (energy_scores, leverage_scores, select_features)
@@ -11,9 +15,12 @@ from repro.core.rff import (FeatureMap, featurize, gaussian_kernel,
                             sample_rff)
 
 __all__ = [
-    "AuxMatrices", "CentralizedKRR", "CentralizedRF", "DKLA", "DKLAConfig",
+    "AsyncGossipConfig", "AsyncGossipResult", "AuxMatrices",
+    "CentralizedKRR", "CentralizedRF", "DKLA", "DKLAConfig",
     "DeKRRConfig", "DeKRRSolver", "DeKRRState", "FeatureMap", "NodeData",
-    "Topology", "circulant", "complete", "dkla_ddrf_feature_map",
+    "Topology", "activation_mask", "activation_masks",
+    "async_gossip_solve", "censor_schedule", "circulant", "complete",
+    "dkla_ddrf_feature_map", "edge_list", "edges_from_slot_table",
     "energy_scores", "erdos_renyi", "featurize", "gaussian_kernel",
     "leverage_scores", "mse", "prop1_required_c_self", "ring", "rse",
     "sample_rff", "select_features", "star",

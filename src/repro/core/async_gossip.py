@@ -1,0 +1,282 @@
+"""Asynchronous gossip DeKRR — randomized activation, staleness, censoring.
+
+The paper's Eq. 19 consensus solve is a synchronous Jacobi iteration: every
+node updates every round behind a global barrier. COKE (arXiv:2001.10133)
+shows the barrier is not load-bearing — randomized node activation plus
+communication censoring preserves convergence at a fraction of the
+communication. This module is the *reference* layer of that variant: the
+shared randomness (activation masks, censor thresholds) every runtime must
+sample identically, and a ragged per-node ground-truth solver mirroring
+`DeKRRSolver`'s auditable style. The packed/batched and SPMD production
+counterparts live in `repro.dist.async_gossip` and are pinned to this one
+by `tests/test_async_gossip.py` (rtol 1e-9 under x64).
+
+One asynchronous round r (all runtimes, exactly this order):
+
+  1. **Activate.** Sample the round's activation mask from the PRNG key:
+     ``gossip="bernoulli"`` draws each node iid Bernoulli(prob);
+     ``gossip="edge"`` draws ONE edge uniformly and activates its two
+     endpoints (classic pairwise gossip). The mask depends only on
+     (key, r), so every layer — and every device of the SPMD runtime —
+     sees the same draw.
+  2. **Update.** Active nodes run the Eq. 19 update against their
+     *receive buffers* — the last θ each neighbor actually broadcast,
+     NOT the neighbor's current iterate (per-edge staleness). Inactive
+     nodes keep θ unchanged.
+  3. **Censor.** An active node broadcasts its new θ unless censoring is
+     on (``censor_tau > 0``) and ‖θ_j^new − θ_j^sent‖_∞ ≤ τ_r, where
+     θ_j^sent is the last value j put on the wire and
+     τ_r = censor_tau · censor_decay^r is the decaying COKE threshold.
+  4. **Deliver.** A broadcast lands in the receive buffers of the
+     sender's neighbors — all of them under "bernoulli", only the other
+     edge endpoint under "edge". Buffers of non-broadcasting senders are
+     untouched (the staleness invariant the property suite pins).
+
+With prob = 1.0, gossip="bernoulli" and censoring off, every node is
+active and broadcasts every round, every buffer holds the previous
+round's iterate, and the recursion IS the synchronous Jacobi iteration —
+the runtimes reproduce `repro.dist.solve_batched` bit-for-bit there.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_GOSSIP_MODES = ("bernoulli", "edge")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncGossipConfig:
+    """Randomized-activation schedule shared by every async runtime.
+
+    Attributes:
+      prob:         per-node activation probability (``gossip="bernoulli"``
+                    only; 1.0 = every node active, the synchronous limit).
+      gossip:       "bernoulli" (iid node activation, COKE-style broadcast
+                    delivery) or "edge" (one uniform edge per round,
+                    pairwise delivery along that edge only).
+      censor_tau:   initial communication-censoring threshold τ_0; 0.0
+                    disables censoring (every active node broadcasts).
+      censor_decay: geometric decay of the threshold, τ_r = τ_0 · decay^r.
+
+    Frozen and hashable so the packed/SPMD solvers can take it as a static
+    jit argument.
+    """
+
+    prob: float = 1.0
+    gossip: str = "bernoulli"
+    censor_tau: float = 0.0
+    censor_decay: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.prob <= 1.0:
+            raise ValueError(f"prob must be in (0, 1], got {self.prob}")
+        if self.gossip not in _GOSSIP_MODES:
+            raise ValueError(f"gossip must be one of {_GOSSIP_MODES}, "
+                             f"got {self.gossip!r}")
+        if self.censor_tau < 0.0:
+            raise ValueError(f"censor_tau must be >= 0, "
+                             f"got {self.censor_tau}")
+        if not 0.0 < self.censor_decay <= 1.0:
+            raise ValueError(f"censor_decay must be in (0, 1], "
+                             f"got {self.censor_decay}")
+
+    @property
+    def censored(self) -> bool:
+        return self.censor_tau > 0.0
+
+    @property
+    def is_synchronous(self) -> bool:
+        """True iff the schedule degenerates to the Jacobi iteration."""
+        return (self.prob == 1.0 and self.gossip == "bernoulli"
+                and not self.censored)
+
+
+# --------------------------------------------------------------------------
+# Shared randomness: every layer (ragged / packed / SPMD) samples THESE
+# --------------------------------------------------------------------------
+def edge_list(topology) -> np.ndarray:
+    """Canonical undirected edge list [E, 2] with i < j, lexicographically
+    sorted — the enumeration `gossip="edge"` sampling indexes into. The
+    packed runtime derives the identical list from its slot table
+    (`edges_from_slot_table`), which is what keeps edge draws consistent
+    across layers."""
+    edges = np.asarray(topology.edges, dtype=np.int32).reshape(-1, 2)
+    return edges[np.lexsort((edges[:, 1], edges[:, 0]))]
+
+
+def edges_from_slot_table(nbr_idx: np.ndarray,
+                          nbr_mask: np.ndarray) -> np.ndarray:
+    """`edge_list` reconstructed from a packed neighbor slot table.
+
+    np.unique sorts rows lexicographically, so this matches `edge_list`'s
+    ordering bit-for-bit for the same topology — required for identical
+    `gossip="edge"` draws between the core reference (which holds the
+    Topology) and the packed/SPMD runtimes (which hold only the table).
+    """
+    nbr_idx = np.asarray(nbr_idx)
+    nbr_mask = np.asarray(nbr_mask)
+    j_nodes, k_slots = nbr_idx.shape
+    senders = np.broadcast_to(
+        np.arange(j_nodes, dtype=np.int32)[:, None], (j_nodes, k_slots))
+    live = nbr_mask != 0
+    pairs = np.stack([senders[live], nbr_idx[live].astype(np.int32)],
+                     axis=1)
+    pairs = np.sort(pairs, axis=1)          # undirected: (min, max)
+    if pairs.size == 0:
+        return np.zeros((0, 2), dtype=np.int32)
+    return np.unique(pairs, axis=0)
+
+
+def activation_mask(key: jax.Array, round_idx, num_nodes: int, *,
+                    prob: float = 1.0, gossip: str = "bernoulli",
+                    edges: np.ndarray | None = None) -> jax.Array:
+    """The round-r activation mask [J] bool — THE spec all layers share.
+
+    Deterministic in (key, round_idx): the round key is
+    `jax.random.fold_in(key, round_idx)`, so any runtime (and any device
+    of the SPMD mesh) recomputes the same mask from the same key without
+    coordination. "bernoulli" draws iid node activations; "edge" draws one
+    edge index uniformly from the canonical `edges` list and activates its
+    endpoints.
+    """
+    if gossip not in _GOSSIP_MODES:
+        raise ValueError(f"gossip must be one of {_GOSSIP_MODES}, "
+                         f"got {gossip!r}")
+    k = jax.random.fold_in(key, round_idx)
+    if gossip == "bernoulli":
+        return jax.random.bernoulli(k, prob, (num_nodes,))
+    if edges is None or len(edges) == 0:
+        raise ValueError("gossip='edge' needs a non-empty edge list")
+    e = jax.random.randint(k, (), 0, len(edges))
+    uv = jnp.asarray(edges, dtype=jnp.int32)[e]
+    return jnp.zeros((num_nodes,), bool).at[uv].set(True)
+
+
+def activation_masks(key: jax.Array, num_rounds: int, num_nodes: int, *,
+                     prob: float = 1.0, gossip: str = "bernoulli",
+                     edges: np.ndarray | None = None) -> jax.Array:
+    """All rounds' masks [R, J] bool; row r == `activation_mask(key, r, …)`
+    exactly (the determinism property the test suite pins). Precomputed so
+    the packed scan and the SPMD shard_map consume the same array instead
+    of re-deriving per-round randomness inside traced code."""
+    if num_rounds == 0:
+        return jnp.zeros((0, num_nodes), bool)
+    rounds = jnp.arange(num_rounds)
+    return jax.vmap(
+        lambda r: activation_mask(key, r, num_nodes, prob=prob,
+                                  gossip=gossip, edges=edges))(rounds)
+
+
+def censor_schedule(censor_tau: float, censor_decay: float,
+                    num_rounds: int, dtype=jnp.float64) -> jax.Array:
+    """τ_r = τ_0 · decay^r for r = 0 … R−1, as one [R] array. Every layer
+    compares its broadcast deltas against THIS array (same bits), so a
+    threshold crossing lands on the same round everywhere."""
+    r = jnp.arange(num_rounds, dtype=dtype)
+    return jnp.asarray(censor_tau, dtype) * \
+        jnp.asarray(censor_decay, dtype) ** r
+
+
+# --------------------------------------------------------------------------
+# Ragged per-node reference solver (ground truth)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class AsyncGossipResult:
+    """What the reference solve hands back for conformance pinning.
+
+    theta:      ragged per-node iterates after the last executed round.
+    rounds:     rounds actually executed (< num_rounds iff tol stopped it).
+    broadcasts: total θ transmissions (post-censoring) over the run.
+    deliveries: total per-edge buffer refreshes — equals broadcasts ×
+                degree under "bernoulli", broadcasts × 1 under "edge".
+    """
+
+    theta: list[jax.Array]
+    rounds: int
+    broadcasts: int
+    deliveries: int
+
+
+def async_gossip_solve(solver, key: jax.Array, num_rounds: int,
+                       config: AsyncGossipConfig = AsyncGossipConfig(),
+                       *, tol: float = 0.0) -> AsyncGossipResult:
+    """Ragged ground-truth async gossip solve on a `DeKRRSolver`.
+
+    Deliberately written in `DeKRRSolver.step`'s auditable per-node style:
+    Python loops over ragged auxiliaries, one matvec chain per active
+    node, explicit per-edge receive buffers `buf[receiver][sender]` and
+    per-node last-sent vectors. The packed (`repro.dist.async_gossip
+    .async_solve_batched`) and SPMD (`make_async_spmd_solver`) runtimes
+    are pinned to this function at rtol 1e-9 under x64.
+
+    ``tol > 0`` stops after the first round with max_j ‖Δθ_j‖_∞ < tol —
+    ignoring all-silent rounds, whose Δθ ≡ 0 is the schedule idling, not
+    convergence (the converging round is counted, matching the packed
+    solver's per-round freeze semantics).
+    """
+    topo, aux = solver.topology, solver.aux
+    j_nodes = solver.J
+    edges = edge_list(topo)
+    masks = np.asarray(activation_masks(
+        key, num_rounds, j_nodes, prob=config.prob, gossip=config.gossip,
+        edges=edges if config.gossip == "edge" else None))
+    thresholds = np.asarray(censor_schedule(
+        config.censor_tau, config.censor_decay, num_rounds))
+
+    theta = [jnp.zeros_like(aux.d[j]) for j in range(j_nodes)]
+    sent = list(theta)
+    buf = [{p: jnp.zeros_like(aux.d[p]) for p in topo.neighbors(j)}
+           for j in range(j_nodes)]
+
+    rounds = broadcasts = deliveries = 0
+    for r in range(num_rounds):
+        mask = masks[r]
+        # 2. update — active nodes read their (possibly stale) buffers
+        new_theta = []
+        for j in range(j_nodes):
+            if not mask[j]:
+                new_theta.append(theta[j])
+                continue
+            rhs = aux.d[j] + aux.s[j] @ theta[j]
+            for p, pjp in aux.p[j].items():
+                rhs = rhs + pjp @ buf[j][p]
+            new_theta.append(aux.g[j] @ rhs)
+        # 3. censor — compare against the last value actually sent
+        bcast = []
+        for j in range(j_nodes):
+            if not mask[j]:
+                bcast.append(False)
+            elif not config.censored:
+                bcast.append(True)
+            else:
+                delta = jnp.max(jnp.abs(new_theta[j] - sent[j]))
+                bcast.append(bool(delta > thresholds[r]))
+        # 4. deliver — Jacobi-simultaneous: all updates computed above
+        for j in range(j_nodes):
+            if not bcast[j]:
+                continue
+            for rcv in topo.neighbors(j):
+                if config.gossip == "edge" and not mask[rcv]:
+                    continue        # pairwise: only the other endpoint
+                buf[rcv][j] = new_theta[j]
+                deliveries += 1
+            sent[j] = new_theta[j]
+            broadcasts += 1
+        rounds += 1
+        if tol > 0:
+            delta_round = max(
+                (float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(new_theta, theta)), default=0.0)
+            theta = new_theta
+            # all-silent rounds have Δθ ≡ 0 by construction: the schedule
+            # idled, the iteration did not converge — don't stop on them
+            if mask.any() and delta_round < tol:
+                break
+        else:
+            theta = new_theta
+    return AsyncGossipResult(theta=theta, rounds=rounds,
+                             broadcasts=broadcasts, deliveries=deliveries)

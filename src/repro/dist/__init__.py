@@ -6,19 +6,60 @@ batched execution (with a ``backend="xla" | "pallas" | "pallas_fused"``
 switch between the vmapped-GEMM round, the fused per-round
 `repro.kernels.dekrr_step` kernel, and the multi-round
 `repro.kernels.dekrr_solve` kernel that keeps θ VMEM-resident across the
-whole solve) and SPMD nodes-on-devices execution — pinned to the reference
-by parity tests.
+whole solve), SPMD nodes-on-devices execution, and the asynchronous
+randomized-activation gossip runtime (`repro.dist.async_gossip`, COKE-style
+per-edge staleness + communication censoring) — all pinned to the
+references by parity tests.
+
+Backend × sync-mode support (how each combination executes, and how it is
+pinned):
+
+  ======================  ==================  =================================
+  runtime                 synchronous Jacobi  async gossip (activation mask)
+  ======================  ==================  =================================
+  batched, xla            exact (vmap round)  exact (masked vmap round)
+  batched, pallas         exact (round        exact (activation-masked round
+                          kernel)             kernel; buffers as θ-table rows)
+  batched, pallas_fused   exact (multi-round  masked per-round kernel — rounds
+                          fused kernel)       do NOT fuse (per-round mask /
+                                              censor control flow)
+  SPMD, xla               exact               exact (shared-key masks
+                                              replicated; dense collectives
+                                              every round)
+  SPMD, pallas(_fused)    exact (per-round    exact (masked per-round kernel;
+                          kernel; no cross-   no cross-round fusion over the
+                          device fusion)      collective)
+  solve-level tol stop    supported           batched only (per-round freeze;
+                                              unsupported on SPMD)
+  ======================  ==================  =================================
+
+"exact" = agrees with the corresponding reference at rtol 1e-9 under x64,
+and bit-for-bit with the synchronous path of the same backend when the
+async schedule degenerates to it (prob = 1, bernoulli, censoring off).
+
 `pack_problem` builds the Eq. 17 auxiliaries batched (one vmapped program
 over the padded [J, D_max, …] layout). See `repro.dist.dekrr_spmd` for the
-design and memory layout.
+design and memory layout, `repro.dist.async_gossip` for the async round
+and its delivery semantics.
 """
+from repro.dist.async_gossip import (AsyncGossipState, AsyncGossipStats,
+                                     AsyncRoundInfo, async_solve_batched,
+                                     async_step_batched, init_async_state,
+                                     make_async_spmd_solver)
 from repro.dist.dekrr_spmd import (PackedProblem, comm_bytes_per_round,
                                    make_spmd_solver, pack_problem, pack_theta,
                                    solve_batched, step_batched, unpack_theta)
 
 __all__ = [
+    "AsyncGossipState",
+    "AsyncGossipStats",
+    "AsyncRoundInfo",
     "PackedProblem",
+    "async_solve_batched",
+    "async_step_batched",
     "comm_bytes_per_round",
+    "init_async_state",
+    "make_async_spmd_solver",
     "make_spmd_solver",
     "pack_problem",
     "pack_theta",

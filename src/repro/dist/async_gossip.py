@@ -1,0 +1,442 @@
+"""Asynchronous gossip DeKRR runtime — packed batched and SPMD layers.
+
+`repro.core.async_gossip` defines the semantics (randomized activation,
+per-edge staleness buffers, COKE communication censoring) and holds the
+ragged ground-truth solver; this module is the production counterpart on
+the packed [J, D_max] layout, in the same two shapes as the synchronous
+runtime it extends:
+
+1. **Batched single-host execution** (`async_step_batched` /
+   `async_solve_batched`): the async round over all nodes at once. The
+   Eq. 19 arithmetic routes through `repro.dist.step_batched` with the
+   two async extras it grew for this runtime — ``active`` (inactive nodes
+   pass θ through untouched; jnp.where on the XLA path, the
+   activation-masked `repro.kernels.dekrr_step` variant on the Pallas
+   paths) and ``nbr_theta`` (the [J, K, D_max] staleness buffers instead
+   of a fresh ``theta[nbr_idx]`` gather). ``backend="pallas_fused"`` is
+   accepted for plumbing uniformity but runs the per-round masked kernel:
+   the multi-round fused kernel cannot host the per-round mask sampling /
+   censoring control flow, so cross-round fusion remains sync-only.
+
+2. **SPMD nodes-on-devices execution** (`make_async_spmd_solver`): one
+   node per device, same mesh/mode contract as `make_spmd_solver`. The
+   activation masks are precomputed from the shared PRNG key and passed in
+   *replicated*, so every device samples the identical schedule without
+   coordination and the ppermute/all_gather exchanges stay collective-safe
+   — every round runs the dense collective (a lock-step simulation of the
+   asynchronous protocol), and the masks gate what lands in the buffers,
+   not whether the collective runs. Devices exchange their post-censoring
+   ``sent`` vectors: under "bernoulli" gossip a receive buffer always
+   equals the sender's last-broadcast θ, so overwriting it with the
+   exchanged ``sent`` every round is value-identical to conditional
+   delivery and needs no flag traffic; "edge" gossip delivers along the
+   sampled edge only, so the broadcast flag rides along as a 1-element
+   ppermute/all_gather.
+
+With ``AsyncGossipConfig()`` defaults (prob = 1, bernoulli, no censoring)
+every layer reproduces the synchronous runtime bit-for-bit on its own
+backend — pinned, along with the cross-layer rtol-1e-9 conformance matrix
+over {circulant, star, ER, complete, J=1} × p × censoring, by
+`tests/test_async_gossip.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.core.async_gossip import (AsyncGossipConfig, activation_masks,
+                                     censor_schedule, edges_from_slot_table)
+from repro.dist.dekrr_spmd import (PackedProblem, _check_backend,
+                                   _check_spmd_problem, _make_exchange,
+                                   _node_step, _MODES, _PALLAS_BACKENDS,
+                                   shard_map, step_batched)
+
+__all__ = [
+    "AsyncGossipState",
+    "AsyncGossipStats",
+    "AsyncRoundInfo",
+    "async_solve_batched",
+    "async_step_batched",
+    "init_async_state",
+    "make_async_spmd_solver",
+]
+
+# Default tol-check chunking for the async solve: the per-round freeze
+# makes rounds-run independent of the chunk size, so the chunk only sets
+# how much work one while_loop iteration dispatches.
+_ASYNC_CHUNK_DEFAULT = 16
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AsyncGossipState:
+    """Per-round state of the packed async gossip iteration.
+
+    theta:   [J, D_max]    current iterates (padding exactly zero).
+    sent:    [J, D_max]    last θ each node actually broadcast (the COKE
+                           censor reference).
+    buffers: [J, K, D_max] per-edge receive buffers: buffers[j, k] is the
+                           last θ node j *received* from the neighbor in
+                           slot k — under "edge" gossip this can be staler
+                           than that neighbor's own ``sent``.
+    """
+
+    theta: jax.Array
+    sent: jax.Array
+    buffers: jax.Array
+
+    def tree_flatten(self):
+        return (self.theta, self.sent, self.buffers), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+class AsyncRoundInfo(NamedTuple):
+    """What one async round put on the wire (for stats and property tests).
+
+    bcast:    [J] bool — nodes that transmitted this round (active and
+              uncensored).
+    received: [J, K] bool — receive-buffer slots refreshed by a fresh
+              broadcast this round.
+    """
+
+    bcast: jax.Array
+    received: jax.Array
+
+
+class AsyncGossipStats(NamedTuple):
+    """Cumulative communication accounting of an async solve (int32)."""
+
+    rounds: jax.Array
+    broadcasts: jax.Array
+    deliveries: jax.Array
+
+
+def init_async_state(packed: PackedProblem,
+                     theta0: jax.Array | None = None) -> AsyncGossipState:
+    """Round-0 state: every buffer holds its neighbor's θ0 and every node
+    'sent' θ0 — exactly the synchronous iteration's view of round 0."""
+    if theta0 is None:
+        theta0 = jnp.zeros_like(packed.d)
+    return AsyncGossipState(theta=theta0, sent=theta0,
+                            buffers=theta0[packed.nbr_idx])
+
+
+def _packed_edges(packed: PackedProblem) -> np.ndarray:
+    """Canonical edge list for `gossip="edge"` sampling, derived host-side
+    from the slot table (bit-identical to `repro.core.edge_list` on the
+    originating topology — tested)."""
+    return edges_from_slot_table(np.asarray(packed.nbr_idx),
+                                 np.asarray(packed.nbr_mask))
+
+
+def _async_round(packed: PackedProblem, state: AsyncGossipState,
+                 active: jax.Array, threshold: jax.Array, *,
+                 gossip: str, censored: bool,
+                 backend: str) -> tuple[AsyncGossipState, AsyncRoundInfo]:
+    """One async gossip round in the order every layer shares: update
+    (against the staleness buffers) → censor → deliver."""
+    new = step_batched(packed, state.theta, backend=backend,
+                       active=active, nbr_theta=state.buffers)
+    if censored:
+        delta = jnp.max(jnp.abs(new - state.sent), axis=1)   # [J]
+        bcast = active & (delta > threshold)
+    else:
+        bcast = active
+    live = packed.nbr_mask != 0
+    received = live & bcast[packed.nbr_idx]                  # [J, K]
+    if gossip == "edge":
+        received = received & active[:, None]  # pairwise: endpoint only
+    sent = jnp.where(bcast[:, None], new, state.sent)
+    buffers = jnp.where(received[..., None], new[packed.nbr_idx],
+                        state.buffers)
+    return (AsyncGossipState(theta=new, sent=sent, buffers=buffers),
+            AsyncRoundInfo(bcast=bcast, received=received))
+
+
+@partial(jax.jit, static_argnames=("gossip", "censored", "backend"))
+def async_step_batched(packed: PackedProblem, state: AsyncGossipState,
+                       active: jax.Array, threshold: jax.Array = 0.0, *,
+                       gossip: str = "bernoulli", censored: bool = False,
+                       backend: str = "xla"
+                       ) -> tuple[AsyncGossipState, AsyncRoundInfo]:
+    """One async gossip round over all nodes, from an explicit activation
+    mask ([J] bool) and censor threshold (scalar; ignored unless
+    ``censored``). The building block `async_solve_batched` scans — public
+    so tests can drive rounds one at a time and inspect the state/wire
+    traffic between them.
+    """
+    _check_backend(backend)
+    return _async_round(packed, state, active,
+                        jnp.asarray(threshold, packed.d.dtype),
+                        gossip=gossip, censored=censored, backend=backend)
+
+
+def _count(mask: jax.Array) -> jax.Array:
+    return jnp.sum(mask, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("num_iters", "gossip", "censored",
+                                   "backend", "tol", "chunk_rounds",
+                                   "return_rounds", "return_stats"))
+def _async_solve_impl(packed, masks, thresholds, theta0, *, num_iters,
+                      gossip, censored, backend, tol, chunk_rounds,
+                      return_rounds, return_stats):
+    state0 = init_async_state(packed, theta0)
+    zero = jnp.asarray(0, jnp.int32)
+
+    if tol == 0.0:
+        def round_fn(carry, xs):
+            state, nb, nd = carry
+            mask_r, thr_r = xs
+            state, info = _async_round(packed, state, mask_r, thr_r,
+                                       gossip=gossip, censored=censored,
+                                       backend=backend)
+            return (state, nb + _count(info.bcast),
+                    nd + _count(info.received)), None
+
+        (state, nb, nd), _ = lax.scan(round_fn, (state0, zero, zero),
+                                      (masks, thresholds))
+        rounds = jnp.asarray(num_iters, jnp.int32)
+    else:
+        # tol > 0: per-round convergence freeze inside chunked execution.
+        # Convergence is evaluated after EVERY round (not at chunk
+        # boundaries) and a converged solve passes subsequent rounds
+        # through unchanged, so rounds-run and θ are independent of
+        # chunk_rounds — the chunk only sets how much work one while_loop
+        # iteration dispatches (regression-tested).
+        chunk = chunk_rounds if chunk_rounds is not None \
+            else _ASYNC_CHUNK_DEFAULT
+        chunk = min(chunk, max(num_iters, 1))
+        n_chunks = -(-num_iters // chunk)
+        pad = n_chunks * chunk - num_iters
+        masks_p = jnp.pad(masks, ((0, pad), (0, 0)))
+        thresholds_p = jnp.pad(thresholds, (0, pad))
+
+        def round_fn(carry, xs):
+            state, rounds, converged, nb, nd = carry
+            mask_r, thr_r, r_abs = xs
+            new_state, info = _async_round(packed, state, mask_r, thr_r,
+                                           gossip=gossip,
+                                           censored=censored,
+                                           backend=backend)
+            delta = jnp.max(jnp.abs(new_state.theta - state.theta))
+            take = jnp.logical_not(converged) & (r_abs < num_iters)
+            state = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(take, a, b), new_state, state)
+            rounds = rounds + take.astype(jnp.int32)
+            nb = nb + jnp.where(take, _count(info.bcast), 0)
+            nd = nd + jnp.where(take, _count(info.received), 0)
+            # A round the Bernoulli draw left all-silent has Δθ ≡ 0 by
+            # construction — that is the schedule idling, not the
+            # iteration converging, so it must not latch the stop.
+            converged = converged | (take & jnp.any(mask_r)
+                                     & (delta < tol))
+            return (state, rounds, converged, nb, nd), None
+
+        def cond_fn(carry):
+            _, _, converged, _, _, chunk_idx = carry
+            return jnp.logical_not(converged) & (chunk_idx < n_chunks)
+
+        def body_fn(carry):
+            state, rounds, converged, nb, nd, chunk_idx = carry
+            start = chunk_idx * chunk
+            xs = (lax.dynamic_slice_in_dim(masks_p, start, chunk, 0),
+                  lax.dynamic_slice_in_dim(thresholds_p, start, chunk, 0),
+                  start + jnp.arange(chunk))
+            (state, rounds, converged, nb, nd), _ = lax.scan(
+                round_fn, (state, rounds, converged, nb, nd), xs)
+            return state, rounds, converged, nb, nd, chunk_idx + 1
+
+        state, rounds, _, nb, nd, _ = lax.while_loop(
+            cond_fn, body_fn,
+            (state0, zero, jnp.asarray(False), zero, zero, zero))
+
+    out = (state.theta,)
+    if return_rounds:
+        out = out + (rounds,)
+    if return_stats:
+        out = out + (AsyncGossipStats(rounds=rounds, broadcasts=nb,
+                                      deliveries=nd),)
+    return out[0] if len(out) == 1 else out
+
+
+def async_solve_batched(packed: PackedProblem, num_iters: int,
+                        key: jax.Array, *,
+                        config: AsyncGossipConfig = AsyncGossipConfig(),
+                        theta0: jax.Array | None = None,
+                        backend: str = "xla", tol: float = 0.0,
+                        chunk_rounds: int | None = None,
+                        return_rounds: bool = False,
+                        return_stats: bool = False):
+    """Run up to `num_iters` async gossip rounds from θ = 0 (or theta0).
+
+    The whole activation/censor schedule is precomputed from `key` via the
+    shared `repro.core.async_gossip` helpers (round r uses
+    ``fold_in(key, r)``), then the solve scans `async_step_batched`'s
+    round on the chosen ``backend`` ("xla" | "pallas" | "pallas_fused";
+    the Pallas paths run the activation-masked round kernel — see module
+    docstring for why rounds do not fuse).
+
+    ``tol > 0`` enables early stopping on max|Δθ| < tol, evaluated after
+    every round on device — except rounds the activation draw left
+    all-silent, whose Δθ ≡ 0 says nothing about convergence (a
+    non-trivial hazard at small p·J). Once a round converges, later
+    rounds pass through unchanged, so the reported round count and θ are
+    independent of ``chunk_rounds`` (which only sets the while_loop
+    dispatch granularity). ``return_rounds`` appends the rounds-run int32
+    scalar; ``return_stats`` appends an `AsyncGossipStats` with the
+    cumulative broadcast/delivery counts for communication accounting.
+
+    With ``config.is_synchronous`` this reproduces
+    ``solve_batched(packed, num_iters, backend=backend)`` bit-for-bit.
+    """
+    _check_backend(backend)
+    if tol < 0:
+        raise ValueError(f"tol must be >= 0, got {tol}")
+    if chunk_rounds is not None and chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    num_iters = int(num_iters)
+    edges = _packed_edges(packed) if config.gossip == "edge" else None
+    masks = activation_masks(key, num_iters, packed.num_nodes,
+                             prob=config.prob, gossip=config.gossip,
+                             edges=edges)
+    thresholds = censor_schedule(config.censor_tau, config.censor_decay,
+                                 num_iters, dtype=packed.d.dtype)
+    return _async_solve_impl(
+        packed, masks, thresholds, theta0, num_iters=num_iters,
+        gossip=config.gossip, censored=config.censored, backend=backend,
+        tol=float(tol), chunk_rounds=chunk_rounds,
+        return_rounds=return_rounds, return_stats=return_stats)
+
+
+# --------------------------------------------------------------------------
+# SPMD nodes-on-devices async runtime
+# --------------------------------------------------------------------------
+def make_async_spmd_solver(mesh: Mesh, axis_name: str,
+                           mode: str = "ppermute", backend: str = "xla"):
+    """Build ``run(packed, num_iters, key, config) -> [J, D_max]`` on a
+    1-D node mesh — the async counterpart of `make_spmd_solver`.
+
+    Same placement contract (device index along `axis_name` IS the node
+    id) and the same exchange modes. The full [R, J] activation-mask
+    schedule and [R] censor thresholds are sampled host-side from the
+    shared `key` and enter the shard_map *replicated*, so every device
+    walks the identical schedule and the per-slot ppermute ring shifts /
+    all_gather stay collective-safe: the dense collective runs every
+    round, and the masks decide what lands in the staleness buffers.
+
+    Per round each device exchanges its post-censoring ``sent`` vector.
+    Under "bernoulli" gossip that alone reproduces conditional delivery
+    (a buffer always equals the sender's last broadcast, so the overwrite
+    is value-identical — no flag traffic); under "edge" gossip the
+    broadcast flag travels with the payload as a 1-element exchange and
+    gates delivery to the sampled edge. ``backend`` picks the per-device
+    arithmetic: "xla" runs `_node_step` + jnp.where, "pallas"/
+    "pallas_fused" run the activation-masked round kernel on the local
+    ``[own θ; buffers]`` table.
+
+    With ``config.is_synchronous`` the returned runner reproduces
+    ``make_spmd_solver(mesh, axis_name, mode, backend)`` bit-for-bit.
+    ``tol`` early stopping is not offered here — the whole point of the
+    async schedule is a fixed communication budget; stop decisions belong
+    to the batched runtime.
+    """
+    if mode not in _MODES:
+        raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    _check_backend(backend)
+    if axis_name not in mesh.shape:
+        raise ValueError(f"mesh has no axis {axis_name!r}: {mesh.shape}")
+
+    spec = PartitionSpec(axis_name)
+    rep = PartitionSpec()
+
+    @partial(jax.jit, static_argnames=("offsets", "gossip", "censored"))
+    def _run(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds, *,
+             offsets, gossip, censored):
+        j_nodes = d.shape[0]
+        k_slots = p.shape[1]
+
+        def node_program(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds):
+            me = lax.axis_index(axis_name)
+            live = nbr_mask[0] != 0                          # [K]
+            # the sync solver's θ exchange, verbatim (shared helper)
+            exchange = _make_exchange(mode, axis_name, j_nodes, offsets,
+                                      nbr_idx)
+
+            def round_fn(carry, xs):
+                theta, sent, buffers = carry
+                mask_r, thr_r = xs
+                active = mask_r[me]
+                if backend in _PALLAS_BACKENDS:
+                    from repro.kernels.ops import dekrr_step
+
+                    # local θ table: row 0 = own θ, rows 1…K = buffers
+                    table = jnp.concatenate([theta, buffers], axis=0)
+                    local_idx = jnp.arange(
+                        1, k_slots + 1, dtype=jnp.int32)[None]
+                    new = dekrr_step(
+                        g, d, s, p, table, local_idx,
+                        jnp.zeros((1,), jnp.int32), nbr_mask,
+                        jnp.reshape(active, (1,)))
+                else:
+                    new = _node_step(g[0], d[0], s[0], p[0], theta[0],
+                                     buffers, nbr_mask[0])[None]
+                    new = jnp.where(active, new, theta)
+                if censored:
+                    delta = jnp.max(jnp.abs(new - sent))
+                    bcast = active & (delta > thr_r)
+                else:
+                    bcast = active
+                sent_new = jnp.where(bcast, new, sent)
+                payload = exchange(sent_new)                 # [K, D]
+                if gossip == "edge":
+                    flag = exchange(jnp.reshape(bcast, (1, 1))
+                                    .astype(d.dtype))[:, 0] != 0
+                    gate = active & mask_r[nbr_idx[0]] & flag & live
+                else:
+                    gate = live
+                buffers = jnp.where(gate[:, None], payload, buffers)
+                return (new, sent_new, buffers), None
+
+            theta0 = jnp.zeros_like(d)                       # [1, D]
+            buffers0 = jnp.zeros((k_slots, d.shape[1]), d.dtype)
+            (theta, _, _), _ = lax.scan(
+                round_fn, (theta0, theta0, buffers0), (masks, thresholds))
+            return theta
+
+        sharded = shard_map(
+            node_program, mesh=mesh,
+            in_specs=(spec, spec, spec, spec, spec, spec, rep, rep),
+            out_specs=spec,
+            check_rep=(backend not in _PALLAS_BACKENDS),
+        )
+        return sharded(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds)
+
+    def run(packed: PackedProblem, num_iters: int, key: jax.Array,
+            config: AsyncGossipConfig = AsyncGossipConfig()) -> jax.Array:
+        _check_spmd_problem(packed, mesh, axis_name, mode)
+        num_iters = int(num_iters)
+        edges = _packed_edges(packed) if config.gossip == "edge" else None
+        masks = activation_masks(key, num_iters, packed.num_nodes,
+                                 prob=config.prob, gossip=config.gossip,
+                                 edges=edges)
+        thresholds = censor_schedule(
+            config.censor_tau, config.censor_decay, num_iters,
+            dtype=packed.d.dtype)
+        return _run(packed.g, packed.d, packed.s, packed.p,
+                    packed.nbr_idx, packed.nbr_mask, masks, thresholds,
+                    offsets=packed.offsets, gossip=config.gossip,
+                    censored=config.censored)
+
+    return run

@@ -631,8 +631,10 @@ def _check_backend(backend: str) -> None:
 
 @partial(jax.jit, static_argnames=("backend",))
 def step_batched(packed: PackedProblem, theta: jax.Array,
-                 backend: str = "xla") -> jax.Array:
-    """One synchronous Jacobi round of Eq. 19 over all nodes.
+                 backend: str = "xla", *,
+                 active: jax.Array | None = None,
+                 nbr_theta: jax.Array | None = None) -> jax.Array:
+    """One Jacobi round of Eq. 19 over all nodes (synchronous by default).
 
     theta: [J, D_max] → [J, D_max]. Padding is preserved exactly (zero in,
     zero out) — see the module docstring for why no mask is needed.
@@ -643,18 +645,47 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
     differs from "pallas" at the *solve* level (rounds fused into one
     kernel); a single step runs the same per-round kernel. All run the
     same arithmetic and agree at rtol 1e-9 under x64.
+
+    The async-gossip runtime (`repro.dist.async_gossip`) threads two
+    keyword extras through the same entry point:
+
+      * ``active`` ([J], any dtype): nodes with active[j] == 0 pass their
+        θ row through untouched — jnp.where on the XLA path, the
+        activation-masked kernel variant on the Pallas paths. With
+        ``active`` omitted or all-ones the synchronous arithmetic runs
+        bit-for-bit.
+      * ``nbr_theta`` ([J, K, D_max]): per-slot neighbor θ to couple
+        against *instead of* gathering ``theta[packed.nbr_idx]`` — the
+        async per-edge staleness buffers. On the Pallas paths the buffers
+        are appended below θ as extra table rows ([J·(1+K), D_max]) and
+        the slot table is re-pointed at them, so the kernel's gather
+        semantics are unchanged.
     """
     _check_backend(backend)
     if backend in _PALLAS_BACKENDS:
         from repro.kernels.ops import dekrr_step
 
-        self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
-        return dekrr_step(packed.g, packed.d, packed.s, packed.p, theta,
-                          packed.nbr_idx, self_idx, packed.nbr_mask)
-    nbr_theta = theta[packed.nbr_idx]                  # [J, K, D_max]
-    return jax.vmap(_node_step)(
+        j_nodes, k_slots = packed.num_nodes, packed.num_slots
+        self_idx = jnp.arange(j_nodes, dtype=jnp.int32)
+        if nbr_theta is None:
+            table, nbr_idx = theta, packed.nbr_idx
+        else:
+            table = jnp.concatenate(
+                [theta, nbr_theta.reshape(j_nodes * k_slots,
+                                          packed.max_features)], axis=0)
+            nbr_idx = j_nodes + jnp.arange(
+                j_nodes * k_slots, dtype=jnp.int32).reshape(j_nodes,
+                                                            k_slots)
+        return dekrr_step(packed.g, packed.d, packed.s, packed.p, table,
+                          nbr_idx, self_idx, packed.nbr_mask, active)
+    if nbr_theta is None:
+        nbr_theta = theta[packed.nbr_idx]              # [J, K, D_max]
+    new = jax.vmap(_node_step)(
         packed.g, packed.d, packed.s, packed.p, theta, nbr_theta,
         packed.nbr_mask)
+    if active is not None:
+        new = jnp.where((active != 0)[:, None], new, theta)
+    return new
 
 
 def _run_rounds(packed: PackedProblem, theta: jax.Array, num_rounds: int,
@@ -767,6 +798,57 @@ def solve_batched(packed: PackedProblem, num_iters: int,
 _MODES = ("ppermute", "allgather")
 
 
+def _make_exchange(mode: str, axis_name: str, j_nodes: int,
+                   offsets: tuple[int, ...] | None, nbr_idx: jax.Array):
+    """Per-device neighbor exchange ``vec [1, W] → [K, W]`` for a
+    shard_map node program — the one collective wiring the sync and async
+    SPMD solvers share (their bit-for-bit equivalence at full activation
+    rests on it, so there is exactly one copy).
+
+    ``"ppermute"``: one fwd + one bwd ring shift per circulant offset, in
+    the packed slot order [(+s_1), (−s_1), (+s_2), (−s_2), …].
+    ``"allgather"``: gather every device's row 0, then take this node's
+    slots. ``nbr_idx`` is the device-local [1, K] slot-table operand.
+    """
+    def exchange(vec):
+        if mode == "ppermute":
+            recvs = []
+            for shift in offsets:
+                # receive from node (j+shift): source (i+shift) -> dest i
+                fwd = lax.ppermute(
+                    vec, axis_name,
+                    [(i, (i - shift) % j_nodes) for i in range(j_nodes)])
+                # receive from node (j-shift): source (i-shift) -> dest i
+                bwd = lax.ppermute(
+                    vec, axis_name,
+                    [(i, (i + shift) % j_nodes) for i in range(j_nodes)])
+                recvs.extend((fwd, bwd))
+            return jnp.concatenate(recvs, axis=0)
+        everyone = lax.all_gather(vec[0], axis_name)         # [J, W]
+        return jnp.take(everyone, nbr_idx[0], axis=0)
+
+    return exchange
+
+
+def _check_spmd_problem(packed: PackedProblem, mesh: Mesh, axis_name: str,
+                        mode: str) -> None:
+    """Shared launch-time validation for the sync and async SPMD solvers:
+    one node per device along the axis, and circulant slot layout when the
+    exchange is ppermute ring shifts."""
+    j_nodes = packed.num_nodes
+    if mesh.shape[axis_name] != j_nodes:
+        raise ValueError(
+            f"mesh axis {axis_name!r} has {mesh.shape[axis_name]} "
+            f"devices but the problem has {j_nodes} nodes")
+    if mode == "ppermute":
+        if packed.offsets is None:
+            raise ValueError(
+                "ppermute mode needs a circulant-packed problem "
+                "(packed.offsets is None — use mode='allgather')")
+        if packed.num_slots != 2 * len(packed.offsets):
+            raise ValueError("slot table is not in circulant layout")
+
+
 def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
                      backend: str = "xla"):
     """Build `run(packed, num_iters) -> [J, D_max]` on a 1-D node mesh.
@@ -810,25 +892,8 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
 
         def node_program(g, d, s, p, nbr_idx, nbr_mask):
             # Every operand arrives with a leading per-device axis of 1.
-            def exchange(theta):
-                """Collect [K, D_max] neighbor θ for this device's node."""
-                if mode == "ppermute":
-                    recvs = []
-                    for shift in offsets:
-                        # receive θ_{j+shift}: source (i+shift) -> dest i
-                        fwd = lax.ppermute(
-                            theta, axis_name,
-                            [(i, (i - shift) % j_nodes)
-                             for i in range(j_nodes)])
-                        # receive θ_{j-shift}: source (i-shift) -> dest i
-                        bwd = lax.ppermute(
-                            theta, axis_name,
-                            [(i, (i + shift) % j_nodes)
-                             for i in range(j_nodes)])
-                        recvs.extend((fwd, bwd))
-                    return jnp.concatenate(recvs, axis=0)
-                everyone = lax.all_gather(theta[0], axis_name)  # [J, D_max]
-                return jnp.take(everyone, nbr_idx[0], axis=0)
+            exchange = _make_exchange(mode, axis_name, j_nodes, offsets,
+                                      nbr_idx)
 
             def round_fn(theta, _):
                 nbr_theta = exchange(theta)
@@ -862,18 +927,7 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
         return sharded(g, d, s, p, nbr_idx, nbr_mask)
 
     def run(packed: PackedProblem, num_iters: int) -> jax.Array:
-        j_nodes = packed.num_nodes
-        if mesh.shape[axis_name] != j_nodes:
-            raise ValueError(
-                f"mesh axis {axis_name!r} has {mesh.shape[axis_name]} "
-                f"devices but the problem has {j_nodes} nodes")
-        if mode == "ppermute":
-            if packed.offsets is None:
-                raise ValueError(
-                    "ppermute mode needs a circulant-packed problem "
-                    "(packed.offsets is None — use mode='allgather')")
-            if packed.num_slots != 2 * len(packed.offsets):
-                raise ValueError("slot table is not in circulant layout")
+        _check_spmd_problem(packed, mesh, axis_name, mode)
         return _run(packed.g, packed.d, packed.s, packed.p, packed.nbr_idx,
                     packed.nbr_mask, num_iters=int(num_iters),
                     offsets=packed.offsets)
@@ -884,21 +938,58 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
 # --------------------------------------------------------------------------
 # §II-C communication cost model
 # --------------------------------------------------------------------------
-def comm_bytes_per_round(packed: PackedProblem, mode: str) -> int:
-    """Bytes moved across the network per Eq. 19 round.
+def comm_bytes_per_round(packed: PackedProblem, mode: str, *,
+                         activation_prob: float = 1.0,
+                         censor_fraction: float = 0.0,
+                         gossip: str = "bernoulli") -> int | float:
+    """(Expected) bytes moved across the network per Eq. 19 round.
+
+    Synchronous base cost (``activation_prob=1``, ``censor_fraction=0``,
+    ``gossip="bernoulli"`` — the defaults, returned as an exact int):
 
     ``"ppermute"``:  Σ_j |N_j| · D_max · itemsize — each node receives one
     padded θ vector from each neighbor (the paper's Σ_j |N_j| D_j metric,
     evaluated at the packed width D_max).
     ``"allgather"``: J · (J−1) · D_max · itemsize — each node receives the
     full network state minus its own shard.
+
+    Async gossip (`repro.dist.async_gossip`) scales the base cost to the
+    *expected* payload under randomized activation and COKE censoring:
+
+      * ``gossip="bernoulli"``: a node transmits iff it is active
+        (probability ``activation_prob``) and uncensored (probability
+        ``1 − censor_fraction``; censoring decisions are data-dependent,
+        so callers pass the observed or assumed censor rate) — expected
+        bytes = p · (1 − c) · base. Monotone non-decreasing in p and
+        non-increasing in c (property-tested).
+      * ``gossip="edge"``: exactly one edge gossips per round — two
+        directed θ deliveries, censored at rate c, independent of p.
+
+    Note the SPMD *simulation* still moves every collective lane each
+    round (ppermute/all_gather are dense); this model prices the payload
+    a deployment with point-to-point transport would ship.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
+    if not 0.0 < activation_prob <= 1.0:
+        raise ValueError(f"activation_prob must be in (0, 1], "
+                         f"got {activation_prob}")
+    if not 0.0 <= censor_fraction <= 1.0:
+        raise ValueError(f"censor_fraction must be in [0, 1], "
+                         f"got {censor_fraction}")
+    if gossip not in ("bernoulli", "edge"):
+        raise ValueError(f"gossip must be 'bernoulli' or 'edge', "
+                         f"got {gossip!r}")
     j_nodes = packed.num_nodes
     d_max = packed.max_features
     itemsize = np.dtype(packed.d.dtype).itemsize
+    if gossip == "edge":
+        return 2 * d_max * itemsize * (1.0 - censor_fraction)
     if mode == "ppermute":
         num_edges_directed = int(round(float(jnp.sum(packed.nbr_mask))))
-        return num_edges_directed * d_max * itemsize
-    return j_nodes * (j_nodes - 1) * d_max * itemsize
+        base = num_edges_directed * d_max * itemsize
+    else:
+        base = j_nodes * (j_nodes - 1) * d_max * itemsize
+    if activation_prob == 1.0 and censor_fraction == 0.0:
+        return base                      # synchronous: exact int contract
+    return base * activation_prob * (1.0 - censor_fraction)

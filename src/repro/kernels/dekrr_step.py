@@ -43,6 +43,13 @@ VMEM working set per step: T·D (θ) + (2 + K)·D² (G, S, P) + 3·D (d, acc,
 out) floats — for the paper's D ≤ 512, K = 4 at f32 that is ~6.3 MB, within
 the 16 MB/core budget. All dims must be padded by the `ops.dekrr_step`
 wrapper: D to lane multiples of 128, the θ table to sublane multiples of 8.
+
+The async-gossip runtime (`repro.dist.async_gossip`) uses the
+activation-masked variant (`active=` on `dekrr_step_pallas`): a fourth
+scalar-prefetch vector gates each grid step, and inactive nodes copy their
+θ row through instead of running the MXU chain — with `active` all-ones
+the masked kernel is bit-for-bit the synchronous one (shared
+`_eq19_update` body).
 """
 from __future__ import annotations
 
@@ -57,15 +64,12 @@ from jax.experimental.pallas import tpu as pltpu
 _ROW_TIMES_MAT_T = (((1,), (1,)), ((), ()))
 
 
-def _dekrr_step_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
-                       theta_ref, g_ref, d_ref, s_ref, p_ref, out_ref):
-    """One node's Eq. 19 update; grid position = node id.
-
-    Scalar prefetch (SMEM): nbr_idx [J, K] int32, self_idx [J] int32,
-    nbr_mask [J, K] int32. Tensor operands: theta [T, D] (full table,
-    VMEM-resident), g/s [1, D, D], d [1, D], p [1, K, D, D]; out [1, D].
-    """
-    j = pl.program_id(0)
+def _eq19_update(j, nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                 theta_ref, g_ref, d_ref, s_ref, p_ref):
+    """Node j's Eq. 19 update as a [1, D] row — the arithmetic shared by
+    the unmasked and activation-masked round kernels (one body, so the
+    masked variant's active branch can never drift from the synchronous
+    kernel it must reproduce bit-for-bit at full activation)."""
     num_slots = nbr_idx_ref.shape[1]
     dtype = theta_ref.dtype
 
@@ -82,18 +86,60 @@ def _dekrr_step_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
         theta_k = theta_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
         mask_k = nbr_mask_ref[j, k].astype(dtype)
         acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ_nbr
-    out_ref[...] = row_times(acc, g_ref[0])                  # G (…)
+    return row_times(acc, g_ref[0])                          # G (…)
+
+
+def _dekrr_step_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                       theta_ref, g_ref, d_ref, s_ref, p_ref, out_ref):
+    """One node's Eq. 19 update; grid position = node id.
+
+    Scalar prefetch (SMEM): nbr_idx [J, K] int32, self_idx [J] int32,
+    nbr_mask [J, K] int32. Tensor operands: theta [T, D] (full table,
+    VMEM-resident), g/s [1, D, D], d [1, D], p [1, K, D, D]; out [1, D].
+    """
+    j = pl.program_id(0)
+    out_ref[...] = _eq19_update(j, nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                                theta_ref, g_ref, d_ref, s_ref, p_ref)
+
+
+def _dekrr_step_masked_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                              active_ref, theta_ref, g_ref, d_ref, s_ref,
+                              p_ref, out_ref):
+    """Activation-masked Eq. 19 round (async gossip): grid position = node
+    id; nodes with active[j] == 0 pass their θ row through untouched —
+    the G/S/P block streams still flow (the Pallas pipeline's index maps
+    are activation-oblivious) but no MXU work runs and no update lands.
+
+    Scalar prefetch adds active [J] int32 after the shared slot tables.
+    With active all-ones this is bit-for-bit `_dekrr_step_kernel` (same
+    `_eq19_update` body).
+    """
+    j = pl.program_id(0)
+    is_active = active_ref[j] != 0
+
+    @pl.when(is_active)
+    def _update():
+        out_ref[...] = _eq19_update(j, nbr_idx_ref, self_idx_ref,
+                                    nbr_mask_ref, theta_ref, g_ref, d_ref,
+                                    s_ref, p_ref)
+
+    @pl.when(jnp.logical_not(is_active))
+    def _passthrough():
+        out_ref[...] = theta_ref[pl.ds(self_idx_ref[j], 1), :]
 
 
 def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                       p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
                       self_idx: jax.Array, nbr_mask: jax.Array, *,
+                      active: jax.Array | None = None,
                       interpret: bool = False) -> jax.Array:
     """Raw pallas_call. All dims must already be padded/aligned:
 
       g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
       of 128; theta [T, D] with T a multiple of 8; nbr_idx [J, K] int32
       rows into theta; self_idx [J] int32; nbr_mask [J, K] int32.
+    ``active`` ([J] int32, optional) selects the activation-masked async
+    kernel: nodes with active[j] == 0 emit their own θ row unchanged.
     Returns the post-round θ rows, [J, D] (row r for node r — callers with
     T ≠ J re-assemble their table themselves).
     """
@@ -103,8 +149,13 @@ def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     assert d_feat % 128 == 0 and t_rows % 8 == 0, (d_feat, t_rows)
     assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
 
+    scalar_args = (nbr_idx, self_idx, nbr_mask)
+    kernel = _dekrr_step_kernel
+    if active is not None:
+        scalar_args = scalar_args + (active,)
+        kernel = _dekrr_step_masked_kernel
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,          # nbr_idx, self_idx, nbr_mask
+        num_scalar_prefetch=len(scalar_args),
         grid=(j_nodes,),
         in_specs=[
             pl.BlockSpec((t_rows, d_feat), lambda j, *_: (0, 0)),   # θ table
@@ -118,7 +169,7 @@ def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     )
     flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
     return pl.pallas_call(
-        _dekrr_step_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
         cost_estimate=pl.CostEstimate(
@@ -129,7 +180,7 @@ def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             transcendentals=0,
         ),
         interpret=interpret,
-    )(nbr_idx, self_idx, nbr_mask, theta, g, d, s, p)
+    )(*scalar_args, theta, g, d, s, p)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -144,3 +195,15 @@ def dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
                          nbr_theta * nbr_mask[..., None].astype(theta.dtype))
     own = jnp.einsum("jab,jb->ja", s, theta[self_idx])
     return jnp.einsum("jab,jb->ja", g, d + own + coupled)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dekrr_step_masked_reference(g, d, s, p, theta, nbr_idx, self_idx,
+                                nbr_mask, active, *,
+                                interpret: bool = False):
+    """Pure-jnp oracle for the activation-masked kernel: nodes with
+    active == 0 return their own θ-table row unchanged; active nodes run
+    the unmasked oracle's arithmetic."""
+    new = dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx,
+                               nbr_mask, interpret=interpret)
+    return jnp.where((active != 0)[:, None], new, theta[self_idx])

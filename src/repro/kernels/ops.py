@@ -145,13 +145,18 @@ def _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask):
 @partial(jax.jit, static_argnames=("interpret",))
 def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
-               nbr_mask: jax.Array, *,
+               nbr_mask: jax.Array, active: jax.Array | None = None, *,
                interpret: bool | None = None) -> jax.Array:
     """Fused packed Eq. 19 round: θ_j ← G_j(d_j + S_j θ_sj + Σ m P_jk θ_rk).
 
     g/s [J, D, D], d [J, D], p [J, K, D, D], theta [T, D] (θ table),
     nbr_idx [J, K] / self_idx [J] rows into the table, nbr_mask [J, K]
     (any dtype; nonzero = live slot) → [J, D].
+
+    ``active`` ([J], any dtype, optional) runs the activation-masked async
+    variant: nodes with active[j] == 0 return their θ-table row unchanged
+    (`repro.dist.async_gossip`); with active omitted or all-ones the
+    synchronous kernel arithmetic runs bit-for-bit.
 
     Pads D to lane multiples of 128, the θ table to sublane multiples of 8
     and the slot axis to K ≥ 1 (an all-masked zero-P slot), then slices the
@@ -165,10 +170,11 @@ def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    active_p = None if active is None else (active != 0).astype(jnp.int32)
     out = dekrr_step_pallas(
         g_p, d_p, s_p, p_p, theta_p,
         nbr_idx_p, self_idx.astype(jnp.int32), nbr_mask_p,
-        interpret=interpret)
+        active=active_p, interpret=interpret)
     return out[:, :d_feat]
 
 

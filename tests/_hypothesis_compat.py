@@ -17,10 +17,22 @@ try:  # pragma: no cover - exercised only when hypothesis is installed
     HAVE_HYPOTHESIS = True
 except ImportError:
     import random
+    import warnings
     import zlib
 
     HAVE_HYPOTHESIS = False
     _DEFAULT_MAX_EXAMPLES = 10
+
+    # Surface the downgrade at collection time: the fallback silently
+    # narrows what the property tests exercise (fixed pseudo-random draws,
+    # no shrinking, no coverage-guided search), which must be visible in
+    # the pytest warnings summary rather than discovered after a missed
+    # bug. CI runs the property suite under real hypothesis separately.
+    warnings.warn(
+        "hypothesis is not installed: property tests run under the "
+        "deterministic _hypothesis_compat fallback (fixed draws, no "
+        "shrinking/coverage) — install hypothesis for full property "
+        "checking", UserWarning)
 
     class _Strategy:
         def __init__(self, draw):

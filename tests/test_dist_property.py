@@ -1,18 +1,23 @@
 """Property tests for the packed runtime: pack/unpack round-trips, slot-table
-invariants, the §II-C comm cost model, the batched `pack_problem`
-regression (no per-node tracing; bit-identical to the per-node replay),
-and the pack downgrade warn/raise contract."""
+invariants, the §II-C comm cost model (incl. the async expected-bytes
+extension), the batched `pack_problem` regression (no per-node tracing;
+bit-identical to the per-node replay), the pack downgrade warn/raise
+contract, and the async-gossip schedule/staleness invariants."""
 import types
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from conftest import cached_fmaps, cached_split
-from repro.core import DeKRRConfig, DeKRRSolver, circulant, erdos_renyi
-from repro.dist import (PackedProblem, comm_bytes_per_round, pack_problem,
-                        pack_theta, unpack_theta)
+from repro.core import (DeKRRConfig, DeKRRSolver, activation_mask,
+                        activation_masks, circulant, edge_list,
+                        erdos_renyi)
+from repro.dist import (PackedProblem, async_step_batched,
+                        comm_bytes_per_round, init_async_state,
+                        pack_problem, pack_theta, unpack_theta)
 from repro.dist.dekrr_spmd import (_pack_problem_pernode, _slot_table,
                                    pack_trace_count)
 
@@ -273,3 +278,174 @@ def test_pack_problem_raises_when_pallas_gram_would_be_ignored():
         pack_problem(solver, gram_backend="pallas")
     with pytest.raises(ValueError, match="ignores gram_backend"):
         pack_problem(solver, method="aux", gram_backend="pallas")
+
+
+# --------------------------------------------------------------------------
+# Async gossip: activation-mask determinism from the PRNG key
+# --------------------------------------------------------------------------
+@given(j_nodes=st.integers(3, 12), seed=st.integers(0, 2**16),
+       prob=st.sampled_from([0.25, 0.5, 0.75, 1.0]),
+       num_rounds=st.integers(1, 12))
+@settings(max_examples=10, deadline=None)
+def test_bernoulli_activation_masks_deterministic(j_nodes, seed, prob,
+                                                  num_rounds):
+    """The precomputed [R, J] schedule must be a pure function of the key
+    — recomputation is bit-identical, and row r equals the single-round
+    spec `activation_mask(key, r, …)` every layer is defined against."""
+    key = jax.random.PRNGKey(seed)
+    masks = activation_masks(key, num_rounds, j_nodes, prob=prob)
+    again = activation_masks(key, num_rounds, j_nodes, prob=prob)
+    np.testing.assert_array_equal(np.asarray(masks), np.asarray(again))
+    for r in range(num_rounds):
+        np.testing.assert_array_equal(
+            np.asarray(masks[r]),
+            np.asarray(activation_mask(key, r, j_nodes, prob=prob)),
+            err_msg=f"round {r}")
+    if prob == 1.0:
+        assert np.all(np.asarray(masks))
+
+
+@given(j_nodes=st.integers(4, 10), seed=st.integers(0, 2**10),
+       num_rounds=st.integers(1, 10))
+@settings(max_examples=10, deadline=None)
+def test_edge_activation_masks_are_single_edges(j_nodes, seed, num_rounds):
+    """Every edge-gossip round activates exactly the two endpoints of one
+    existing edge, deterministically in the key."""
+    topo = erdos_renyi(j_nodes, 0.5, seed=seed % 7)
+    edges = edge_list(topo)
+    key = jax.random.PRNGKey(seed)
+    masks = np.asarray(activation_masks(key, num_rounds, j_nodes,
+                                        gossip="edge", edges=edges))
+    edge_set = {tuple(e) for e in edges.tolist()}
+    for r in range(num_rounds):
+        active = np.nonzero(masks[r])[0]
+        assert len(active) == 2
+        assert tuple(active.tolist()) in edge_set
+    np.testing.assert_array_equal(
+        masks, np.asarray(activation_masks(key, num_rounds, j_nodes,
+                                           gossip="edge", edges=edges)))
+
+
+# --------------------------------------------------------------------------
+# Async gossip: staleness-buffer invariants on the packed runtime
+# --------------------------------------------------------------------------
+def _random_packed(topo, d_max, seed, dtype=np.float64) -> PackedProblem:
+    """A random nonzero PackedProblem (spectra bounded so iterates stay
+    finite) on a real slot table — enough structure for wire-traffic
+    properties without an Eq. 17 build."""
+    fake = types.SimpleNamespace(
+        topology=topo, data=[types.SimpleNamespace(x=np.zeros(1, dtype))])
+    nbr_idx, nbr_mask, offsets = _slot_table(fake)
+    j, k = nbr_idx.shape
+    rng = np.random.default_rng(seed)
+    scale = 0.3 / d_max
+    return PackedProblem(
+        g=jnp.asarray(rng.normal(size=(j, d_max, d_max)) * scale),
+        d=jnp.asarray(rng.normal(size=(j, d_max))),
+        s=jnp.asarray(rng.normal(size=(j, d_max, d_max)) * scale),
+        p=jnp.asarray(rng.normal(size=(j, k, d_max, d_max)) * scale
+                      * np.asarray(nbr_mask)[:, :, None, None]),
+        theta_mask=jnp.ones((j, d_max), dtype),
+        nbr_idx=jnp.asarray(nbr_idx), nbr_mask=jnp.asarray(nbr_mask),
+        offsets=offsets, node_dims=tuple([d_max] * j),
+    )
+
+
+@given(seed=st.integers(0, 2**10), prob=st.sampled_from([0.25, 0.5, 0.75]),
+       censored=st.sampled_from([False, True]))
+@settings(max_examples=8, deadline=None)
+def test_staleness_buffer_invariant(seed, prob, censored):
+    """An inactive (or censored) node's broadcast θ never changes: its
+    `sent` vector and every receive buffer fed by it stay bit-identical
+    until the node actually broadcasts again — and under bernoulli
+    delivery a buffer always equals its sender's last broadcast."""
+    topo = erdos_renyi(7, 0.5, seed=seed % 5)
+    packed = _random_packed(topo, 8, seed)
+    key = jax.random.PRNGKey(seed)
+    masks = activation_masks(key, 10, 7, prob=prob)
+    nbr_idx = np.asarray(packed.nbr_idx)
+    live = np.asarray(packed.nbr_mask) != 0
+
+    state = init_async_state(packed)
+    for r in range(10):
+        new, info = async_step_batched(
+            packed, state, masks[r], threshold=0.05 * 0.9 ** r,
+            censored=censored)
+        bcast = np.asarray(info.bcast)
+        received = np.asarray(info.received)
+        # broadcasts are a subset of activations; deliveries of broadcasts
+        assert not np.any(bcast & ~np.asarray(masks[r]))
+        np.testing.assert_array_equal(received, live & bcast[nbr_idx])
+        for j in range(7):
+            if not bcast[j]:        # silent node: wire state frozen …
+                np.testing.assert_array_equal(
+                    np.asarray(new.sent[j]), np.asarray(state.sent[j]),
+                    err_msg=f"round {r}: silent node {j} changed sent")
+            slots = ~received[j]
+            np.testing.assert_array_equal(      # … and so are its buffers
+                np.asarray(new.buffers[j][slots]),
+                np.asarray(state.buffers[j][slots]),
+                err_msg=f"round {r}: undelivered buffer changed")
+        # bernoulli delivery: buffer == sender's last broadcast, always
+        np.testing.assert_array_equal(
+            np.asarray(new.buffers)[live],
+            np.asarray(new.sent)[nbr_idx][live],
+            err_msg=f"round {r}: buffer diverged from sender's sent")
+        state = new
+
+
+def test_async_state_init_matches_synchronous_view():
+    """Round-0 buffers must present θ0 exactly as the synchronous gather
+    would — anything else breaks the p = 1 bitwise equivalence."""
+    packed = _random_packed(circulant(6, (1, 2)), 8, seed=0)
+    theta0 = jnp.asarray(np.random.default_rng(1).normal(size=(6, 8)))
+    state = init_async_state(packed, theta0)
+    np.testing.assert_array_equal(np.asarray(state.buffers),
+                                  np.asarray(theta0)[packed.nbr_idx])
+    np.testing.assert_array_equal(np.asarray(state.sent),
+                                  np.asarray(theta0))
+
+
+# --------------------------------------------------------------------------
+# Async gossip: expected comm bytes monotone in activation probability
+# --------------------------------------------------------------------------
+@given(j_nodes=st.integers(5, 14), d_max=st.sampled_from([8, 24, 64]),
+       censor=st.sampled_from([0.0, 0.2, 0.6]),
+       mode=st.sampled_from(["ppermute", "allgather"]))
+@settings(max_examples=12, deadline=None)
+def test_expected_comm_bytes_monotone_in_activation_prob(j_nodes, d_max,
+                                                         censor, mode):
+    """E[bytes/round] is non-decreasing in p, non-increasing in the censor
+    fraction, and collapses to the exact synchronous int at the defaults."""
+    topo = circulant(j_nodes, (1, 2) if j_nodes >= 5 else (1,))
+    packed = _synthetic_packed([d_max] * j_nodes, topo)
+    grid = [0.1, 0.25, 0.5, 0.75, 1.0]
+    got = [comm_bytes_per_round(packed, mode, activation_prob=p,
+                                censor_fraction=censor) for p in grid]
+    assert all(a <= b for a, b in zip(got, got[1:])), got
+    base = comm_bytes_per_round(packed, mode)
+    assert isinstance(base, int)
+    assert got[-1] == pytest.approx(base * (1.0 - censor))
+    # more censoring, fewer expected bytes (p fixed)
+    heavier = comm_bytes_per_round(packed, mode, activation_prob=0.5,
+                                   censor_fraction=min(censor + 0.3, 1.0))
+    assert heavier <= comm_bytes_per_round(packed, mode,
+                                           activation_prob=0.5,
+                                           censor_fraction=censor)
+
+
+def test_expected_comm_bytes_edge_gossip_and_validation():
+    packed = _synthetic_packed([16] * 6, circulant(6, (1,)))
+    itemsize = np.dtype(np.asarray(packed.d).dtype).itemsize
+    # one edge per round: two directed deliveries, independent of p
+    assert comm_bytes_per_round(packed, "ppermute", gossip="edge") \
+        == 2 * 16 * itemsize
+    assert comm_bytes_per_round(
+        packed, "ppermute", gossip="edge", activation_prob=0.25,
+        censor_fraction=0.5) == pytest.approx(16 * itemsize)
+    with pytest.raises(ValueError, match="activation_prob"):
+        comm_bytes_per_round(packed, "ppermute", activation_prob=0.0)
+    with pytest.raises(ValueError, match="censor_fraction"):
+        comm_bytes_per_round(packed, "ppermute", censor_fraction=1.5)
+    with pytest.raises(ValueError, match="gossip"):
+        comm_bytes_per_round(packed, "ppermute", gossip="pairwise")
