@@ -26,7 +26,7 @@ def main() -> None:
                             kernel_bench, paper_fig1_noniid_y,
                             paper_fig2_noniid_xnorm, paper_fig3_imbalanced,
                             paper_fig4_pernode, paper_table2, roofline,
-                            solve_bench, step_kernel_bench)
+                            solve_bench, step_kernel_bench, stream_bench)
 
     suites = {
         "table2": paper_table2.run,
@@ -42,6 +42,7 @@ def main() -> None:
         "step": step_kernel_bench.run,
         "solve": solve_bench.run,
         "async": async_gossip_bench.run,
+        "stream": stream_bench.run,
         "roofline": roofline.run,
     }
     print("name,us_per_call,derived")

@@ -1,0 +1,186 @@
+"""Streaming DeKRR runtime benchmark, emitting ``BENCH_stream.json``.
+
+Four numbers characterize the online subsystem (`repro.stream` +
+`repro.serve.dekrr`) on the paper's J = 10 circulant(1, 2) network:
+
+  * ingest_us — wall time to fold one minibatch into the Eq. 17
+    auxiliaries by rank-b Woodbury updates (per batch size b). The
+    comparison column rebuild_us times the from-scratch
+    `pack_problem` on the same accumulated data — the cost the
+    incremental path avoids on EVERY minibatch.
+  * refresh_ms — one drift-triggered DDRF re-selection + single-slot
+    rebuild (featurizes the node's and neighbors' accumulated data; the
+    rare event, so it is allowed to be ~rebuild-shaped for one node).
+  * warm vs cold rounds-to-tol — the acceptance-criterion measurement:
+    after a wave of ingests, the consensus continuation from the carried
+    θ versus from zeros on the SAME packed operator, same tol. Warm must
+    reach tol in measurably fewer rounds.
+  * serve_qps — queries/second through `DeKRRServeEngine`'s wave
+    batching (network-average answers, staleness bounds attached).
+
+Timings are CPU/interpret-grade on the dev box (placeholders for TPU
+numbers, like the other kernel benches); the ROUND COUNTS and exactness
+are backend-independent.
+
+Run directly with ``--smoke`` (reduced sizes; used by CI) or through
+``python -m benchmarks.run --only stream``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import DeKRRConfig, DeKRRSolver, select_features
+from repro.dist import pack_problem, solve_batched
+from repro.serve import DeKRRServeEngine, KernelQuery
+from repro.stream import StreamConfig, StreamingDeKRR, ingest as fold
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_stream.json")
+
+LAM = 1e-3      # streaming bench keeps cond(A) moderate (same rationale
+                # as tests/test_stream.py)
+TOL = 1e-8
+
+
+def _build_runtime(subsample: int) -> tuple[StreamingDeKRR, object]:
+    ds, train, test = C.load_split("air_quality")
+    if subsample < C.SUBSAMPLE:
+        from repro.core import NodeData
+        train = [NodeData(x=t.x[:, :max(subsample // C.J, 8)],
+                          y=t.y[:max(subsample // C.J, 8)])
+                 for t in train]
+    keys = jax.random.split(jax.random.PRNGKey(0), C.J)
+    dims = [16 + 4 * (j % 3) for j in range(C.J)]
+    fmaps = [select_features(keys[j], ds.dim, dims[j], C.SIGMA, train[j].x,
+                             train[j].y, method="energy", candidate_ratio=5)
+             for j in range(C.J)]
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(C.TOPOLOGY, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n),
+                         build_aux=False)
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=2000,
+                                             tol=TOL))
+    return rt, (ds, test)
+
+
+def _time_us(fn, reps: int) -> float:
+    fn()                                    # warm up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False) -> None:
+    reps = 3 if fast else 10
+    rt, (ds, test) = _build_runtime(600 if fast else 2000)
+    rng = np.random.default_rng(0)
+    results: dict = {
+        "benchmark": ("streaming DeKRR: Woodbury ingest, refresh latency, "
+                      "warm vs cold rounds-to-tol, serve throughput"),
+        "backend": jax.default_backend(),
+        "j_nodes": rt.num_nodes,
+        "d_max": rt.aux.max_features,
+        "n_initial": rt.aux.n_live,
+        "tol": TOL,
+    }
+
+    # -- ingest throughput: Woodbury fold vs from-scratch pack rebuild ----
+    ingest_rows = []
+    for b in (8, 32):
+        xb = rng.normal(size=(ds.dim, b))
+        yb = rng.normal(size=b)
+        aux_probe = rt.aux
+
+        def one_fold():
+            jax.block_until_ready(fold(aux_probe, 0, xb, yb).binv)
+
+        fold_us = _time_us(one_fold, reps)
+        ingest_rows.append({"batch": b, "ingest_us": round(fold_us, 1),
+                            "samples_per_sec":
+                            round(b / (fold_us * 1e-6), 1)})
+        C.csv_row(f"stream/ingest_b{b}", fold_us,
+                  f"samples_per_sec={ingest_rows[-1]['samples_per_sec']}")
+
+    ref = rt.reference_solver()
+
+    def one_rebuild():
+        jax.block_until_ready(pack_problem(ref).g)
+
+    rebuild_us = _time_us(one_rebuild, max(1, reps // 3))
+    results["ingest"] = ingest_rows
+    results["rebuild_us"] = round(rebuild_us, 1)
+    C.csv_row("stream/full_rebuild", rebuild_us, "pack_problem baseline")
+
+    # -- refresh latency ---------------------------------------------------
+    t0 = time.perf_counter()
+    rt.refresh(1)
+    refresh_ms = (time.perf_counter() - t0) * 1e3
+    results["refresh_ms"] = round(refresh_ms, 2)
+    C.csv_row("stream/refresh", refresh_ms * 1e3, "single-slot DDRF rebuild")
+
+    # -- warm vs cold rounds-to-tol (the acceptance measurement) ----------
+    cold0 = rt.solve()                       # from zeros: the cold baseline
+    epochs = []
+    for epoch in range(2 if fast else 4):
+        for node in (0, 3, 7):
+            rt.ingest(node, rng.normal(size=(ds.dim, 16)),
+                      rng.normal(size=16))
+        packed = rt.packed
+        _, cold_rounds = solve_batched(packed, 2000, tol=TOL,
+                                       chunk_rounds=1, return_rounds=True)
+        warm = rt.solve()
+        epochs.append({"epoch": epoch,
+                       "warm_rounds": warm.rounds_run,
+                       "cold_rounds": int(cold_rounds),
+                       "residual": warm.residual})
+        C.csv_row(f"stream/epoch{epoch}", 0.0,
+                  f"warm_rounds={warm.rounds_run};"
+                  f"cold_rounds={int(cold_rounds)}")
+    results["initial_cold_rounds"] = cold0.rounds_run
+    results["epochs"] = epochs
+    warm_mean = float(np.mean([e["warm_rounds"] for e in epochs]))
+    cold_mean = float(np.mean([e["cold_rounds"] for e in epochs]))
+    results["warm_rounds_mean"] = warm_mean
+    results["cold_rounds_mean"] = cold_mean
+    results["rounds_saved_fraction"] = round(1.0 - warm_mean / cold_mean, 4)
+    if warm_mean >= cold_mean:
+        raise RuntimeError(
+            f"warm-started solves must reach tol in fewer rounds than "
+            f"cold starts (warm {warm_mean} vs cold {cold_mean})")
+
+    # -- serve throughput --------------------------------------------------
+    xs = np.asarray(test[0].x)
+    n_q = 64 if fast else 256
+    queries = [KernelQuery(uid=i, x=xs[:, i % xs.shape[1]])
+               for i in range(n_q)]
+    eng = DeKRRServeEngine(rt, batch_size=64)
+    eng.run([KernelQuery(uid=-1, x=xs[:, 0])])   # warm up
+    t0 = time.perf_counter()
+    out = eng.run(queries)
+    wall = time.perf_counter() - t0
+    assert all(q.done and q.staleness is not None for q in out)
+    results["serve"] = {
+        "queries": n_q,
+        "batch_size": 64,
+        "qps": round(n_q / wall, 1),
+        "staleness_residual": out[-1].staleness.residual,
+    }
+    C.csv_row("stream/serve", wall / n_q * 1e6,
+              f"qps={results['serve']['qps']}")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+        f.write("\n")
+    print(f"stream/json,0.0,wrote={os.path.relpath(OUT_PATH, REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    run(fast=("--fast" in sys.argv) or ("--smoke" in sys.argv))

@@ -27,27 +27,45 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.core.rff import FeatureMap, sample_rff
+from repro.core.rff import FeatureMap, featurize, sample_rff
+
+
+def _fold_paired(per_feature: jax.Array, fmap: FeatureMap) -> jax.Array:
+    """Collapse per-feature values to per-frequency scores.
+
+    A cos_sin map carries two feature channels per frequency ω (the cos row
+    and the sin row, stacked [cos; sin]); both score families assign ω the
+    SUM of its two channels' values. cos_bias maps are one channel per
+    frequency, so this is the identity there. [num_features] →
+    [num_frequencies].
+    """
+    if fmap.kind == "cos_sin":
+        d = fmap.num_frequencies
+        return per_feature[:d] + per_feature[d:]
+    return per_feature
+
+
+def _channels(fmap: FeatureMap, x: jax.Array) -> jax.Array:
+    """Unscaled per-feature channel matrix [num_features, N]: the rows of
+    the feature map before the 1/√D (or √(2/D)) normalization — the layout
+    `_fold_paired` folds back to frequencies."""
+    proj = fmap.omega @ x                              # [D, N]
+    if fmap.kind == "cos_sin":
+        return jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=0)
+    return jnp.cos(proj + fmap.bias[:, None])
 
 
 def energy_scores(fmap: FeatureMap, x: jax.Array, y: jax.Array) -> jax.Array:
     """Per-frequency energy score on data (X [d,N], Y [1,N] or [N])."""
     y = y.reshape(-1)
     n = y.shape[0]
-    proj = fmap.omega @ x                              # [D, N]
-    if fmap.kind == "cos_sin":
-        c = jnp.cos(proj) @ y
-        s = jnp.sin(proj) @ y
-        return (c**2 + s**2) / (n**2)
-    c = jnp.cos(proj + fmap.bias[:, None]) @ y
-    return (c**2) / (n**2)
+    align = _channels(fmap, x) @ y                     # [num_features]
+    return _fold_paired(align**2, fmap) / (n**2)
 
 
 def leverage_scores(fmap: FeatureMap, x: jax.Array,
                     lam: float = 1e-6) -> jax.Array:
     """Ridge leverage score per frequency (paired features are summed)."""
-    from repro.core.rff import featurize
-
     z = featurize(fmap, x)                             # [D_feat, N]
     n = z.shape[1]
     g = z @ z.T                                        # [D_feat, D_feat]
@@ -55,11 +73,7 @@ def leverage_scores(fmap: FeatureMap, x: jax.Array,
     # τ = diag(G (G + λN I)^{-1}) via Cholesky solve.
     sol = jax.scipy.linalg.cho_solve(
         jax.scipy.linalg.cho_factor(g + reg), g)
-    tau = jnp.diag(sol)
-    if fmap.kind == "cos_sin":
-        d = fmap.num_frequencies
-        tau = tau[:d] + tau[d:]
-    return tau
+    return _fold_paired(jnp.diag(sol), fmap)
 
 
 def select_features(

@@ -29,13 +29,39 @@ pinned):
   SPMD, pallas(_fused)    exact (per-round    exact (masked per-round kernel;
                           kernel; no cross-   no cross-round fusion over the
                           device fusion)      collective)
-  solve-level tol stop    supported           batched only (per-round freeze;
-                                              unsupported on SPMD)
+  solve-level tol stop    supported           supported (per-round freeze;
+                          (batched + SPMD     all-silent rounds never latch;
+                          via fused pmax)     batched + SPMD via fused pmax)
+  warm start (theta0)     supported           supported (θ0 also seeds the
+                          (batched + SPMD)    censor reference + staleness
+                                              buffers, batched + SPMD)
   ======================  ==================  =================================
 
 "exact" = agrees with the corresponding reference at rtol 1e-9 under x64,
 and bit-for-bit with the synchronous path of the same backend when the
 async schedule degenerates to it (prob = 1, bernoulli, censoring off).
+
+Streaming modes (`repro.stream`, warm-start × backend × sync/async): the
+online runtime folds minibatches into the Eq. 17 auxiliaries by rank-b
+Woodbury updates and re-enters the SAME solvers above — every cell of the
+table is reachable with a carried θ0:
+
+  ==========================  =============================================
+  streaming entry point       executes as
+  ==========================  =============================================
+  StreamingDeKRR.solve,       `solve_batched(packed, R, theta0=θ,
+  sync (any backend)          backend=..., tol=...)` — fused-kernel rounds
+                              included ("pallas"/"pallas_fused")
+  StreamingDeKRR.solve,       `async_solve_batched(..., theta0=θ)` with the
+  async (any backend)         per-solve folded PRNG key; same tol freeze
+  SPMD deployment             `make_spmd_solver(...)(packed, R, theta0=θ,
+                              tol=...)` / `make_async_spmd_solver` — warm
+                              start and tol stop added for exactly this
+  ==========================  =============================================
+
+After a per-node DDRF feature refresh changes `node_dims`, carried θ must
+be re-padded (`repro.stream.repad_theta`); `pack_theta`/`unpack_theta`
+validate against the live layout and reject stale iterates loudly.
 
 `pack_problem` builds the Eq. 17 auxiliaries batched (one vmapped program
 over the padded [J, D_max, …] layout). See `repro.dist.dekrr_spmd` for the

@@ -348,9 +348,21 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
 
     With ``config.is_synchronous`` the returned runner reproduces
     ``make_spmd_solver(mesh, axis_name, mode, backend)`` bit-for-bit.
-    ``tol`` early stopping is not offered here — the whole point of the
-    async schedule is a fixed communication budget; stop decisions belong
-    to the batched runtime.
+
+    The returned runner is ``run(packed, num_iters, key, config=...,
+    theta0=None, tol=0.0, return_rounds=False)``: ``theta0`` warm-starts
+    the iteration exactly like `init_async_state(packed, theta0)` (own θ,
+    censor reference, and staleness buffers all seeded from it — the
+    buffers via one pre-scan exchange); ``tol > 0`` enables the same
+    per-round early stop as `async_solve_batched` — a fused `lax.pmax`
+    of the per-device max|Δθ| gives every device the network-wide delta,
+    so the per-device while_loops agree on the trip count and exit
+    together after the converging round (a genuine stop: no further
+    compute or exchange runs, unlike the batched solve's chunk-internal
+    freeze), and all-silent rounds never latch the stop (their Δθ ≡ 0
+    is the schedule idling, not convergence); θ and the round count
+    match the batched async solve exactly. ``return_rounds=True``
+    appends the rounds-run int32 scalar.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
@@ -361,22 +373,22 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
     spec = PartitionSpec(axis_name)
     rep = PartitionSpec()
 
-    @partial(jax.jit, static_argnames=("offsets", "gossip", "censored"))
-    def _run(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds, *,
-             offsets, gossip, censored):
+    @partial(jax.jit, static_argnames=("offsets", "gossip", "censored",
+                                       "tol"))
+    def _run(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds, theta0, *,
+             offsets, gossip, censored, tol):
         j_nodes = d.shape[0]
         k_slots = p.shape[1]
 
-        def node_program(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds):
+        def node_program(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds,
+                         theta0):
             me = lax.axis_index(axis_name)
             live = nbr_mask[0] != 0                          # [K]
             # the sync solver's θ exchange, verbatim (shared helper)
             exchange = _make_exchange(mode, axis_name, j_nodes, offsets,
                                       nbr_idx)
 
-            def round_fn(carry, xs):
-                theta, sent, buffers = carry
-                mask_r, thr_r = xs
+            def one_round(theta, sent, buffers, mask_r, thr_r):
                 active = mask_r[me]
                 if backend in _PALLAS_BACKENDS:
                     from repro.kernels.ops import dekrr_step
@@ -407,25 +419,74 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
                 else:
                     gate = live
                 buffers = jnp.where(gate[:, None], payload, buffers)
-                return (new, sent_new, buffers), None
+                return new, sent_new, buffers
 
-            theta0 = jnp.zeros_like(d)                       # [1, D]
-            buffers0 = jnp.zeros((k_slots, d.shape[1]), d.dtype)
-            (theta, _, _), _ = lax.scan(
-                round_fn, (theta0, theta0, buffers0), (masks, thresholds))
-            return theta
+            # round-0 staleness view: every buffer holds its neighbor's
+            # θ0 (init_async_state semantics — masked slots carry the
+            # node's own θ0, exactly like theta0[nbr_idx]), fetched with
+            # one pre-scan exchange; exact zeros on the cold start
+            buffers0 = exchange(theta0)
+
+            if tol == 0.0:
+                def round_fn(carry, xs):
+                    theta, sent, buffers = carry
+                    mask_r, thr_r = xs
+                    return one_round(theta, sent, buffers, mask_r,
+                                     thr_r), None
+
+                (theta, _, _), _ = lax.scan(
+                    round_fn, (theta0, theta0, buffers0),
+                    (masks, thresholds))
+                return theta, jnp.full((1,), masks.shape[0], jnp.int32)
+
+            # genuine early exit (matches the sync SPMD solver): the
+            # pmax-fused delta keeps the per-device while_loop trip
+            # counts identical, so the in-body collectives stay matched
+            # and a converged solve stops paying for the budget's tail.
+            def cond_fn(carry):
+                _, _, _, converged, rounds = carry
+                return jnp.logical_not(converged) & (rounds < masks.shape[0])
+
+            def body_fn(carry):
+                theta, sent, buffers, converged, rounds = carry
+                mask_r = lax.dynamic_index_in_dim(masks, rounds, 0,
+                                                  keepdims=False)
+                thr_r = lax.dynamic_index_in_dim(thresholds, rounds, 0,
+                                                 keepdims=False)
+                new, sent_new, buf_new = one_round(theta, sent, buffers,
+                                                   mask_r, thr_r)
+                delta = lax.pmax(jnp.max(jnp.abs(new - theta)), axis_name)
+                # all-silent rounds have Δθ ≡ 0 by construction — the
+                # schedule idling, not convergence (same latch rule as
+                # the batched async solve)
+                converged = converged | (jnp.any(mask_r) & (delta < tol))
+                return new, sent_new, buf_new, converged, rounds + 1
+
+            theta, _, _, _, rounds = lax.while_loop(
+                cond_fn, body_fn,
+                (theta0, theta0, buffers0, jnp.asarray(False),
+                 jnp.asarray(0, jnp.int32)))
+            return theta, jnp.reshape(rounds, (1,))
 
         sharded = shard_map(
             node_program, mesh=mesh,
-            in_specs=(spec, spec, spec, spec, spec, spec, rep, rep),
-            out_specs=spec,
-            check_rep=(backend not in _PALLAS_BACKENDS),
+            in_specs=(spec, spec, spec, spec, spec, spec, rep, rep, spec),
+            out_specs=(spec, spec),
+            # tol path: jax 0.4.x's scan rule rejects the pmax-derived
+            # `converged` carry (replication changes across the carry);
+            # the error text itself prescribes check_rep=False there.
+            check_rep=(backend not in _PALLAS_BACKENDS and tol == 0.0),
         )
-        return sharded(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds)
+        return sharded(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds,
+                       theta0)
 
     def run(packed: PackedProblem, num_iters: int, key: jax.Array,
-            config: AsyncGossipConfig = AsyncGossipConfig()) -> jax.Array:
+            config: AsyncGossipConfig = AsyncGossipConfig(),
+            theta0: jax.Array | None = None, *, tol: float = 0.0,
+            return_rounds: bool = False):
         _check_spmd_problem(packed, mesh, axis_name, mode)
+        if tol < 0:
+            raise ValueError(f"tol must be >= 0, got {tol}")
         num_iters = int(num_iters)
         edges = _packed_edges(packed) if config.gossip == "edge" else None
         masks = activation_masks(key, num_iters, packed.num_nodes,
@@ -434,9 +495,15 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
         thresholds = censor_schedule(
             config.censor_tau, config.censor_decay, num_iters,
             dtype=packed.d.dtype)
-        return _run(packed.g, packed.d, packed.s, packed.p,
-                    packed.nbr_idx, packed.nbr_mask, masks, thresholds,
-                    offsets=packed.offsets, gossip=config.gossip,
-                    censored=config.censored)
+        if theta0 is None:
+            theta0 = jnp.zeros_like(packed.d)
+        theta, rounds = _run(packed.g, packed.d, packed.s, packed.p,
+                             packed.nbr_idx, packed.nbr_mask, masks,
+                             thresholds, theta0, offsets=packed.offsets,
+                             gossip=config.gossip,
+                             censored=config.censored, tol=float(tol))
+        if return_rounds:
+            return theta, jnp.max(rounds)
+        return theta
 
     return run

@@ -318,42 +318,38 @@ def pack_trace_count() -> int:
     return _PACK_TRACE_COUNT
 
 
-def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
-    """Numpy-stage padded [J, …] inputs for the batched Eq. 17 build.
+def _stage_feature_maps(fmaps, dtype) -> dict:
+    """Numpy-stage a uniform-kind feature-map list into padded [J, …]
+    arrays: omega [J, F_max, d], bias [J, F_max], feat_idx [J, D_max]
+    (row map from raw featurize space — size F_max or 2·F_max — into the
+    packed feature space: identity for cos_bias; for cos_sin node j's
+    live rows are [0, F_j) ∪ [F_max, F_max + F_j) made contiguous),
+    feat_mask [J, D_max], and the per-node scale (√(2/F_j) or 1/√F_j).
 
-    All cross-node gathering (neighbor Ω/b/X/masks by slot) happens here
-    with vectorized fancy indexing, so the traced builder is a pure vmap
-    over the leading node axis — which is what makes the per-node batch-of-1
-    replay in the regression test bit-identical to the batched call.
+    Shared by `pack_problem`'s batched build and `repro.stream` — the
+    stream's rtol-1e-9 parity contract depends on bit-identical staging,
+    so there is exactly one copy of these conventions.
     """
-    if gram_backend is None:
-        gram_backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    kind = solver.feature_maps[0].kind
-    j_nodes = solver.J
-    dtype = np.asarray(solver.data[0].x).dtype
-
-    freqs = np.array([fm.num_frequencies for fm in solver.feature_maps])
-    dims = np.array([fm.num_features for fm in solver.feature_maps])
-    sizes = np.array([nd.num_samples for nd in solver.data])
-    f_max, d_max, n_max = int(freqs.max()), int(dims.max()), int(sizes.max())
-    dim_in = solver.data[0].x.shape[0]
+    kinds = {fm.kind for fm in fmaps}
+    if len(kinds) > 1:
+        raise ValueError(
+            f"feature-map staging requires a uniform kind across nodes "
+            f"(got {sorted(kinds)}) — mixed kinds are only supported by "
+            f"the ragged pack_problem(method='aux') path")
+    kind = fmaps[0].kind
+    j_nodes = len(fmaps)
+    dim_in = fmaps[0].omega.shape[1]
+    freqs = np.array([fm.num_frequencies for fm in fmaps])
+    dims = np.array([fm.num_features for fm in fmaps])
+    f_max, d_max = int(freqs.max()), int(dims.max())
 
     omega = np.zeros((j_nodes, f_max, dim_in), dtype=dtype)
     bias = np.zeros((j_nodes, f_max), dtype=dtype)
-    x = np.zeros((j_nodes, dim_in, n_max), dtype=dtype)
-    y = np.zeros((j_nodes, n_max), dtype=dtype)
-    for j, (fm, nd) in enumerate(zip(solver.feature_maps, solver.data)):
+    for j, fm in enumerate(fmaps):
         omega[j, :freqs[j]] = np.asarray(fm.omega)
         if fm.bias is not None:
             bias[j, :freqs[j]] = np.asarray(fm.bias)
-        x[j, :, :sizes[j]] = np.asarray(nd.x)
-        y[j, :sizes[j]] = np.asarray(nd.y).reshape(-1)
-    col_mask = (np.arange(n_max)[None, :] < sizes[:, None]).astype(dtype)
     feat_mask = (np.arange(d_max)[None, :] < dims[:, None]).astype(dtype)
-
-    # Row map from raw featurize space (size F_max or 2·F_max) into the
-    # packed feature space: identity for cos_bias; for cos_sin node j's live
-    # rows are [0, F_j) ∪ [F_max, F_max + F_j) made contiguous.
     if kind == "cos_bias":
         feat_idx = np.broadcast_to(np.arange(d_max, dtype=np.int32),
                                    (j_nodes, d_max)).copy()
@@ -364,6 +360,39 @@ def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
             feat_idx[j, :2 * fj] = np.concatenate(
                 [np.arange(fj), f_max + np.arange(fj)])
         scale = (1.0 / np.sqrt(freqs)).astype(dtype)
+    return dict(omega=omega, bias=bias, feat_idx=feat_idx,
+                feat_mask=feat_mask, scale=scale, kind=kind,
+                node_dims=tuple(int(v) for v in dims))
+
+
+def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
+    """Numpy-stage padded [J, …] inputs for the batched Eq. 17 build.
+
+    All cross-node gathering (neighbor Ω/b/X/masks by slot) happens here
+    with vectorized fancy indexing, so the traced builder is a pure vmap
+    over the leading node axis — which is what makes the per-node batch-of-1
+    replay in the regression test bit-identical to the batched call.
+    """
+    if gram_backend is None:
+        gram_backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    j_nodes = solver.J
+    dtype = np.asarray(solver.data[0].x).dtype
+
+    maps = _stage_feature_maps(solver.feature_maps, dtype)
+    kind = maps["kind"]
+    omega, bias = maps["omega"], maps["bias"]
+    feat_idx, feat_mask = maps["feat_idx"], maps["feat_mask"]
+    scale = maps["scale"]
+    sizes = np.array([nd.num_samples for nd in solver.data])
+    n_max = int(sizes.max())
+    dim_in = solver.data[0].x.shape[0]
+
+    x = np.zeros((j_nodes, dim_in, n_max), dtype=dtype)
+    y = np.zeros((j_nodes, n_max), dtype=dtype)
+    for j, nd in enumerate(solver.data):
+        x[j, :, :sizes[j]] = np.asarray(nd.x)
+        y[j, :sizes[j]] = np.asarray(nd.y).reshape(-1)
+    col_mask = (np.arange(n_max)[None, :] < sizes[:, None]).astype(dtype)
 
     ct_self, ct_nei = solver.coupling_coefficients()
     degs = solver.topology.degrees.astype(dtype)
@@ -388,7 +417,7 @@ def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
     if gram_backend == "pallas" and kind == "cos_bias" and j_nodes > 0:
         staged.update(_pallas_gram_blocks(staged))
     # bookkeeping for _finish_packed (not builder inputs)
-    staged["_meta"] = (tuple(int(v) for v in dims), nbr_idx, offsets)
+    staged["_meta"] = (maps["node_dims"], nbr_idx, offsets)
     return staged
 
 
@@ -567,11 +596,14 @@ def pack_theta(packed: PackedProblem,
                theta: Sequence[jax.Array]) -> jax.Array:
     """Ragged per-node θ list → padded [J, D_max] (inverse of unpack).
 
-    Validates each vector against the packed layout — a θ_j longer than
-    its node's D_j (from `packed.node_dims`, or D_max when dims were not
-    recorded) would either crash deep in `jnp.pad` with a negative pad
-    width or silently put mass on padded coordinates the iteration
-    treats as dead.
+    Vectors shorter than their node's D_j re-pad with exact zeros, so a θ
+    taken from a packing whose dims have since *grown* (e.g. a per-node
+    DDRF feature refresh in `repro.stream` that enlarged D_j) round-trips
+    cleanly. Vectors *longer* than D_j (from `packed.node_dims`, or D_max
+    when dims were not recorded) are rejected with a clear error — such a
+    θ is stale against this layout, and padding it would either crash
+    deep in `jnp.pad` with a negative pad width or silently put mass on
+    padded coordinates the iteration treats as dead.
     """
     theta = list(theta)
     if len(theta) != packed.num_nodes:
@@ -585,16 +617,33 @@ def pack_theta(packed: PackedProblem,
         if t.shape[0] > limit:
             raise ValueError(
                 f"theta[{j}] has {t.shape[0]} coordinates but node {j} "
-                f"has D_j = {limit} (D_max = {d_max}) — θ vectors must "
-                f"fit the packed.node_dims layout")
+                f"has D_j = {limit} (D_max = {d_max}) — this θ is stale "
+                f"against the packed layout (was node {j}'s feature map "
+                f"refreshed to fewer features?). Re-derive it for the "
+                f"current dims (repro.stream.repad_theta re-pads carried "
+                f"iterates across a refresh).")
     return jnp.stack([jnp.pad(t, (0, d_max - t.shape[0])) for t in theta])
 
 
 def unpack_theta(packed: PackedProblem,
                  theta: jax.Array) -> list[jax.Array]:
-    """Padded [J, D_max] θ → ragged per-node list (reference layout)."""
+    """Padded [J, D_max] θ → ragged per-node list (reference layout).
+
+    Validates θ against the packed layout: a θ from a different packing
+    (e.g. carried across a `repro.stream` feature refresh that changed
+    D_max) must not be sliced silently — slicing a too-narrow θ would
+    truncate node vectors without any error.
+    """
     if packed.node_dims is None:
         raise ValueError("packed problem has no node_dims recorded")
+    want = (packed.num_nodes, packed.max_features)
+    if theta.shape != want:
+        raise ValueError(
+            f"unpack_theta got θ of shape {theta.shape} for a packed "
+            f"problem of shape {want} — this θ belongs to a different "
+            f"packing (stale across a feature refresh that re-padded "
+            f"D_max?). Unpack it with ITS packing, then re-pack "
+            f"(or use repro.stream.repad_theta).")
     return [theta[j, :dj] for j, dj in enumerate(packed.node_dims)]
 
 
@@ -874,6 +923,24 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
     (ppermute/all_gather), so rounds cannot be fused across the
     collective — cross-round fusion exists only in the single-core
     batched runtime (`solve_batched(backend="pallas_fused")`).
+
+    The returned runner is
+    ``run(packed, num_iters, theta0=None, *, tol=0.0,
+    return_rounds=False)``:
+
+      * ``theta0`` ([J, D_max], sharded like θ) warm-starts the iteration
+        — the `repro.stream` runtime's carried iterate; None runs from
+        zeros exactly as before.
+      * ``tol > 0`` enables per-round early stopping: each device reduces
+        its local max|Δθ| and a fused `lax.pmax` over the node axis makes
+        every device see the NETWORK-wide delta, so every per-device
+        `lax.while_loop` takes the same trip decision and the in-body
+        collectives stay matched. The exit is genuine — after the
+        converging round no further compute OR exchange runs, so a
+        converged solve stops paying for the budget's tail; θ and the
+        round count exactly match
+        ``solve_batched(..., tol=tol, chunk_rounds=1)``.
+      * ``return_rounds=True`` appends the rounds-run int32 scalar.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
@@ -883,19 +950,21 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
 
     spec = PartitionSpec(axis_name)
 
-    # One jitted program per (shapes, num_iters, offsets) — repeat calls of
-    # the returned `run` hit the jit cache instead of re-tracing shard_map.
-    @partial(jax.jit, static_argnames=("num_iters", "offsets"))
-    def _run(g, d, s, p, nbr_idx, nbr_mask, *, num_iters, offsets):
+    # One jitted program per (shapes, num_iters, offsets, tol) — repeat
+    # calls of the returned `run` hit the jit cache instead of re-tracing
+    # shard_map.
+    @partial(jax.jit, static_argnames=("num_iters", "offsets", "tol"))
+    def _run(g, d, s, p, nbr_idx, nbr_mask, theta0, *, num_iters, offsets,
+             tol):
         j_nodes = d.shape[0]
         k_slots = p.shape[1]
 
-        def node_program(g, d, s, p, nbr_idx, nbr_mask):
+        def node_program(g, d, s, p, nbr_idx, nbr_mask, theta0):
             # Every operand arrives with a leading per-device axis of 1.
             exchange = _make_exchange(mode, axis_name, j_nodes, offsets,
                                       nbr_idx)
 
-            def round_fn(theta, _):
+            def one_round(theta):
                 nbr_theta = exchange(theta)
                 if backend in _PALLAS_BACKENDS:
                     from repro.kernels.ops import dekrr_step
@@ -904,33 +973,71 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
                     table = jnp.concatenate([theta, nbr_theta], axis=0)
                     local_idx = jnp.arange(
                         1, k_slots + 1, dtype=jnp.int32)[None]
-                    new = dekrr_step(
+                    return dekrr_step(
                         g, d, s, p, table, local_idx,
                         jnp.zeros((1,), jnp.int32), nbr_mask)
-                else:
-                    new = _node_step(g[0], d[0], s[0], p[0], theta[0],
-                                     nbr_theta, nbr_mask[0])[None]
-                return new, None
+                return _node_step(g[0], d[0], s[0], p[0], theta[0],
+                                  nbr_theta, nbr_mask[0])[None]
 
-            theta0 = jnp.zeros_like(d)
-            theta, _ = lax.scan(round_fn, theta0, None, length=num_iters)
-            return theta
+            if tol == 0.0:
+                def round_fn(theta, _):
+                    return one_round(theta), None
+
+                theta, _ = lax.scan(round_fn, theta0, None,
+                                    length=num_iters)
+                rounds = jnp.full((1,), num_iters, jnp.int32)
+                return theta, rounds
+
+            # genuine early exit: the pmax-fused delta makes the trip
+            # decision identical on every device, so the per-device
+            # while_loops run the same number of rounds and the
+            # collectives inside the body stay matched — converged solves
+            # stop paying for the rest of the budget (the warm-start
+            # common case).
+            def cond_fn(carry):
+                _, converged, rounds = carry
+                return jnp.logical_not(converged) & (rounds < num_iters)
+
+            def body_fn(carry):
+                theta, converged, rounds = carry
+                new = one_round(theta)
+                delta = lax.pmax(jnp.max(jnp.abs(new - theta)), axis_name)
+                return new, converged | (delta < tol), rounds + 1
+
+            theta, _, rounds = lax.while_loop(
+                cond_fn, body_fn,
+                (theta0, jnp.asarray(False), jnp.asarray(0, jnp.int32)))
+            return theta, jnp.reshape(rounds, (1,))
 
         sharded = shard_map(
             node_program, mesh=mesh,
-            in_specs=(spec, spec, spec, spec, spec, spec),
-            out_specs=spec,
-            # jax 0.4.x has no replication rule for pallas_call; every
-            # operand/output here is explicitly sharded anyway.
-            check_rep=(backend not in _PALLAS_BACKENDS),
+            in_specs=(spec, spec, spec, spec, spec, spec, spec),
+            out_specs=(spec, spec),
+            # jax 0.4.x has no replication rule for pallas_call, and its
+            # scan rule rejects the pmax-derived `converged` carry of the
+            # tol path (replication changes across the carry — the error
+            # text itself prescribes check_rep=False); every operand and
+            # output here is explicitly sharded anyway (the per-device
+            # round counts are pmax-synchronized copies).
+            check_rep=(backend not in _PALLAS_BACKENDS and tol == 0.0),
         )
-        return sharded(g, d, s, p, nbr_idx, nbr_mask)
+        return sharded(g, d, s, p, nbr_idx, nbr_mask, theta0)
 
-    def run(packed: PackedProblem, num_iters: int) -> jax.Array:
+    def run(packed: PackedProblem, num_iters: int,
+            theta0: jax.Array | None = None, *, tol: float = 0.0,
+            return_rounds: bool = False):
         _check_spmd_problem(packed, mesh, axis_name, mode)
-        return _run(packed.g, packed.d, packed.s, packed.p, packed.nbr_idx,
-                    packed.nbr_mask, num_iters=int(num_iters),
-                    offsets=packed.offsets)
+        if tol < 0:
+            raise ValueError(f"tol must be >= 0, got {tol}")
+        if theta0 is None:
+            theta0 = jnp.zeros_like(packed.d)
+        theta, rounds = _run(packed.g, packed.d, packed.s, packed.p,
+                             packed.nbr_idx, packed.nbr_mask, theta0,
+                             num_iters=int(num_iters),
+                             offsets=packed.offsets, tol=float(tol))
+        if return_rounds:
+            return theta, jnp.max(rounds)
+        return theta
 
     return run
 

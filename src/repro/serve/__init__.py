@@ -1,3 +1,4 @@
+from repro.serve.dekrr import DeKRRServeEngine, KernelQuery
 from repro.serve.engine import Request, ServeEngine
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["DeKRRServeEngine", "KernelQuery", "Request", "ServeEngine"]

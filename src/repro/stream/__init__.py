@@ -1,0 +1,73 @@
+"""Online / streaming DeKRR-DDRF runtime.
+
+The batch runtimes (`repro.core`, `repro.dist`) solve Algorithm 1 on
+frozen node data. This package is the online layer: nodes ingest samples
+over time, fold them into the paper's quantities incrementally, refresh
+their data-dependent features when the local distribution drifts — the
+"varies significantly on the number or distribution" regime the paper is
+designed for — and continue the consensus solve from the carried iterate,
+in the low-communication spirit of COKE (arXiv:2001.10133) and the
+distributed online analyses of Richards et al. (arXiv:2007.00360).
+
+Module → paper-equation map (what each module MAINTAINS):
+
+  `updates.py` — Eq. 17, incrementally. The per-node auxiliaries
+      G_j = A_j⁻¹, d_j, S_j, P_{j,p} as rank-b Woodbury updates per
+      ingested minibatch (O(D² b) for the node and each neighbor instead
+      of an O(D³ + D² N) rebuild), in the packed [J, D_max, …] layout of
+      `repro.dist.PackedProblem`; `refresh_node` rebuilds exactly one
+      node's Eq. 17 slot after a feature-map change; `to_packed`
+      materializes the live packed program; `repad_theta` carries Eq. 19
+      iterates across a layout change.
+
+  `drift.py` — §III-B's DDRF selection scores, as a drift statistic. The
+      energy / kernel-polarization score ([33], the S(ω) of Eq. 11-
+      adjacent discussion) and ridge leverage score ([35, 36]) of the
+      node's SELECTED frequencies, re-scored on a window of fresh samples
+      and compared to the selection-time reference by total variation;
+      a threshold policy turns it into a refresh trigger.
+
+  `runtime.py` — Eq. 19, warm-started. `StreamingDeKRR` interleaves
+      ingest → (maybe refresh) → consensus continuation: the carried θ
+      seeds `repro.dist.solve_batched` / `async_solve_batched` (every
+      backend: "xla", "pallas", "pallas_fused"; sync Jacobi or async
+      gossip) with tol-based round budgeting, and exports θ snapshots
+      with staleness bounds for serving.
+
+  `repro.serve.dekrr` (sibling package) — Eq. 1's predictor
+      f_j(x) = θ_jᵀ z_j(x), batched over queries with per-answer
+      staleness bounds.
+
+Exactness contract: after ANY ingest/refresh sequence, the stream state
+equals a from-scratch `pack_problem` + solve on the accumulated data at
+rtol 1e-9 under x64 (the ridge is pinned at stream start — see
+`updates.py` for the normalization algebra and `reference_lam` for the
+from-scratch comparison's λ).
+"""
+from repro.stream.drift import DriftConfig, DriftDetector, DriftVerdict
+from repro.stream.runtime import (IngestReport, RefreshReport, ServeSnapshot,
+                                  SolveReport, StalenessBound, StreamConfig,
+                                  StreamingDeKRR)
+from repro.stream.updates import (StreamAux, ingest, init_stream_aux,
+                                  reference_lam, refresh_node, repad_theta,
+                                  to_packed)
+
+__all__ = [
+    "DriftConfig",
+    "DriftDetector",
+    "DriftVerdict",
+    "IngestReport",
+    "RefreshReport",
+    "ServeSnapshot",
+    "SolveReport",
+    "StalenessBound",
+    "StreamAux",
+    "StreamConfig",
+    "StreamingDeKRR",
+    "ingest",
+    "init_stream_aux",
+    "reference_lam",
+    "refresh_node",
+    "repad_theta",
+    "to_packed",
+]

@@ -1,0 +1,399 @@
+"""`StreamingDeKRR` — the online DeKRR-DDRF event loop.
+
+Ties the streaming layers together around the packed runtime:
+
+    ingest(j, Xb, Yb)  ──► rank-b Woodbury fold (`repro.stream.updates`)
+          │                     O(deg · D² b), no O(D³), no data replay
+          ├──► drift check (`repro.stream.drift`) ──► maybe refresh:
+          │        DDRF re-selection on the node's accumulated data,
+          │        single-slot rebuild, θ re-padded across the layout
+          └──► solve(...): WARM-STARTED consensus continuation —
+                   `repro.dist.solve_batched` (sync Jacobi) or
+                   `repro.dist.async_solve_batched` (COKE-style gossip),
+                   any backend ("xla" | "pallas" | "pallas_fused"),
+                   θ carried across epochs, tol-based round budgeting
+
+The runtime's packed problem is always materializable exactly: after any
+ingest/refresh sequence, `self.packed` equals `pack_problem` on the
+accumulated data at the stream's pinned-ridge normalization
+(`reference_solver()` builds that from-scratch comparison; rtol 1e-9
+under x64 — the acceptance contract of tests/test_stream.py). Because θ
+is carried, each epoch's solve continues from the previous consensus
+instead of re-running the full Eq. 19 round count — `benchmarks/
+stream_bench.py` traces the warm-vs-cold rounds-to-tol gap.
+
+`snapshot()` exports an immutable view (feature maps + ragged θ + a
+staleness bound) for the query-serving path (`repro.serve.dekrr`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_gossip import AsyncGossipConfig
+from repro.core.ddrf import select_features
+from repro.core.dekrr import DeKRRConfig, DeKRRSolver, NodeData
+from repro.core.rff import FeatureMap, featurize
+from repro.dist import async_solve_batched, solve_batched, step_batched
+from repro.stream.drift import DriftConfig, DriftDetector, DriftVerdict
+from repro.stream.updates import (StreamAux, ingest as _fold, init_stream_aux,
+                                  reference_lam, refresh_node, repad_theta,
+                                  to_packed)
+
+__all__ = [
+    "StreamConfig",
+    "StreamingDeKRR",
+    "IngestReport",
+    "RefreshReport",
+    "SolveReport",
+    "StalenessBound",
+]
+
+_GOSSIP = ("sync", "async")
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Streaming-runtime policy knobs.
+
+    backend / gossip pick how the warm-started consensus continuation
+    executes — every combination the packed runtime supports ("xla" |
+    "pallas" | "pallas_fused" × "sync" | "async"). `rounds_per_epoch` is
+    the per-solve round budget; with `tol > 0` the solve stops early on
+    max|Δθ| < tol (warm starts make this the common case). `drift`
+    enables automatic per-node feature refreshes; refreshed maps are
+    re-selected with `refresh_method` on the node's accumulated data at
+    kernel bandwidth `sigma` — None (default) recovers the bandwidth
+    from the node's CURRENT frequencies (ω ~ N(0, σ⁻²I), so
+    σ̂ = 1/std(ω) is the maximum-likelihood estimate), which keeps a
+    drift-triggered refresh on the kernel the stream was built with
+    instead of silently resetting to some fixed default.
+    """
+
+    backend: str = "xla"
+    gossip: str = "sync"
+    async_config: AsyncGossipConfig = AsyncGossipConfig()
+    rounds_per_epoch: int = 200
+    tol: float = 1e-8
+    chunk_rounds: int | None = None
+    drift: DriftConfig | None = None
+    refresh_method: str = "energy"
+    refresh_candidate_ratio: int = 10
+    sigma: float | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.gossip not in _GOSSIP:
+            raise ValueError(f"gossip must be one of {_GOSSIP}, "
+                             f"got {self.gossip!r}")
+        if self.rounds_per_epoch < 1:
+            raise ValueError("rounds_per_epoch must be >= 1")
+        if self.tol < 0:
+            raise ValueError("tol must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class StalenessBound:
+    """How stale an answer computed from a θ snapshot can be.
+
+    theta_version:   increments on every solve.
+    ingests_behind:  ingest events folded since θ was last solved.
+    samples_behind:  samples those ingests carried.
+    residual:        max|F(θ) − θ| of the snapshot θ under the CURRENT
+                     packed operator (one extra Eq. 19 round) — the
+                     contraction residual; θ is within
+                     residual / (1 − ρ(M)) of the live fixed point.
+    """
+
+    theta_version: int
+    ingests_behind: int
+    samples_behind: int
+    residual: float
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestReport:
+    node: int
+    batch_size: int
+    drift: DriftVerdict | None
+    refreshed: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RefreshReport:
+    node: int
+    old_features: int
+    new_features: int
+    repadded: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveReport:
+    rounds_run: int
+    budget: int
+    converged: bool
+    residual: float
+    theta_version: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSnapshot:
+    """Immutable θ view for the serving path (`repro.serve.dekrr`)."""
+
+    feature_maps: tuple[FeatureMap, ...]
+    theta: tuple[jax.Array, ...]
+    staleness: StalenessBound
+
+
+class StreamingDeKRR:
+    """Online DeKRR runtime over a fixed topology with streaming node data.
+
+    Construct from a `DeKRRSolver` snapshot (topology + per-node DDRF
+    feature maps + initial data); the solver is only read, never mutated.
+    """
+
+    def __init__(self, solver: DeKRRSolver,
+                 config: StreamConfig = StreamConfig()):
+        self.config = config
+        self.topology = solver.topology
+        self.feature_maps = list(solver.feature_maps)
+        self.aux: StreamAux = init_stream_aux(solver)
+        # Accumulated raw data as per-node CHUNK lists (appended per
+        # ingest, concatenated lazily by _node_data) — copying the whole
+        # history on every minibatch would make ingest O(N) instead of
+        # the O(D² b) the Woodbury fold delivers.
+        self._x = [[np.array(np.asarray(nd.x))] for nd in solver.data]
+        self._y = [[np.array(np.asarray(nd.y)).reshape(-1)]
+                   for nd in solver.data]
+        self._c_nei = list(solver.c_nei)
+        self._c_self_ratio = float(solver.config.c_self_ratio)
+        self.theta = jnp.zeros_like(self.aux.zy)
+        self._packed = None
+        self._detector = (DriftDetector(self.feature_maps, solver.data,
+                                        config.drift)
+                          if config.drift is not None else None)
+        self.theta_version = 0
+        self.ingest_count = 0
+        self.refresh_count = 0
+        self._ingests_since_solve = 0
+        self._samples_since_solve = 0
+        self._residual = float("inf")
+        self._staleness_cache: tuple | None = None
+
+    # -- views --------------------------------------------------------------
+    @property
+    def num_nodes(self) -> int:
+        return self.aux.num_nodes
+
+    @property
+    def packed(self):
+        """The live `PackedProblem` (cached; invalidated by ingest/refresh)."""
+        if self._packed is None:
+            self._packed = to_packed(self.aux)
+        return self._packed
+
+    def _node_data(self, j: int) -> tuple[np.ndarray, np.ndarray]:
+        """Node j's accumulated (x [d, N_j], y [N_j]); collapses the
+        pending chunk list in place (amortized — reads are rare)."""
+        if len(self._x[j]) > 1:
+            self._x[j] = [np.concatenate(self._x[j], axis=1)]
+            self._y[j] = [np.concatenate(self._y[j])]
+        return self._x[j][0], self._y[j][0]
+
+    def accumulated_data(self) -> list[NodeData]:
+        pairs = [self._node_data(j) for j in range(self.num_nodes)]
+        return [NodeData(x=jnp.asarray(x), y=jnp.asarray(y))
+                for x, y in pairs]
+
+    def reference_solver(self) -> DeKRRSolver:
+        """From-scratch `DeKRRSolver` on the accumulated data that
+        reproduces the stream state exactly (pinned-ridge normalization:
+        λ_eff = λ·n_ref/n_live — see `repro.stream.updates`)."""
+        return DeKRRSolver(
+            self.topology, self.feature_maps, self.accumulated_data(),
+            DeKRRConfig(lam=reference_lam(self.aux), c_nei=1.0,
+                        c_self_ratio=self._c_self_ratio),
+            c_nei_per_node=self._c_nei, build_aux=False)
+
+    # -- event loop ---------------------------------------------------------
+    def ingest(self, node: int, xb, yb) -> IngestReport:
+        """Fold a minibatch into the Eq. 17 auxiliaries; run the drift
+        policy; auto-refresh the node's features when it fires."""
+        j = int(node)
+        xb = np.asarray(xb)
+        yb = np.asarray(yb).reshape(-1)
+        self.aux = _fold(self.aux, j, xb, yb)
+        if xb.shape[1]:
+            self._x[j].append(xb.astype(self._x[j][0].dtype))
+            self._y[j].append(yb.astype(self._y[j][0].dtype))
+        self._packed = None
+        self.ingest_count += 1
+        self._ingests_since_solve += 1
+        self._samples_since_solve += xb.shape[1]
+
+        verdict = None
+        refreshed = False
+        if self._detector is not None:
+            verdict = self._detector.observe(j, xb, yb)
+            if verdict.refresh:
+                self.refresh(j)
+                refreshed = True
+        return IngestReport(node=j, batch_size=int(xb.shape[1]),
+                            drift=verdict, refreshed=refreshed)
+
+    def refresh(self, node: int, num_features: int | None = None,
+                key: jax.Array | None = None) -> RefreshReport:
+        """Re-run DDRF selection for one node on its accumulated data and
+        rebuild only that node's slot in the packed program. θ is carried
+        across the (possibly re-padded) layout with the refreshed node
+        reset to zero — its old iterate lives in the old feature basis."""
+        j = int(node)
+        cfg = self.config
+        old_dims = self.aux.node_dims
+        old_dj = old_dims[j]
+        if key is None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(cfg.seed), 1000 + self.refresh_count)
+        # `num_features` counts packed FEATURES (D_j), but select_features
+        # counts frequencies — a cos_sin map carries 2 features per
+        # frequency, so a default refresh must pass F_j, not D_j = 2·F_j
+        # (otherwise every drift-triggered refresh would double the node).
+        want_features = num_features if num_features is not None else old_dj
+        if self.aux.kind == "cos_sin":
+            if want_features % 2:
+                raise ValueError(
+                    f"cos_sin maps carry 2 features per frequency — "
+                    f"num_features must be even, got {want_features}")
+            want_freqs = want_features // 2
+        else:
+            want_freqs = want_features
+        if cfg.sigma is not None:
+            sigma = cfg.sigma
+        else:
+            # recover the node's kernel bandwidth from its live map:
+            # ω ~ N(0, σ⁻² I) ⇒ σ̂ = 1/std(ω) (MLE over all entries)
+            spread = float(np.std(np.asarray(self.feature_maps[j].omega)))
+            sigma = 1.0 / spread if spread > 0 else 1.0
+        x_j, y_j = self._node_data(j)
+        new_fmap = select_features(
+            key, x_j.shape[0], want_freqs,
+            sigma, jnp.asarray(x_j), jnp.asarray(y_j),
+            method=cfg.refresh_method,
+            candidate_ratio=cfg.refresh_candidate_ratio,
+            kind=self.aux.kind)
+        self.feature_maps[j] = new_fmap
+        # only the node and its live neighbors are read by the rebuild —
+        # collapse exactly those chunk lists
+        needed = {j} | {int(p) for p, live in
+                        zip(np.asarray(self.aux.nbr_idx[j]),
+                            np.asarray(self.aux.nbr_mask[j])) if live}
+        data_x: list = [None] * self.num_nodes
+        for i in needed:
+            data_x[i] = self._node_data(i)[0]
+        self.aux = refresh_node(self.aux, j, new_fmap, self.feature_maps,
+                                data_x, y_j)
+        self.theta = repad_theta(self.theta, old_dims, self.aux.node_dims,
+                                 reset=(j,))
+        self._packed = None
+        self.refresh_count += 1
+        if self._detector is not None:
+            self._detector.rebase(j, new_fmap, *self._node_data(j))
+        return RefreshReport(node=j, old_features=old_dj,
+                             new_features=new_fmap.num_features,
+                             repadded=max(self.aux.node_dims)
+                             != max(old_dims))
+
+    def solve(self, rounds: int | None = None,
+              tol: float | None = None) -> SolveReport:
+        """Warm-started consensus continuation: up to `rounds` Eq. 19
+        rounds from the carried θ, on the configured backend and gossip
+        mode, stopping early at `tol`. Carries θ forward."""
+        cfg = self.config
+        budget = int(rounds if rounds is not None else cfg.rounds_per_epoch)
+        tol = float(cfg.tol if tol is None else tol)
+        packed = self.packed
+        if cfg.gossip == "sync":
+            theta, rounds_run = solve_batched(
+                packed, budget, self.theta, backend=cfg.backend, tol=tol,
+                chunk_rounds=cfg.chunk_rounds, return_rounds=True)
+        else:
+            key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed),
+                                     self.theta_version)
+            theta, rounds_run = async_solve_batched(
+                packed, budget, key, config=cfg.async_config,
+                theta0=self.theta, backend=cfg.backend, tol=tol,
+                chunk_rounds=cfg.chunk_rounds, return_rounds=True)
+        self.theta = theta
+        self.theta_version += 1
+        self._ingests_since_solve = 0
+        self._samples_since_solve = 0
+        self._residual = self._contraction_residual()
+        # seed the staleness cache — the bound for this exact state is
+        # already known, so the next snapshot() must not recompute it
+        self._staleness_cache = (
+            (self.theta_version, self.ingest_count, self.refresh_count),
+            StalenessBound(theta_version=self.theta_version,
+                           ingests_behind=0, samples_behind=0,
+                           residual=self._residual))
+        rounds_run = int(rounds_run)
+        return SolveReport(rounds_run=rounds_run, budget=budget,
+                           converged=rounds_run < budget
+                           or self._residual < tol,
+                           residual=self._residual,
+                           theta_version=self.theta_version)
+
+    def step_epoch(self, batches) -> tuple[list[IngestReport], SolveReport]:
+        """One event-loop epoch: ingest every (node, xb, yb) in `batches`
+        (drift-triggered refreshes included), then run the warm-started
+        solve continuation."""
+        reports = [self.ingest(node, xb, yb) for node, xb, yb in batches]
+        return reports, self.solve()
+
+    # -- staleness / serving ------------------------------------------------
+    def _contraction_residual(self) -> float:
+        new = step_batched(self.packed, self.theta,
+                           backend=self.config.backend)
+        return float(jnp.max(jnp.abs(new - self.theta)))
+
+    def staleness(self) -> StalenessBound:
+        """Live staleness bound of the carried θ against the CURRENT
+        operator (ingests folded since the last solve shift the fixed
+        point; the residual is recomputed against the live packed
+        program). Cached per (solve, ingest, refresh) state, so a serve
+        engine re-snapshotting every wave pays the extra Eq. 19 round
+        only when something actually changed."""
+        state_key = (self.theta_version, self.ingest_count,
+                     self.refresh_count)
+        if self._staleness_cache is None \
+                or self._staleness_cache[0] != state_key:
+            bound = StalenessBound(
+                theta_version=self.theta_version,
+                ingests_behind=self._ingests_since_solve,
+                samples_behind=self._samples_since_solve,
+                residual=self._contraction_residual(),
+            )
+            self._staleness_cache = (state_key, bound)
+        return self._staleness_cache[1]
+
+    def snapshot(self) -> ServeSnapshot:
+        """Immutable view for the serving path."""
+        theta = tuple(self.theta[j, :dj]
+                      for j, dj in enumerate(self.aux.node_dims))
+        return ServeSnapshot(feature_maps=tuple(self.feature_maps),
+                             theta=theta, staleness=self.staleness())
+
+    def predict(self, x, node: int | None = None) -> jax.Array:
+        """f_j(x) for one node, or the network-average prediction, from
+        the carried θ (convenience path; the batched serving engine is
+        `repro.serve.dekrr.DeKRRServeEngine`)."""
+        x = jnp.asarray(x)
+        snap_theta = [self.theta[j, :dj]
+                      for j, dj in enumerate(self.aux.node_dims)]
+        if node is not None:
+            return snap_theta[node] @ featurize(self.feature_maps[node], x)
+        preds = [snap_theta[j] @ featurize(self.feature_maps[j], x)
+                 for j in range(self.num_nodes)]
+        return jnp.mean(jnp.stack(preds), axis=0)

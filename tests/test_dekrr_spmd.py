@@ -110,6 +110,19 @@ SPMD_SCRIPT = textwrap.dedent("""
         got = make_spmd_solver(mesh, "nodes", mode)(packed, 40)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-9, atol=1e-12)
+
+    # tol early-stop (fused pmax; all devices agree on the stop round) +
+    # warm start: must match the batched per-round tol check exactly
+    want_t, want_rounds = solve_batched(packed, 600, tol=1e-8,
+                                        chunk_rounds=1, return_rounds=True)
+    run = make_spmd_solver(mesh, "nodes", "ppermute")
+    got_t, got_rounds = run(packed, 600, tol=1e-8, return_rounds=True)
+    assert int(got_rounds) == int(want_rounds) < 600, (
+        int(got_rounds), int(want_rounds))
+    np.testing.assert_allclose(np.asarray(got_t), np.asarray(want_t),
+                               rtol=1e-9, atol=1e-12)
+    _, rounds2 = run(packed, 600, got_t, tol=1e-8, return_rounds=True)
+    assert int(rounds2) <= 1, int(rounds2)
     print("SPMD-PARITY-OK")
 """)
 

@@ -66,6 +66,48 @@ def test_theta_pack_unpack_round_trip(j_nodes, d_lo, d_hi, seed):
         np.asarray(pack_theta(packed, back)), np.asarray(theta))
 
 
+@given(j_nodes=st.integers(3, 10), seed=st.integers(0, 2**16),
+       grow=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_theta_roundtrip_after_dims_refresh_property(j_nodes, seed, grow):
+    """A per-node feature refresh changes node_dims (possibly D_max): θ
+    from the old packing must re-pad losslessly into the new one when
+    dims only grew, and raise a CLEAR error — never silently truncate —
+    when a stale θ meets shrunken dims or a re-padded width."""
+    rng = np.random.default_rng(seed)
+    old_dims = rng.integers(4, 12, j_nodes)
+    topo = circulant(j_nodes, (1,))
+    old_packed = _synthetic_packed(old_dims, topo)
+    ragged = [jnp.asarray(rng.normal(size=dj)) for dj in old_dims]
+    theta_old = pack_theta(old_packed, ragged)
+
+    # refresh node 0 with MORE features (D_max may grow): lossless re-pad
+    new_dims = old_dims.copy()
+    new_dims[0] = old_dims[0] + grow
+    new_packed = _synthetic_packed(new_dims, topo)
+    carried = list(ragged)
+    carried[0] = jnp.zeros(int(new_dims[0]))    # refreshed node: new basis
+    repacked = pack_theta(new_packed, carried)
+    back = unpack_theta(new_packed, repacked)
+    for j in range(1, j_nodes):
+        np.testing.assert_array_equal(np.asarray(back[j]),
+                                      np.asarray(ragged[j]))
+    np.testing.assert_array_equal(
+        np.asarray(pack_theta(new_packed, back)), np.asarray(repacked))
+
+    # refresh node 0 with FEWER features: the stale θ is rejected loudly
+    shrunk = old_dims.copy()
+    shrunk[0] = max(1, old_dims[0] - 1)
+    shrunk_packed = _synthetic_packed(shrunk, topo)
+    with pytest.raises(ValueError, match="stale"):
+        pack_theta(shrunk_packed, ragged)
+
+    # a packed θ of the wrong width never truncates silently
+    if max(new_dims) != max(old_dims):
+        with pytest.raises(ValueError, match="different packing"):
+            unpack_theta(new_packed, theta_old)
+
+
 # --------------------------------------------------------------------------
 # Slot-table invariants
 # --------------------------------------------------------------------------

@@ -1,0 +1,481 @@
+"""repro.stream conformance: the online runtime against the batch rebuild.
+
+The acceptance contract: after ANY ingest/refresh sequence the stream
+state must match a from-scratch `pack_problem` + solve on the accumulated
+data at rtol 1e-9 under x64 (the ridge pinned at stream start —
+`reference_lam` gives the from-scratch λ), on every backend the runtime
+claims. Covers:
+
+  * rank-b Woodbury ingest parity after k minibatches, over
+    {circulant, star, Erdős–Rényi, J=1} × both DDRF score families;
+  * refresh-then-solve == solve-from-scratch on the refreshed features
+    (D_j growing past the old D_max and shrinking below it);
+  * StreamingDeKRR backend × gossip conformance and warm-start economics;
+  * drift detection (stationary quiet / shifted loud) and the auto
+    refresh trigger;
+  * the serving path (wave batching, kernel vs XLA featurize parity,
+    staleness bounds);
+  * θ re-padding across refreshes and the SPMD tol/warm-start satellites.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from conftest import cached_fmaps, cached_split
+from repro.core import (AsyncGossipConfig, DeKRRConfig, DeKRRSolver,
+                        Topology, circulant, erdos_renyi, select_features,
+                        star)
+from repro.dist import (async_solve_batched, make_async_spmd_solver,
+                        make_spmd_solver, pack_problem, pack_theta,
+                        solve_batched, unpack_theta)
+from repro.serve import DeKRRServeEngine, KernelQuery
+from repro.stream import (DriftConfig, DriftDetector, StreamConfig,
+                          StreamingDeKRR, ingest, init_stream_aux,
+                          reference_lam, repad_theta)
+
+LAM = 1e-3          # keeps cond(A) ≲ 1e5 so Woodbury vs direct inversion
+                    # agree far below the rtol 1e-9 gate
+
+
+def _single_node() -> Topology:
+    return Topology(adjacency=np.zeros((1, 1), dtype=bool))
+
+
+def _solver(topo, dims, method="energy", sub=300, seed=0):
+    j = topo.num_nodes
+    ds, train, _ = cached_split("air_quality", j, subsample=sub, seed=seed)
+    fmaps = cached_fmaps("air_quality", j, tuple(dims), method=method,
+                         subsample=sub, seed=seed)
+    n = sum(t.num_samples for t in train)
+    return DeKRRSolver(topo, fmaps, train,
+                       DeKRRConfig(lam=LAM, c_nei=0.02 * n),
+                       build_aux=False), ds
+
+
+def _reference(rt: StreamingDeKRR) -> DeKRRSolver:
+    return rt.reference_solver()
+
+
+def _assert_packed_close(got, want, rtol=1e-9):
+    assert got.node_dims == want.node_dims
+    assert got.offsets == want.offsets
+    np.testing.assert_array_equal(np.asarray(got.nbr_idx),
+                                  np.asarray(want.nbr_idx))
+    for name in ("g", "d", "s", "p", "theta_mask"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(got, name)), np.asarray(getattr(want, name)),
+            rtol=rtol, atol=1e-12, err_msg=name)
+
+
+# --------------------------------------------------------------------------
+# Woodbury ingest parity vs full rebuild
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("topo,dims", [
+    (circulant(6, (1, 2)), [8, 12, 16, 8, 12, 16]),
+    (star(5), [6, 8, 10, 12, 14]),
+    (erdos_renyi(7, 0.5, seed=1), [9] * 7),
+    (_single_node(), [10]),
+])
+@pytest.mark.parametrize("method", ["energy", "leverage"])
+def test_ingest_parity_vs_full_rebuild(topo, dims, method):
+    """After k minibatches the Woodbury-maintained packed state equals a
+    from-scratch pack_problem on the accumulated data, rtol 1e-9 x64."""
+    solver, ds = _solver(topo, dims, method=method)
+    rt = StreamingDeKRR(solver)
+    rng = np.random.default_rng(7)
+    j = topo.num_nodes
+    plan = [(0, 5), (j - 1, 17), (j // 2, 3), (0, 9)]
+    for node, b in plan:
+        rt.ingest(node, rng.normal(size=(ds.dim, b)), rng.normal(size=b))
+    _assert_packed_close(rt.packed, pack_problem(_reference(rt)))
+    # …and the solve from that state is the from-scratch solve
+    want = solve_batched(pack_problem(_reference(rt)), 50)
+    got = solve_batched(rt.packed, 50)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_reference_lam_tracks_pinned_ridge():
+    solver, ds = _solver(circulant(6, (1, 2)), [8] * 6)
+    rt = StreamingDeKRR(solver)
+    n0 = rt.aux.n_live
+    assert reference_lam(rt.aux) == pytest.approx(LAM)
+    rng = np.random.default_rng(0)
+    rt.ingest(0, rng.normal(size=(ds.dim, 50)), rng.normal(size=50))
+    assert reference_lam(rt.aux) == pytest.approx(LAM * n0 / (n0 + 50))
+
+
+def test_empty_minibatch_is_identity():
+    solver, ds = _solver(_single_node(), [10])
+    aux = init_stream_aux(solver)
+    aux2 = ingest(aux, 0, np.zeros((ds.dim, 0)), np.zeros(0))
+    assert aux2.n_live == aux.n_live
+    np.testing.assert_array_equal(np.asarray(aux2.binv),
+                                  np.asarray(aux.binv))
+
+
+# --------------------------------------------------------------------------
+# Feature refresh
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("new_d", [18, 6])     # grows past D_max / shrinks
+def test_refresh_then_solve_matches_scratch(new_d):
+    solver, ds = _solver(circulant(6, (1, 2)), [8, 12, 10, 8, 12, 10])
+    rt = StreamingDeKRR(solver)
+    rng = np.random.default_rng(3)
+    rt.ingest(1, rng.normal(size=(ds.dim, 11)), rng.normal(size=11))
+    old_dims = rt.aux.node_dims
+    rep = rt.refresh(1, num_features=new_d)
+    assert rep.new_features == new_d
+    assert rep.repadded == (max(rt.aux.node_dims) != max(old_dims))
+    # packed parity on the refreshed features
+    want_packed = pack_problem(_reference(rt))
+    _assert_packed_close(rt.packed, want_packed)
+    # refresh-then-solve == solve-from-scratch on the refreshed features
+    want = solve_batched(want_packed, 60)
+    got = solve_batched(rt.packed, 60)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-12)
+    # the refreshed node's carried θ reset to the new basis
+    assert not np.any(np.asarray(rt.theta[1]))
+    # further ingests stay exact after the refresh
+    rt.ingest(1, rng.normal(size=(ds.dim, 6)), rng.normal(size=6))
+    rt.ingest(2, rng.normal(size=(ds.dim, 4)), rng.normal(size=4))
+    _assert_packed_close(rt.packed, pack_problem(_reference(rt)))
+
+
+def test_cos_sin_refresh_keeps_feature_count():
+    """Regression: `num_features` counts packed features (D_j), but
+    select_features counts frequencies — a cos_sin default refresh must
+    NOT double the node (D_j = 2·F_j)."""
+    topo = circulant(5, (1,))
+    ds, train, _ = cached_split("air_quality", 5, subsample=300, seed=0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    fmaps = [select_features(keys[j], ds.dim, 6, 1.0, train[j].x,
+                             train[j].y, method="energy",
+                             candidate_ratio=5, kind="cos_sin")
+             for j in range(5)]
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=LAM, c_nei=0.02 * n),
+                         build_aux=False)
+    rt = StreamingDeKRR(solver)
+    assert rt.aux.node_dims == (12,) * 5          # 2 features / frequency
+    rep = rt.refresh(2)                           # default: keep the size
+    assert rep.old_features == rep.new_features == 12
+    assert rt.aux.node_dims == (12,) * 5
+    _assert_packed_close(rt.packed, pack_problem(_reference(rt)))
+    with pytest.raises(ValueError, match="even"):
+        rt.refresh(2, num_features=7)
+    rng = np.random.default_rng(0)
+    rt.ingest(2, rng.normal(size=(ds.dim, 6)), rng.normal(size=6))
+    _assert_packed_close(rt.packed, pack_problem(_reference(rt)))
+
+
+def test_refresh_preserves_other_nodes_bits():
+    """Only the refreshed node's slot (and the neighbor P̃ blocks that
+    couple against it) may change — every other inverse is bit-identical."""
+    solver, ds = _solver(circulant(6, (1, 2)), [10] * 6)
+    rt = StreamingDeKRR(solver)
+    before = np.asarray(rt.aux.binv).copy()
+    rt.refresh(2, num_features=10)
+    after = np.asarray(rt.aux.binv)
+    for j in range(6):
+        if j == 2:
+            continue
+        np.testing.assert_array_equal(before[j], after[j])
+
+
+# --------------------------------------------------------------------------
+# θ re-padding across refreshes (satellite: pack/unpack round-trip)
+# --------------------------------------------------------------------------
+def test_theta_roundtrip_across_growing_refresh():
+    solver, _ = _solver(circulant(6, (1, 2)), [8, 12, 10, 8, 12, 10])
+    rt = StreamingDeKRR(solver)
+    rt.solve(rounds=30, tol=0.0)
+    old_packed = rt.packed
+    ragged_old = unpack_theta(old_packed, rt.theta)
+    rt.refresh(0, num_features=20)             # D_max 12 → 20
+    new_packed = rt.packed
+    # non-refreshed nodes' θ re-pads losslessly into the new layout
+    carried = list(ragged_old)
+    carried[0] = jnp.zeros(new_packed.node_dims[0],
+                           np.asarray(rt.theta).dtype)
+    repacked = pack_theta(new_packed, carried)
+    np.testing.assert_allclose(np.asarray(repacked), np.asarray(rt.theta),
+                               rtol=0, atol=0)
+    # and the full round-trip is the identity in the new layout
+    np.testing.assert_array_equal(
+        np.asarray(pack_theta(new_packed,
+                              unpack_theta(new_packed, repacked))),
+        np.asarray(repacked))
+
+
+def test_stale_theta_raises_clear_errors():
+    solver, _ = _solver(circulant(6, (1, 2)), [8, 12, 10, 8, 12, 10])
+    rt = StreamingDeKRR(solver)
+    rt.solve(rounds=10, tol=0.0)
+    old_packed = rt.packed
+    theta_old = rt.theta
+    ragged_old = unpack_theta(old_packed, theta_old)
+    rt.refresh(1, num_features=4)              # node 1: 12 → 4 features
+    new_packed = rt.packed
+    # stale ragged θ against refreshed dims → loud, names the refresh
+    with pytest.raises(ValueError, match="stale"):
+        pack_theta(new_packed, ragged_old)
+    # stale packed θ of the wrong width → loud (no silent truncation)
+    rt2 = StreamingDeKRR(_solver(circulant(6, (1, 2)),
+                                 [8, 12, 10, 8, 12, 10])[0])
+    rt2.refresh(0, num_features=20)
+    with pytest.raises(ValueError, match="different packing"):
+        unpack_theta(rt2.packed, theta_old)
+    # repad_theta is the sanctioned carry: reset the refreshed node
+    carried = repad_theta(theta_old, old_packed.node_dims,
+                          new_packed.node_dims, reset=(1,))
+    assert carried.shape == (6, new_packed.max_features)
+    assert not np.any(np.asarray(carried[1]))
+    with pytest.raises(ValueError, match="stale"):
+        repad_theta(theta_old, old_packed.node_dims, new_packed.node_dims)
+
+
+# --------------------------------------------------------------------------
+# StreamingDeKRR: backend × gossip conformance + warm-start economics
+# --------------------------------------------------------------------------
+def _stream_epochs(backend, gossip, seed=0):
+    solver, ds = _solver(circulant(5, (1,)), [8, 10, 12, 8, 10])
+    cfg = StreamConfig(backend=backend, gossip=gossip,
+                       async_config=AsyncGossipConfig(prob=0.5),
+                       rounds_per_epoch=40, tol=0.0, seed=seed)
+    rt = StreamingDeKRR(solver, cfg)
+    rng = np.random.default_rng(11)
+    for _ in range(2):
+        batches = [(j, rng.normal(size=(ds.dim, 6)), rng.normal(size=6))
+                   for j in (0, 3)]
+        rt.step_epoch(batches)
+    return rt.theta
+
+
+@pytest.mark.parametrize("gossip", ["sync", "async"])
+def test_streaming_backend_conformance(gossip):
+    """θ after interleaved ingest/solve epochs agrees across every backend
+    the runtime claims (xla / pallas / pallas_fused), sync and async."""
+    want = _stream_epochs("xla", gossip)
+    for backend in ("pallas", "pallas_fused"):
+        got = _stream_epochs(backend, gossip)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_streaming_state_matches_scratch_solve_all_backends():
+    """Acceptance: after an ingest/refresh sequence, StreamingDeKRR's
+    packed state + solve match from-scratch pack_problem + solve on the
+    accumulated data, on every backend."""
+    solver, ds = _solver(circulant(5, (1,)), [8, 10, 12, 8, 10])
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=30, tol=0.0))
+    rng = np.random.default_rng(5)
+    rt.ingest(0, rng.normal(size=(ds.dim, 8)), rng.normal(size=8))
+    rt.ingest(2, rng.normal(size=(ds.dim, 12)), rng.normal(size=12))
+    rt.refresh(4, num_features=14)
+    rt.ingest(4, rng.normal(size=(ds.dim, 5)), rng.normal(size=5))
+    scratch = pack_problem(_reference(rt))
+    _assert_packed_close(rt.packed, scratch)
+    for backend in ("xla", "pallas", "pallas_fused"):
+        got = solve_batched(rt.packed, 40, backend=backend)
+        want = solve_batched(scratch, 40)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_warm_start_reaches_tol_in_fewer_rounds():
+    solver, ds = _solver(circulant(6, (1, 2)), [10] * 6)
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=600,
+                                             tol=1e-9))
+    cold = rt.solve()
+    assert cold.converged and cold.rounds_run < 600
+    rng = np.random.default_rng(2)
+    rt.ingest(1, rng.normal(size=(ds.dim, 10)), rng.normal(size=10))
+    warm = rt.solve()
+    assert warm.converged
+    assert warm.rounds_run < cold.rounds_run
+    # the warm continuation still lands on the from-scratch fixed point
+    # (within the tol-ball: residual/(1−ρ) with ρ bounded away from 1)
+    star_ = solve_batched(pack_problem(_reference(rt)), 5000, tol=1e-13)
+    np.testing.assert_allclose(np.asarray(rt.theta), np.asarray(star_),
+                               rtol=0, atol=5e-7)
+
+
+def test_staleness_bound_tracks_ingest_and_solve():
+    solver, ds = _solver(circulant(5, (1,)), [8] * 5)
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=300,
+                                             tol=1e-9))
+    rt.solve()
+    s0 = rt.staleness()
+    assert s0.theta_version == 1 and s0.ingests_behind == 0
+    assert s0.residual < 1e-8
+    rng = np.random.default_rng(4)
+    rt.ingest(0, rng.normal(size=(ds.dim, 20)), rng.normal(size=20))
+    s1 = rt.staleness()
+    assert s1.ingests_behind == 1 and s1.samples_behind == 20
+    assert s1.residual > s0.residual     # the fixed point moved under θ
+    rt.solve()
+    assert rt.staleness().ingests_behind == 0
+
+
+# --------------------------------------------------------------------------
+# Drift detection
+# --------------------------------------------------------------------------
+def test_drift_quiet_on_stationary_loud_on_shift():
+    solver, ds = _solver(circulant(5, (1,)), [10] * 5)
+    det = DriftDetector(solver.feature_maps, solver.data,
+                        DriftConfig(threshold=0.3, min_samples=24))
+    x0 = np.asarray(solver.data[0].x)
+    y0 = np.asarray(solver.data[0].y).reshape(-1)
+    # stationary window: re-feed the node's own training data
+    quiet = det.observe(0, x0[:, :30], y0[:30])
+    assert quiet.stat is not None and quiet.stat < 0.3
+    # shifted window: scaled/translated inputs with unrelated labels
+    rng = np.random.default_rng(0)
+    loud = det.observe(0, rng.normal(size=(ds.dim, 30)) * 6.0 + 4.0,
+                       rng.normal(size=30) * 10.0)
+    assert loud.stat is not None and loud.stat > quiet.stat
+    # windows below min_samples never issue a verdict
+    pending = det.observe(1, x0[:, :4], y0[:4])
+    assert pending.stat is None and not pending.refresh
+
+
+def test_runtime_auto_refresh_on_drift():
+    solver, ds = _solver(circulant(5, (1,)), [10] * 5)
+    cfg = StreamConfig(drift=DriftConfig(threshold=0.05, min_samples=16),
+                       rounds_per_epoch=30, tol=0.0)
+    rt = StreamingDeKRR(solver, cfg)
+    rng = np.random.default_rng(1)
+    rep = rt.ingest(3, rng.normal(size=(ds.dim, 24)) * 8.0 + 5.0,
+                    rng.normal(size=24) * 10.0)
+    assert rep.drift is not None and rep.drift.stat is not None
+    assert rep.refreshed and rt.refresh_count == 1
+    # the refreshed state is still exactly rebuildable
+    _assert_packed_close(rt.packed, pack_problem(_reference(rt)))
+
+
+# --------------------------------------------------------------------------
+# Serving path
+# --------------------------------------------------------------------------
+def test_serve_engine_matches_predict_with_staleness():
+    solver, ds = _solver(circulant(5, (1,)), [10] * 5)
+    _, _, test = cached_split("air_quality", 5, subsample=300, seed=0)
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=300,
+                                             tol=1e-9))
+    rt.solve()
+    xs = np.asarray(test[0].x)[:, :9]
+    want_mean = np.asarray(rt.predict(jnp.asarray(xs)))
+    want_node = np.asarray(rt.predict(jnp.asarray(xs), node=2))
+    for backend in ("xla", "pallas"):
+        eng = DeKRRServeEngine(rt, batch_size=4, backend=backend)
+        queries = [KernelQuery(uid=i, x=xs[:, i]) for i in range(9)]
+        queries.append(KernelQuery(uid=99, x=xs, node=2))
+        out = eng.run(queries)
+        got = np.array([q.prediction for q in out[:9]])
+        np.testing.assert_allclose(got, want_mean, rtol=1e-9, atol=1e-12,
+                                   err_msg=backend)
+        np.testing.assert_allclose(np.asarray(out[9].prediction),
+                                   want_node, rtol=1e-9, atol=1e-12)
+        for q in out:
+            assert q.done and q.staleness is not None
+            assert q.staleness.theta_version == 1
+            assert q.staleness.residual < 1e-8
+
+
+def test_serve_staleness_reflects_unsolved_ingest():
+    solver, ds = _solver(circulant(5, (1,)), [8] * 5)
+    rt = StreamingDeKRR(solver, StreamConfig(rounds_per_epoch=300,
+                                             tol=1e-9))
+    rt.solve()
+    rng = np.random.default_rng(9)
+    rt.ingest(0, rng.normal(size=(ds.dim, 16)), rng.normal(size=16))
+    out = DeKRRServeEngine(rt, batch_size=8).run(
+        [KernelQuery(uid=0, x=np.zeros(ds.dim))])
+    bound = out[0].staleness
+    assert bound.ingests_behind == 1 and bound.samples_behind == 16
+
+
+# --------------------------------------------------------------------------
+# SPMD satellites: tol early-stop + warm start (single-device exact case;
+# the multi-device sweep lives in the dekrr_spmd subprocess test and the
+# CI multidevice smoke below)
+# --------------------------------------------------------------------------
+def _spmd_mesh_1():
+    return Mesh(np.array(jax.devices()[:1]), ("nodes",))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_spmd_tol_and_warm_start_single_node(backend):
+    solver, _ = _solver(_single_node(), [12])
+    packed = pack_problem(solver)
+    want, want_rounds = solve_batched(packed, 600, tol=1e-8,
+                                      chunk_rounds=1, return_rounds=True)
+    run = make_spmd_solver(_spmd_mesh_1(), "nodes", mode="allgather",
+                          backend=backend)
+    got, got_rounds = run(packed, 600, tol=1e-8, return_rounds=True)
+    assert int(got_rounds) == int(want_rounds) < 600
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-12)
+    # warm start: from the converged θ the solve stops immediately
+    _, rounds2 = run(packed, 600, got, tol=1e-8, return_rounds=True)
+    assert int(rounds2) <= 1
+    # tol=0 path unchanged: full budget, pinned to solve_batched
+    base = run(packed, 50)
+    np.testing.assert_allclose(np.asarray(base),
+                               np.asarray(solve_batched(packed, 50)),
+                               rtol=1e-9, atol=1e-12)
+
+
+def test_async_spmd_tol_and_warm_start_single_node():
+    solver, _ = _solver(_single_node(), [12])
+    packed = pack_problem(solver)
+    key = jax.random.PRNGKey(3)
+    config = AsyncGossipConfig(prob=0.5)
+    want, want_rounds = async_solve_batched(
+        packed, 1000, key, config=config, tol=1e-8, return_rounds=True)
+    run = make_async_spmd_solver(_spmd_mesh_1(), "nodes", mode="allgather")
+    got, got_rounds = run(packed, 1000, key, config, tol=1e-8,
+                          return_rounds=True)
+    assert int(got_rounds) == int(want_rounds) < 1000
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-12)
+    # warm start parity against the batched async warm start
+    theta0 = jnp.ones_like(packed.d) * packed.theta_mask
+    want_w = async_solve_batched(packed, 30, key, config=config,
+                                 theta0=theta0)
+    got_w = run(packed, 30, key, config, theta0)
+    np.testing.assert_allclose(np.asarray(got_w), np.asarray(want_w),
+                               rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 4,
+                    reason="needs >=4 devices (CI multidevice smoke)")
+def test_spmd_tol_multidevice_smoke():
+    topo = circulant(4, (1,))
+    solver, _ = _solver(topo, [8, 10, 12, 8])
+    packed = pack_problem(solver)
+    mesh = Mesh(np.array(jax.devices()[:4]), ("nodes",))
+    want, want_rounds = solve_batched(packed, 300, tol=1e-8,
+                                      chunk_rounds=1, return_rounds=True)
+    for mode, backend in (("ppermute", "xla"), ("allgather", "xla"),
+                          ("ppermute", "pallas")):
+        got, got_rounds = make_spmd_solver(mesh, "nodes", mode, backend)(
+            packed, 300, tol=1e-8, return_rounds=True)
+        assert int(got_rounds) == int(want_rounds) < 300
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-9, atol=1e-12)
+    key = jax.random.PRNGKey(0)
+    config = AsyncGossipConfig(prob=0.5)
+    want_a, rounds_a = async_solve_batched(packed, 300, key, config=config,
+                                           tol=1e-8, return_rounds=True)
+    got_a, got_rounds_a = make_async_spmd_solver(mesh, "nodes",
+                                                 "allgather")(
+        packed, 300, key, config, tol=1e-8, return_rounds=True)
+    assert int(got_rounds_a) == int(rounds_a)
+    np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                               rtol=1e-9, atol=1e-12)
