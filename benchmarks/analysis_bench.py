@@ -1,0 +1,49 @@
+"""Times the `repro.analysis` static passes so lint cost stays visible.
+
+The analysis CI job runs on every push — if the jaxpr pass (which traces
+all 15+ batched solver entry points) or the conventions AST sweep creeps
+from seconds into minutes, that is a regression in its own right even
+though no solver numerics changed. Rows:
+
+  analysis/conventions  AST lint over src/ + tests/ + benchmarks/
+  analysis/jaxpr        trace + lint every batched entry point
+  analysis/clean        1 iff both passes produced zero findings
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import csv_row
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(fast: bool = False) -> None:
+    from repro.analysis import conventions
+    from repro.analysis import jaxpr_lint
+
+    t0 = time.perf_counter()
+    paths = [os.path.join(REPO_ROOT, p)
+             for p in ("src", "tests", "benchmarks")]
+    conv = conventions.run_pass(paths, repo_root=REPO_ROOT)
+    csv_row("analysis/conventions", (time.perf_counter() - t0) * 1e6,
+            f"{len(conv)} findings")
+
+    t0 = time.perf_counter()
+    # SPMD entry points need a forced multi-device platform; auto-detect
+    # keeps this runnable in the default 1-device CI session.
+    jx = jaxpr_lint.run_pass()
+    csv_row("analysis/jaxpr", (time.perf_counter() - t0) * 1e6,
+            f"{len(jx)} findings")
+
+    clean = int(not conv and not jx)
+    csv_row("analysis/clean", 0.0, str(clean))
+    if not clean:
+        for f in conv + jx:
+            print(f"#   {f.render()}")
+        raise RuntimeError(f"{len(conv) + len(jx)} analysis finding(s)")
+
+
+if __name__ == "__main__":
+    run(fast=True)

@@ -21,12 +21,13 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (ablation_ddrf, async_gossip_bench,
-                            chebyshev_bench, comm_costs, convergence_curve,
-                            kernel_bench, paper_fig1_noniid_y,
-                            paper_fig2_noniid_xnorm, paper_fig3_imbalanced,
-                            paper_fig4_pernode, paper_table2, roofline,
-                            solve_bench, step_kernel_bench, stream_bench)
+    from benchmarks import (ablation_ddrf, analysis_bench,
+                            async_gossip_bench, chebyshev_bench, comm_costs,
+                            convergence_curve, kernel_bench,
+                            paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
+                            paper_fig3_imbalanced, paper_fig4_pernode,
+                            paper_table2, roofline, solve_bench,
+                            step_kernel_bench, stream_bench)
 
     suites = {
         "table2": paper_table2.run,
@@ -44,6 +45,7 @@ def main() -> None:
         "async": async_gossip_bench.run,
         "stream": stream_bench.run,
         "roofline": roofline.run,
+        "analysis": analysis_bench.run,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -1,0 +1,96 @@
+"""CLI for the static-analysis passes: ``python -m repro.analysis``.
+
+Runs the jaxpr lint (tracing the live solver entry points), the
+conventions AST linter, and reports VMEM budget findings surfaced by
+both. Exits nonzero iff any error-severity finding is produced, so CI
+can gate on it directly.
+
+Environment setup happens HERE, before jax is imported anywhere: the
+SPMD entry points need ≥ 4 host devices
+(``--xla_force_host_platform_device_count=4``) and the lint must run on
+CPU with x64 enabled to match the test suite's precision contract. That
+is why ``repro.analysis.__init__`` never imports jax — importing it
+first would freeze the platform config.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_PASSES = ("jaxpr", "conventions")
+
+
+def _setup_jax_env() -> None:
+    # Must run before the first jax import (jaxpr_lint imports jax at
+    # module top). Appending preserves any flags the caller already set.
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4").strip()
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verification of solver programs.")
+    parser.add_argument(
+        "paths", nargs="*", default=None,
+        help="files/dirs for the conventions pass (default: src/)")
+    parser.add_argument(
+        "--format", choices=("text", "json"), default="text")
+    parser.add_argument(
+        "--pass", dest="passes", action="append", choices=_PASSES,
+        help="run only the named pass(es); default: all")
+    parser.add_argument(
+        "--no-spmd", action="store_true",
+        help="skip the shard_map entry points (jaxpr pass)")
+    parser.add_argument(
+        "--repo-root", default=".",
+        help="root for relative finding locations and conftest lookup")
+    args = parser.parse_args(argv)
+
+    passes = tuple(args.passes) if args.passes else _PASSES
+    findings = []
+    timings: dict[str, float] = {}
+
+    if "jaxpr" in passes:
+        _setup_jax_env()
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        from repro.analysis import jaxpr_lint
+
+        t0 = time.perf_counter()
+        spmd = False if args.no_spmd else None  # None = auto-detect
+        findings += jaxpr_lint.run_pass(spmd=spmd)
+        timings["jaxpr"] = time.perf_counter() - t0
+
+    if "conventions" in passes:
+        from repro.analysis import conventions
+
+        root = os.path.abspath(args.repo_root)
+        paths = args.paths or [os.path.join(root, "src")]
+        t0 = time.perf_counter()
+        findings += conventions.run_pass(paths, repo_root=root)
+        timings["conventions"] = time.perf_counter() - t0
+
+    from repro.analysis.report import render_json, render_report
+
+    if args.format == "json":
+        extra = {"passes": list(passes),
+                 "timings_s": {k: round(v, 3) for k, v in timings.items()}}
+        print(render_json(findings, extra=extra))
+    else:
+        print(render_report(findings))
+        for name in passes:
+            if name in timings:
+                print(f"{name}: {timings[name]:.2f}s")
+
+    return 1 if any(f.severity == "error" for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

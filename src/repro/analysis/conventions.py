@@ -1,0 +1,309 @@
+"""AST-based linter for the repo's house contracts.
+
+Pure-Python (no jax import — safe to run before any device runtime is
+configured, and fast enough for CI on every push). Rules:
+
+  R001  Public solver entry points expose ``backend=`` — the xla/pallas/
+        pallas_fused switch is the repo's central API contract; an entry
+        point without it silently forks the backend matrix.
+  R002  No ``.item()`` / ``float()`` / ``int()`` / ``bool()`` on
+        tracer-typed values inside jitted code paths — each one is a
+        device→host sync that re-introduces the per-round stalls PR 3
+        removed. Applies inside functions decorated with ``jax.jit`` /
+        ``partial(jax.jit, …)`` and their nested functions. Host-static
+        expressions are exempt: bare names (static args, Python ints),
+        constants, ``len(…)``, and ``.shape``/``.ndim``/``.size``-style
+        property chains.
+  R003  Test files asserting at rtol ≤ 1e-6 must enable x64 — the
+        rtol-1e-9 parity contracts are meaningless at f32 (eps ≈ 1e-7),
+        and a test that forgets x64 passes vacuously at loose precision
+        or flakes. Satisfied by the file itself or an ancestor
+        ``conftest.py`` enabling ``jax_enable_x64``.
+  R004  Pallas ``interpret=`` is only set through the ops wrappers: raw
+        ``*_pallas(…, interpret=…)`` / ``pallas_call(…, interpret=…)``
+        outside ``src/repro/kernels/`` bypasses the padding/dispatch
+        contract the wrappers enforce.
+  R005  No bare ``except:`` — swallowing KeyboardInterrupt/SystemExit in
+        long solver runs makes hangs unkillable.
+
+A finding can be waived on its line with ``# analysis: ignore[R00x]``
+(or a blanket ``# analysis: ignore``) — every waiver is visible in the
+diff, unlike a lint that was never run.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable
+
+from repro.analysis.report import Finding
+
+# R001 — the packed/SPMD solver surface that must carry the backend switch.
+SOLVER_ENTRY_POINTS = frozenset({
+    "step_batched", "solve_batched",
+    "async_step_batched", "async_solve_batched",
+    "make_spmd_solver", "make_async_spmd_solver",
+})
+
+# R002 — attribute chains that read host-static metadata, never a tracer.
+_STATIC_ATTRS = frozenset({
+    "shape", "ndim", "size", "dtype", "itemsize",
+    "num_features", "num_frequencies", "num_nodes", "num_samples",
+    "num_slots", "max_features", "node_dims", "offsets",
+})
+_SYNC_CASTS = frozenset({"float", "int", "bool"})
+
+# R003 — rtol at or below this demands x64 (f32 eps ≈ 1.2e-7).
+_RTOL_X64_THRESHOLD = 1e-6
+_X64_MARKERS = ("jax_enable_x64", "JAX_ENABLE_X64")
+
+
+def _waived(source_lines: list[str], lineno: int, rule: str) -> bool:
+    if not 1 <= lineno <= len(source_lines):
+        return False
+    line = source_lines[lineno - 1]
+    return (f"analysis: ignore[{rule}]" in line
+            or ("analysis: ignore" in line and "[" not in
+                line.split("analysis: ignore", 1)[1][:1]))
+
+
+def _is_jit_ref(node: ast.AST) -> bool:
+    """`jax.jit` / bare `jit` reference."""
+    return ((isinstance(node, ast.Attribute) and node.attr == "jit")
+            or (isinstance(node, ast.Name) and node.id == "jit"))
+
+
+def _is_jit_decorated(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        if _is_jit_ref(dec):
+            return True
+        if isinstance(dec, ast.Call):
+            f = dec.func
+            if _is_jit_ref(f):                       # @jax.jit(...)
+                return True
+            is_partial = ((isinstance(f, ast.Name) and f.id == "partial")
+                          or (isinstance(f, ast.Attribute)
+                              and f.attr == "partial"))
+            if is_partial and dec.args and _is_jit_ref(dec.args[0]):
+                return True                          # @partial(jax.jit, …)
+    return False
+
+
+def _is_host_static(node: ast.AST) -> bool:
+    """Expressions that can never be a traced value (so casting them is
+    not a device sync): names, constants, len(), static-metadata
+    attribute chains and indexing/arithmetic over them."""
+    if isinstance(node, (ast.Name, ast.Constant)):
+        return True
+    if isinstance(node, ast.Call):
+        return (isinstance(node.func, ast.Name) and node.func.id == "len"
+                and len(node.args) == 1)
+    if isinstance(node, ast.Attribute):
+        return node.attr in _STATIC_ATTRS
+    if isinstance(node, ast.Subscript):
+        return _is_host_static(node.value)
+    if isinstance(node, ast.BinOp):
+        return _is_host_static(node.left) and _is_host_static(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_host_static(node.operand)
+    return False
+
+
+def _callee_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _check_jit_host_syncs(tree: ast.Module, rel: str,
+                          lines: list[str]) -> list[Finding]:
+    findings = []
+
+    def scan_jit_body(fn):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _waived(lines, node.lineno, "R002"):
+                continue
+            # x.item()
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                findings.append(Finding(
+                    "conventions", "R002", f"{rel}:{node.lineno}",
+                    f"`.item()` inside jitted `{fn.name}` — a device→"
+                    f"host sync per call (and a tracer error under jit)"))
+                continue
+            # float(...) / int(...) / bool(...) on a non-static expr
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _SYNC_CASTS
+                    and len(node.args) == 1
+                    and not _is_host_static(node.args[0])):
+                findings.append(Finding(
+                    "conventions", "R002", f"{rel}:{node.lineno}",
+                    f"`{node.func.id}(...)` on a computed value inside "
+                    f"jitted `{fn.name}` — forces a device→host sync "
+                    f"(per-iteration when inside the solve loop); keep "
+                    f"it a jnp value or hoist to the host wrapper"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and _is_jit_decorated(node):
+            scan_jit_body(node)
+    return findings
+
+
+def _check_backend_exposure(tree: ast.Module, rel: str,
+                            lines: list[str]) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name not in SOLVER_ENTRY_POINTS:
+            continue
+        if _waived(lines, node.lineno, "R001"):
+            continue
+        a = node.args
+        names = {x.arg for x in a.args + a.kwonlyargs + a.posonlyargs}
+        if "backend" not in names:
+            findings.append(Finding(
+                "conventions", "R001", f"{rel}:{node.lineno}",
+                f"solver entry point `{node.name}` does not expose "
+                f"`backend=` — every public solver must carry the "
+                f"xla/pallas/pallas_fused switch"))
+    return findings
+
+
+def _x64_enabled_for(path: str, source: str,
+                     repo_root: str | None) -> bool:
+    if any(m in source for m in _X64_MARKERS):
+        return True
+    d = os.path.dirname(os.path.abspath(path))
+    root = os.path.abspath(repo_root) if repo_root else None
+    while True:
+        conftest = os.path.join(d, "conftest.py")
+        if os.path.isfile(conftest):
+            try:
+                with open(conftest, encoding="utf-8") as f:
+                    if any(m in f.read() for m in _X64_MARKERS):
+                        return True
+            except OSError:
+                pass
+        parent = os.path.dirname(d)
+        if d == root or parent == d:
+            return False
+        d = parent
+
+
+def _check_rtol_x64(tree: ast.Module, rel: str, path: str, source: str,
+                    lines: list[str],
+                    repo_root: str | None) -> list[Finding]:
+    if not os.path.basename(path).startswith("test_"):
+        return []
+    tight = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg != "rtol" or not isinstance(kw.value, ast.Constant):
+                continue
+            val = kw.value.value
+            if isinstance(val, (int, float)) \
+                    and 0 < val <= _RTOL_X64_THRESHOLD \
+                    and not _waived(lines, node.lineno, "R003"):
+                tight.append((node.lineno, val))
+    if not tight or _x64_enabled_for(path, source, repo_root):
+        return []
+    lineno, val = tight[0]
+    return [Finding(
+        "conventions", "R003", f"{rel}:{lineno}",
+        f"asserts rtol={val:g} (≤ {_RTOL_X64_THRESHOLD:g}) but neither "
+        f"this file nor an ancestor conftest.py enables x64 — at f32 "
+        f"(eps ≈ 1.2e-7) the assertion is vacuous or flaky")]
+
+
+def _check_interpret_usage(tree: ast.Module, rel: str, path: str,
+                           lines: list[str]) -> list[Finding]:
+    norm = os.path.abspath(path).replace(os.sep, "/")
+    if "/repro/kernels/" in norm:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not any(kw.arg == "interpret" for kw in node.keywords):
+            continue
+        callee = _callee_name(node)
+        if callee is None:
+            continue
+        if (callee.endswith("_pallas") or callee == "pallas_call") \
+                and not _waived(lines, node.lineno, "R004"):
+            findings.append(Finding(
+                "conventions", "R004", f"{rel}:{node.lineno}",
+                f"raw Pallas call `{callee}(…, interpret=…)` outside "
+                f"src/repro/kernels/ — route through the "
+                f"repro.kernels.ops wrappers (they own padding, budget "
+                f"checks and backend dispatch)"))
+    return findings
+
+
+def _check_bare_except(tree: ast.Module, rel: str,
+                       lines: list[str]) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None \
+                and not _waived(lines, node.lineno, "R005"):
+            findings.append(Finding(
+                "conventions", "R005", f"{rel}:{node.lineno}",
+                "bare `except:` — catches KeyboardInterrupt/SystemExit "
+                "and makes long solver runs unkillable; catch Exception "
+                "or narrower"))
+    return findings
+
+
+def lint_file(path: str, *, repo_root: str | None = None,
+              source: str | None = None) -> list[Finding]:
+    """Lint one Python file; `source` overrides reading from disk (used by
+    the seeded-violation tests)."""
+    if source is None:
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+    rel = (os.path.relpath(path, repo_root) if repo_root
+           else os.path.basename(path))
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [Finding("conventions", "R000", f"{rel}:{exc.lineno}",
+                        f"syntax error: {exc.msg}")]
+    lines = source.splitlines()
+    findings = []
+    findings += _check_backend_exposure(tree, rel, lines)
+    findings += _check_jit_host_syncs(tree, rel, lines)
+    findings += _check_rtol_x64(tree, rel, path, source, lines, repo_root)
+    findings += _check_interpret_usage(tree, rel, path, lines)
+    findings += _check_bare_except(tree, rel, lines)
+    return findings
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = [d for d in dirnames
+                           if d not in ("__pycache__", ".git")]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def run_pass(paths: Iterable[str], *,
+             repo_root: str | None = None) -> list[Finding]:
+    findings = []
+    for path in iter_python_files(paths):
+        findings += lint_file(path, repo_root=repo_root)
+    return findings

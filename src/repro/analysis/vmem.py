@@ -1,0 +1,203 @@
+"""Static VMEM-footprint estimator for the four Pallas kernels.
+
+TPU cores have ~16 MiB of VMEM; a kernel whose working set exceeds it
+dies at Mosaic compile time with an opaque allocation error — *after* the
+operands were staged and (for the fused solve) after minutes of problem
+packing. This module makes the working-set formulas in the kernel
+docstrings executable so `kernels/ops.py` can reject over-budget shapes
+with a `VmemBudgetError` naming the formula and the limit *before*
+dispatch, and so `tests/test_analysis.py` can pin the formulas to the
+docstrings.
+
+Consolidated working-set table (elements; bytes = elements × itemsize).
+This is the single source of truth — the per-kernel docstrings in
+`repro.kernels.{dekrr_step,dekrr_solve,rff_gram,decode_attention}`
+reference it:
+
+  kernel        formula (elements)                      paper anchor
+  ------------  --------------------------------------  -------------------
+  dekrr_step    T·D + (2+K)·D² + 3·D                    D=512, K=4 → ~6.3 MB
+  dekrr_solve   2·T·D + 2·(2+K)·D² + 3·D                T=256, D=512, K=4
+                                                        → ~13.7 MB (ceiling)
+  rff_gram      D·d + d·Bn + D·Bn + D² (+ 2·D zy/bias)  D=512, d=160,
+                                                        Bn=1024 → < 5 MB
+  flash_decode  G·dh + 2·Bs·dh + G·Bs (+ 3·G m/l state) G=8, dh=128, Bs=512
+                                                        → < 1 MB
+
+Terms: T = θ-table rows (padded to 8 sublanes), D = padded feature dim
+(lane multiples of 128), K = padded neighbor-slot count (≥ 1), d = input
+dim, Bn/Bs = streaming block sizes, G = GQA query-group size, dh = head
+dim. dekrr_step holds one θ table and single-buffered blocks; dekrr_solve
+holds two θ scratch tables (round-parity Jacobi) and double-buffered
+block streams, hence the factor-2 terms.
+
+Itemsize: estimates use ``effective_itemsize`` = min(itemsize, 4). TPUs
+have no f64 — x64-mode callers run the kernels in interpret mode on CPU
+(no VMEM) or are downcast to f32 by the ops wrappers before dispatch, so
+budgeting 8-byte elements would spuriously reject shapes that deploy
+fine.
+
+This module must stay importable without jax: the `repro.analysis` CLI
+sets JAX_PLATFORMS / device-count env vars before jax is first imported.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Mosaic's per-core VMEM budget. The guide value is ~16 MiB; compiler
+# spill/temporary overhead eats into it, but the kernels' formulas already
+# over-count slightly (padding, unfused vectors), so the raw budget is the
+# contract the docstrings pin (J = 256 at D = 512 "is the ceiling").
+VMEM_BUDGET_BYTES = 16 * 2**20
+
+
+class VmemBudgetError(ValueError):
+    """Raised before kernel dispatch when the static VMEM estimate for a
+    Pallas call exceeds the per-core budget. The message names the kernel,
+    the symbolic formula, the substituted byte count, and the budget."""
+
+
+def effective_itemsize(itemsize: int) -> int:
+    """Deployable element width: TPU kernels never run above f32 (no f64
+    hardware; x64 callers are downcast or interpreted), so cap at 4."""
+    return min(int(itemsize), 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemEstimate:
+    """Static working-set estimate for one Pallas kernel call."""
+    kernel: str
+    formula: str        # symbolic, as documented in the table above
+    detail: str         # formula with the shapes substituted
+    elements: int
+    bytes: int
+    budget: int = VMEM_BUDGET_BYTES
+
+    @property
+    def fits(self) -> bool:
+        return self.bytes <= self.budget
+
+    def check(self) -> "VmemEstimate":
+        """Return self, or raise `VmemBudgetError` if over budget."""
+        if not self.fits:
+            raise VmemBudgetError(
+                f"{self.kernel}: VMEM working set {self.formula} = "
+                f"{self.detail} = {self.bytes} bytes exceeds the "
+                f"{self.budget}-byte per-core budget; shrink D_max/K or "
+                f"block sizes, or use backend='pallas'/'xla' "
+                f"(see repro.analysis.vmem)")
+        return self
+
+
+def estimate_dekrr_step(*, t_rows: int, d_feat: int, k_slots: int,
+                        itemsize: int = 4,
+                        budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Single-round kernel: θ table + G/S/P blocks + d/acc/out vectors."""
+    size = effective_itemsize(itemsize)
+    elements = t_rows * d_feat + (2 + k_slots) * d_feat**2 + 3 * d_feat
+    return VmemEstimate(
+        kernel="dekrr_step",
+        formula="T*D + (2+K)*D^2 + 3*D",
+        detail=(f"{t_rows}*{d_feat} + (2+{k_slots})*{d_feat}^2 + "
+                f"3*{d_feat} elems @ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_dekrr_solve(*, t_rows: int, d_feat: int, k_slots: int,
+                         itemsize: int = 4,
+                         budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Fused multi-round kernel: two parity θ scratch tables +
+    double-buffered G/S/P block streams + d/acc/out vectors."""
+    size = effective_itemsize(itemsize)
+    elements = (2 * t_rows * d_feat + 2 * (2 + k_slots) * d_feat**2
+                + 3 * d_feat)
+    return VmemEstimate(
+        kernel="dekrr_solve",
+        formula="2*T*D + 2*(2+K)*D^2 + 3*D",
+        detail=(f"2*{t_rows}*{d_feat} + 2*(2+{k_slots})*{d_feat}^2 + "
+                f"3*{d_feat} elems @ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_rff_gram(*, d_feat: int, d_in: int, block_n: int,
+                      itemsize: int = 4,
+                      budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Streaming featurize+Gram: Ω + X tile + feature tile + Gram
+    accumulator, plus the bias column and zy accumulator (2·D)."""
+    size = effective_itemsize(itemsize)
+    elements = (d_feat * d_in + d_in * block_n + d_feat * block_n
+                + d_feat**2 + 2 * d_feat)
+    return VmemEstimate(
+        kernel="rff_gram",
+        formula="D*d + d*Bn + D*Bn + D^2 + 2*D",
+        detail=(f"{d_feat}*{d_in} + {d_in}*{block_n} + "
+                f"{d_feat}*{block_n} + {d_feat}^2 + 2*{d_feat} elems "
+                f"@ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_flash_decode(*, g_heads: int, head_dim: int, block_s: int,
+                          itemsize: int = 4,
+                          budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Flash decode: q tile + K/V blocks + score tile, plus the
+    online-softmax state (m, l [G,1] and the acc rides in G·dh)."""
+    size = effective_itemsize(itemsize)
+    elements = (g_heads * head_dim + 2 * block_s * head_dim
+                + g_heads * block_s + 3 * g_heads)
+    return VmemEstimate(
+        kernel="flash_decode",
+        formula="G*dh + 2*Bs*dh + G*Bs + 3*G",
+        detail=(f"{g_heads}*{head_dim} + 2*{block_s}*{head_dim} + "
+                f"{g_heads}*{block_s} + 3*{g_heads} elems @ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_blocks(kernel: str,
+                    blocks: list[tuple[tuple[int, ...], int]],
+                    *, budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Generic estimate from (block_shape, itemsize) pairs — used by the
+    jaxpr lint to budget pallas_call eqns straight from their BlockSpecs
+    (grid_mapping block shapes + VMEM scratch avals), independent of the
+    closed-form per-kernel formulas above."""
+    total_bytes = 0
+    total_elems = 0
+    parts = []
+    for shape, itemsize in blocks:
+        elems = 1
+        for dim in shape:
+            elems *= int(dim)
+        size = effective_itemsize(itemsize)
+        total_elems += elems
+        total_bytes += elems * size
+        parts.append(f"{'x'.join(str(d) for d in shape) or '1'}@{size}B")
+    return VmemEstimate(
+        kernel=kernel, formula="sum(block shapes + scratch)",
+        detail=" + ".join(parts) if parts else "0",
+        elements=total_elems, bytes=total_bytes, budget=budget)
+
+
+def check_index_table(name: str, table, size: int, *,
+                      lo: int = 0) -> None:
+    """Static bounds check for a scalar-prefetched index table.
+
+    Scalar prefetch reads SMEM indices with no hardware bounds check — an
+    out-of-range slot silently gathers an arbitrary θ row. `table` is any
+    array-like of integers (NumPy or concrete jax); every entry must lie
+    in ``[lo, size)``. Raises ValueError naming the offending range.
+    Callers must NOT pass tracers — check `hasattr(x, '__array__')` /
+    concreteness first (the ops wrappers only check concrete inputs).
+    """
+    import numpy as np
+
+    arr = np.asarray(table)
+    if arr.size == 0:
+        return
+    if not np.issubdtype(arr.dtype, np.integer):
+        raise ValueError(
+            f"{name}: index table must be integer-typed, got {arr.dtype}")
+    amin, amax = int(arr.min()), int(arr.max())
+    if amin < lo or amax >= size:
+        raise ValueError(
+            f"{name}: scalar-prefetched indices must lie in [{lo}, {size})"
+            f" but span [{amin}, {amax}] — an out-of-range slot would "
+            f"silently gather an arbitrary table row")

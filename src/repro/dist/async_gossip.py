@@ -51,6 +51,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec
 
+from repro.analysis.vmem import check_index_table
 from repro.core.async_gossip import (AsyncGossipConfig, activation_masks,
                                      censor_schedule, edges_from_slot_table)
 from repro.dist.dekrr_spmd import (PackedProblem, _check_backend,
@@ -135,9 +136,30 @@ def init_async_state(packed: PackedProblem,
 def _packed_edges(packed: PackedProblem) -> np.ndarray:
     """Canonical edge list for `gossip="edge"` sampling, derived host-side
     from the slot table (bit-identical to `repro.core.edge_list` on the
-    originating topology — tested)."""
-    return edges_from_slot_table(np.asarray(packed.nbr_idx),
-                                 np.asarray(packed.nbr_mask))
+    originating topology — tested). Endpoints are bounds-checked against
+    [0, J): the edge draw indexes the activation mask with them, and the
+    mask feeds the scalar-prefetched activation table of the Pallas round
+    kernel (no hardware bounds check there)."""
+    edges = edges_from_slot_table(np.asarray(packed.nbr_idx),
+                                  np.asarray(packed.nbr_mask))
+    check_index_table("edges", edges, packed.num_nodes)
+    return edges
+
+
+def _check_mask_table(name: str, masks, num_rounds: int,
+                      num_nodes: int) -> None:
+    """Activation-mask schedules must be exactly [R, J] (or [J] for a
+    single round): the Pallas round kernel scalar-prefetches the per-round
+    [J] row, and a mis-shaped table would be silently broadcast or
+    truncated by downstream indexing instead of erroring."""
+    shape = tuple(masks.shape)
+    want = (num_rounds, num_nodes) if num_rounds >= 0 else (num_nodes,)
+    if shape != want:
+        raise ValueError(
+            f"{name}: activation-mask table has shape {list(shape)}, "
+            f"expected {list(want)} — one row per round, one column per "
+            f"node (the masked round kernel scalar-prefetches rows of "
+            f"this table)")
 
 
 def _async_round(packed: PackedProblem, state: AsyncGossipState,
@@ -177,6 +199,7 @@ def async_step_batched(packed: PackedProblem, state: AsyncGossipState,
     traffic between them.
     """
     _check_backend(backend)
+    _check_mask_table("async_step_batched", active, -1, packed.num_nodes)
     return _async_round(packed, state, active,
                         jnp.asarray(threshold, packed.d.dtype),
                         gossip=gossip, censored=censored, backend=backend)
@@ -311,6 +334,8 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
     masks = activation_masks(key, num_iters, packed.num_nodes,
                              prob=config.prob, gossip=config.gossip,
                              edges=edges)
+    _check_mask_table("async_solve_batched", masks, num_iters,
+                      packed.num_nodes)
     thresholds = censor_schedule(config.censor_tau, config.censor_decay,
                                  num_iters, dtype=packed.d.dtype)
     return _async_solve_impl(
@@ -492,6 +517,8 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
         masks = activation_masks(key, num_iters, packed.num_nodes,
                                  prob=config.prob, gossip=config.gossip,
                                  edges=edges)
+        _check_mask_table("make_async_spmd_solver", masks, num_iters,
+                          packed.num_nodes)
         thresholds = censor_schedule(
             config.censor_tau, config.censor_decay, num_iters,
             dtype=packed.d.dtype)

@@ -104,6 +104,8 @@ try:  # jax >= 0.5 promotes shard_map out of experimental
 except ImportError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
+from repro.analysis.vmem import check_index_table
+
 __all__ = [
     "PackedProblem",
     "pack_problem",
@@ -141,6 +143,10 @@ class PackedProblem:
                   laid out in ppermute order [(+s_1), (−s_1), (+s_2), …];
                   None for the generic padded-adjacency layout.
       node_dims:  per-node feature counts (D_1, …, D_J) for unpacking.
+      num_edges_directed: live (directed) slot count Σ_j |N_j|, recorded
+                  from the NumPy-side nbr_mask at packing time so the
+                  §II-C comm cost model never has to read it back off
+                  the device (`comm_bytes_per_round`).
     """
 
     g: jax.Array
@@ -152,20 +158,23 @@ class PackedProblem:
     nbr_mask: jax.Array
     offsets: tuple[int, ...] | None = None
     node_dims: tuple[int, ...] | None = None
+    num_edges_directed: int | None = None
 
-    # -- pytree plumbing (offsets / node_dims are static) -------------------
+    # -- pytree plumbing (offsets / node_dims / edge count are static) ------
     def tree_flatten(self):
         children = (self.g, self.d, self.s, self.p, self.theta_mask,
                     self.nbr_idx, self.nbr_mask)
-        return children, (self.offsets, self.node_dims)
+        return children, (self.offsets, self.node_dims,
+                          self.num_edges_directed)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        offsets, node_dims = aux
+        offsets, node_dims, num_edges_directed = aux
         g, d, s, p, theta_mask, nbr_idx, nbr_mask = children
         return cls(g=g, d=d, s=s, p=p, theta_mask=theta_mask,
                    nbr_idx=nbr_idx, nbr_mask=nbr_mask,
-                   offsets=offsets, node_dims=node_dims)
+                   offsets=offsets, node_dims=node_dims,
+                   num_edges_directed=num_edges_directed)
 
     @property
     def num_nodes(self) -> int:
@@ -190,6 +199,25 @@ def _circulant_slot_table(
             idx[j, 2 * m] = (j + s) % num_nodes
             idx[j, 2 * m + 1] = (j - s) % num_nodes
     return idx
+
+
+def _validate_slot_table(nbr_idx, nbr_mask, num_nodes: int) -> int:
+    """Static validation of a NumPy-staged slot table; returns the live
+    directed-edge count Σ_j |N_j|.
+
+    The Pallas kernels read `nbr_idx` through scalar prefetch, which has
+    no hardware bounds check — an out-of-range entry silently gathers an
+    arbitrary θ-table row. Every entry (padded slots carry an in-range
+    self index by construction) must lie in [0, J).
+    """
+    idx = np.asarray(nbr_idx)
+    mask = np.asarray(nbr_mask)
+    if idx.shape != mask.shape:
+        raise ValueError(
+            f"slot table shape mismatch: nbr_idx {idx.shape} vs "
+            f"nbr_mask {mask.shape}")
+    check_index_table("nbr_idx", idx, num_nodes)
+    return int(np.count_nonzero(mask))
 
 
 def _slot_table(solver):
@@ -277,6 +305,7 @@ def _pack_problem_from_aux(solver) -> PackedProblem:
     d_max = max(dims)
     dtype = np.asarray(solver.aux.d[0]).dtype
     nbr_idx, nbr_mask, offsets = _slot_table(solver)
+    num_edges = _validate_slot_table(nbr_idx, nbr_mask, j_nodes)
     k_slots = nbr_idx.shape[1]
 
     g = np.zeros((j_nodes, d_max, d_max), dtype=dtype)
@@ -302,7 +331,7 @@ def _pack_problem_from_aux(solver) -> PackedProblem:
         g=jnp.asarray(g), d=jnp.asarray(d), s=jnp.asarray(s),
         p=jnp.asarray(p), theta_mask=jnp.asarray(theta_mask),
         nbr_idx=jnp.asarray(nbr_idx), nbr_mask=jnp.asarray(nbr_mask),
-        offsets=offsets, node_dims=dims,
+        offsets=offsets, node_dims=dims, num_edges_directed=num_edges,
     )
 
 
@@ -565,12 +594,13 @@ def _build_packed_aux(*, kind, _meta=None, **staged):
 def _finish_packed(staged: dict, built) -> PackedProblem:
     g, d, s, p = built
     dims, nbr_idx, offsets = staged["_meta"]
+    num_edges = _validate_slot_table(nbr_idx, staged["nbr_mask"], len(dims))
     return PackedProblem(
         g=g, d=d, s=s, p=p,
         theta_mask=jnp.asarray(staged["feat_mask"]),
         nbr_idx=jnp.asarray(nbr_idx),
         nbr_mask=jnp.asarray(staged["nbr_mask"]),
-        offsets=offsets, node_dims=dims,
+        offsets=offsets, node_dims=dims, num_edges_directed=num_edges,
     )
 
 
@@ -1093,7 +1123,14 @@ def comm_bytes_per_round(packed: PackedProblem, mode: str, *,
     if gossip == "edge":
         return 2 * d_max * itemsize * (1.0 - censor_fraction)
     if mode == "ppermute":
-        num_edges_directed = int(round(float(jnp.sum(packed.nbr_mask))))
+        # Static count recorded at packing time — reading it off
+        # packed.nbr_mask here would force a device→host sync on a
+        # quantity that never changes after packing. The NumPy fallback
+        # covers hand-built PackedProblems that skipped pack_problem.
+        num_edges_directed = packed.num_edges_directed
+        if num_edges_directed is None:
+            num_edges_directed = int(
+                np.count_nonzero(np.asarray(packed.nbr_mask)))
         base = num_edges_directed * d_max * itemsize
     else:
         base = j_nodes * (j_nodes - 1) * d_max * itemsize

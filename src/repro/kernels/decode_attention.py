@@ -16,8 +16,11 @@ in the q tile (rows = G query heads of that kv head).
                online-softmax update of (m, l, acc[G, dh])
 
 VMEM working set ≈ (G·dh + 2·block_s·dh + G·block_s) · 4 B — for G ≤ 8,
-dh = 128, block_s = 512: < 1 MB. dh is padded to 128 lanes, block_s to 8
-sublanes by ops.py; positions ≥ cur_index are masked in-kernel.
+dh = 128, block_s = 512: < 1 MB. Executable as
+`repro.analysis.vmem.estimate_flash_decode` (consolidated table in that
+module's docstring) and checked by `ops.flash_decode` before dispatch.
+dh is padded to 128 lanes, block_s to 8 sublanes by ops.py; positions ≥
+cur_index are masked in-kernel.
 """
 from __future__ import annotations
 

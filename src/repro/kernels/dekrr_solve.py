@@ -34,9 +34,12 @@ under x64 (`tests/test_kernels_dekrr_solve.py`).
 VMEM working set: 2·T·D (θ tables) + 2·(2 + K)·D² (double-buffered
 blocks) + 3·D vectors — for the paper's J ≤ 256, D ≤ 512, K = 4 at f32
 that is ~13.7 MB, within the 16 MB/core budget (J = 256 at D = 512 is
-the ceiling; larger tables need a block-sharded θ layout). All dims must
-be padded by the `ops.dekrr_solve` wrapper: D to lane multiples of 128,
-T to sublane multiples of 8.
+the ceiling; larger tables need a block-sharded θ layout). This formula
+is executable as `repro.analysis.vmem.estimate_dekrr_solve`
+(consolidated table in that module's docstring); the `ops.dekrr_solve`
+wrapper checks it before dispatch and raises `VmemBudgetError` instead
+of a Mosaic allocation crash. All dims must be padded by the wrapper:
+D to lane multiples of 128, T to sublane multiples of 8.
 """
 from __future__ import annotations
 

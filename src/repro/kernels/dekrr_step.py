@@ -41,8 +41,12 @@ materializing any transpose).
 
 VMEM working set per step: T·D (θ) + (2 + K)·D² (G, S, P) + 3·D (d, acc,
 out) floats — for the paper's D ≤ 512, K = 4 at f32 that is ~6.3 MB, within
-the 16 MB/core budget. All dims must be padded by the `ops.dekrr_step`
-wrapper: D to lane multiples of 128, the θ table to sublane multiples of 8.
+the 16 MB/core budget. This formula is executable as
+`repro.analysis.vmem.estimate_dekrr_step` (the consolidated table for all
+four kernels lives in that module's docstring); the `ops.dekrr_step`
+wrapper checks it before dispatch and raises `VmemBudgetError` on
+over-budget shapes. All dims must be padded by the wrapper: D to lane
+multiples of 128, the θ table to sublane multiples of 8.
 
 The async-gossip runtime (`repro.dist.async_gossip`) uses the
 activation-masked variant (`active=` on `dekrr_step_pallas`): a fourth

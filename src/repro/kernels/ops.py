@@ -4,6 +4,14 @@ Handles padding/alignment (TPU tiles: sublane 8, lane 128), validity
 masking, and backend dispatch: on non-TPU backends the kernels execute in
 ``interpret=True`` mode (Python evaluation of the kernel body — bit-accurate
 semantics, used for CPU validation against ref.py).
+
+Every wrapper also runs the static VMEM budget check from
+`repro.analysis.vmem` at the *padded* shapes it is about to dispatch:
+an over-budget call raises `VmemBudgetError` naming the working-set
+formula and the 16 MiB limit before the kernel is built, instead of an
+opaque Mosaic allocation crash. The DeKRR wrappers additionally
+bounds-check concrete slot-index tables (scalar prefetch reads SMEM
+indices with no hardware bounds check — see `check_index_table`).
 """
 from __future__ import annotations
 
@@ -12,6 +20,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.vmem import (check_index_table, estimate_dekrr_solve,
+                                 estimate_dekrr_step,
+                                 estimate_flash_decode, estimate_rff_gram)
 from repro.core.rff import FeatureMap
 from repro.kernels.dekrr_solve import dekrr_solve_pallas
 from repro.kernels.dekrr_step import dekrr_step_pallas
@@ -21,6 +32,43 @@ from repro.kernels.rff_gram import rff_gram_pallas
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _pad_dim(n: int, multiple: int) -> int:
+    return max(multiple, -(-int(n) // multiple) * multiple)
+
+
+def _check_dekrr_budget(kernel: str, d, p, theta) -> None:
+    """Static VMEM check at the padded dispatch shapes. Shapes are always
+    static (works on tracers), so under jit this runs once at trace time
+    and is free at execution time."""
+    d_pad = _pad_dim(d.shape[1], 128)
+    t_pad = _pad_dim(theta.shape[0], 8)
+    k_pad = max(int(p.shape[1]), 1)
+    est = estimate_dekrr_step if kernel == "dekrr_step" \
+        else estimate_dekrr_solve
+    est(t_rows=t_pad, d_feat=d_pad, k_slots=k_pad,
+        itemsize=jnp.dtype(d.dtype).itemsize).check()
+
+
+def _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask) -> None:
+    """Bounds-check concrete slot tables against the θ-table row count;
+    traced tables are validated at the staging layer instead
+    (`repro.dist.pack_problem` / `pack_theta`)."""
+    t_rows = int(theta.shape[0])
+    if not isinstance(self_idx, jax.core.Tracer):
+        check_index_table("self_idx", self_idx, t_rows)
+    if isinstance(nbr_idx, jax.core.Tracer):
+        return
+    idx = jnp.asarray(nbr_idx)
+    if idx.size and not isinstance(nbr_mask, jax.core.Tracer):
+        import numpy as np
+
+        live = np.asarray(nbr_mask) != 0
+        if not live.any():
+            return
+        idx = np.asarray(idx)[live]
+    check_index_table("nbr_idx", idx, t_rows)
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
@@ -47,6 +95,9 @@ def rff_gram(omega: jax.Array, bias: jax.Array, x: jax.Array, y: jax.Array,
     dtype = x.dtype
 
     bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    estimate_rff_gram(d_feat=_pad_dim(d_feat, 8),
+                      d_in=_pad_dim(omega.shape[1], 128), block_n=bn,
+                      itemsize=jnp.dtype(dtype).itemsize).check()
     omega_p = _pad_to(_pad_to(omega, 0, 8), 1, 128)
     bias_p = _pad_to(bias.reshape(-1, 1), 0, 8).astype(dtype)
     x_p = _pad_to(_pad_to(x, 0, 128), 1, bn)
@@ -106,6 +157,8 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     g = h // kh
     scale = dh ** -0.5
     bs = min(block_s, max(128, 1 << (s - 1).bit_length()))
+    estimate_flash_decode(g_heads=g, head_dim=_pad_dim(dh, 128),
+                          block_s=bs, itemsize=4).check()
 
     # [B, 1, H, dh] → [B·K, G, dh]
     qr = q[:, 0].reshape(b, kh, g, dh).reshape(b * kh, g, dh)
@@ -143,6 +196,22 @@ def _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def _dekrr_step_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                    active=None, *, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat = d.shape[1]
+
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    active_p = None if active is None else (active != 0).astype(jnp.int32)
+    out = dekrr_step_pallas(
+        g_p, d_p, s_p, p_p, theta_p,
+        nbr_idx_p, self_idx.astype(jnp.int32), nbr_mask_p,
+        active=active_p, interpret=interpret)
+    return out[:, :d_feat]
+
+
 def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
                nbr_mask: jax.Array, active: jax.Array | None = None, *,
@@ -163,22 +232,37 @@ def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     padding back off. Zero padding is exact under the round's algebra (see
     `repro.dist.dekrr_spmd`), so this matches `step_batched` to the last
     ulp-scale rounding of the reordered contractions (rtol 1e-9 under x64).
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    d_feat = d.shape[1]
 
-    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
-        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
-    active_p = None if active is None else (active != 0).astype(jnp.int32)
-    out = dekrr_step_pallas(
-        g_p, d_p, s_p, p_p, theta_p,
-        nbr_idx_p, self_idx.astype(jnp.int32), nbr_mask_p,
-        active=active_p, interpret=interpret)
-    return out[:, :d_feat]
+    VMEM working set at the padded shapes is `T·D + (2+K)·D² + 3·D`
+    elements (consolidated table: `repro.analysis.vmem`); over-budget
+    shapes raise `VmemBudgetError` here, before dispatch. Concrete
+    (non-traced) `nbr_idx`/`self_idx` tables are bounds-checked against
+    the θ-table row count.
+    """
+    _check_dekrr_budget("dekrr_step", d, p, theta)
+    _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
+    return _dekrr_step_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                           active, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("num_rounds", "interpret"))
+def _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask, *,
+                     num_rounds, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat = d.shape[1]
+    self_idx = self_idx.astype(jnp.int32)
+    if num_rounds == 0:
+        return theta[self_idx]
+
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    out = dekrr_solve_pallas(
+        g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, self_idx, nbr_mask_p,
+        num_rounds=num_rounds, interpret=interpret)
+    return out[:, :d_feat]
+
+
 def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                 theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
                 nbr_mask: jax.Array, *, num_rounds: int,
@@ -196,20 +280,20 @@ def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     Pads exactly like `dekrr_step` (D to 128 lanes, table to 8 sublanes,
     slot axis to K ≥ 1) and slices the padding back off; `num_rounds=0`
     returns the `self_idx` rows of θ unchanged.
-    """
-    if interpret is None:
-        interpret = _interpret_default()
-    d_feat = d.shape[1]
-    self_idx = self_idx.astype(jnp.int32)
-    if num_rounds == 0:
-        return theta[self_idx]
 
-    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
-        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
-    out = dekrr_solve_pallas(
-        g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, self_idx, nbr_mask_p,
-        num_rounds=num_rounds, interpret=interpret)
-    return out[:, :d_feat]
+    VMEM working set at the padded shapes is `2·T·D + 2·(2+K)·D² + 3·D`
+    elements — double the step kernel's θ/block terms for the
+    round-parity scratch tables and double-buffered streams
+    (consolidated table: `repro.analysis.vmem`); over-budget shapes
+    raise `VmemBudgetError` here, before dispatch. Concrete
+    `nbr_idx`/`self_idx` tables are bounds-checked against the θ-table
+    row count.
+    """
+    if num_rounds != 0:
+        _check_dekrr_budget("dekrr_solve", d, p, theta)
+    _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
+    return _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
+                            num_rounds=num_rounds, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))
@@ -233,6 +317,9 @@ def rff_gram_batched(omega: jax.Array, bias: jax.Array, x: jax.Array,
     f_feat, n = omega.shape[1], x.shape[2]
 
     bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    estimate_rff_gram(d_feat=_pad_dim(f_feat, 8),
+                      d_in=_pad_dim(omega.shape[2], 128), block_n=bn,
+                      itemsize=jnp.dtype(x.dtype).itemsize).check()
     omega_p = _pad_to(_pad_to(omega, 1, 8), 2, 128).astype(x.dtype)
     bias_p = _pad_to(bias[..., None], 1, 8).astype(x.dtype)
     x_p = _pad_to(_pad_to(x, 1, 128), 2, bn)

@@ -16,8 +16,11 @@ the D×D Gram that never leaves VMEM until the end:
 
 VMEM working set: D·d (Ω) + d·Bn (X tile) + D·Bn (features) + D² (acc),
 all f32 — for the paper's D ≤ 512, d ≤ 160, Bn = 1024 that is < 5 MB.
-D, d and Bn are padded to multiples of (8, 128) for MXU/VREG alignment by
-the ops.py wrapper, with a validity mask so padded columns contribute zero.
+Executable as `repro.analysis.vmem.estimate_rff_gram` (consolidated table
+in that module's docstring) and checked by the ops.py wrappers before
+dispatch. D, d and Bn are padded to multiples of (8, 128) for MXU/VREG
+alignment by the ops.py wrapper, with a validity mask so padded columns
+contribute zero.
 """
 from __future__ import annotations
 

@@ -503,9 +503,11 @@ def to_packed(aux: StreamAux) -> PackedProblem:
     n = jnp.asarray(float(aux.n_live), aux.zy.dtype)
     g, d, s, p = _materialize(aux.binv, aux.zy, aux.st, aux.pt,
                               aux.theta_mask, n)
+    num_edges = int(np.count_nonzero(np.asarray(aux.nbr_mask)))
     return PackedProblem(g=g, d=d, s=s, p=p, theta_mask=aux.theta_mask,
                          nbr_idx=aux.nbr_idx, nbr_mask=aux.nbr_mask,
-                         offsets=aux.offsets, node_dims=aux.node_dims)
+                         offsets=aux.offsets, node_dims=aux.node_dims,
+                         num_edges_directed=num_edges)
 
 
 def repad_theta(theta, old_dims: Sequence[int], new_dims: Sequence[int],
