@@ -1,0 +1,149 @@
+"""Chebyshev acceleration benchmark, emitting ``BENCH_accel.json``.
+
+Two claims are on the line after the β₁ = ½(c/d)² fix and the fused
+single-dispatch Chebyshev kernel:
+
+  * rounds-to-tolerance — the accelerated iteration must cross each
+    tolerance in far fewer communication rounds than the plain
+    stationary iteration (the paper's cost metric is rounds × bytes, so
+    this IS the communication win), and
+  * dispatch count — `chebyshev_solve_packed(backend="pallas_fused")`
+    and the fused async chain must each compile to exactly ONE
+    pallas_call per chunk (counted on the traced jaxpr with the same
+    counter the J002 lint pins), killing the per-round dispatch floor.
+
+Wall-clock per solve is recorded per backend for the perf trajectory;
+off-TPU the Pallas columns run interpret mode and remain placeholders —
+only the XLA column and the dispatch/round counts are meaningful on CPU
+(same caveat as BENCH_step/BENCH_solve, see ROADMAP).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core import DeKRRConfig, DeKRRSolver, select_features
+from repro.core.acceleration import (chebyshev_solve_packed,
+                                     estimate_spectral_interval,
+                                     rounds_to_tolerance)
+from repro.dist import comm_bytes_per_round, pack_problem
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_accel.json")
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+
+def _build_problem(dataset: str, d_feat: int, cfrac: float):
+    ds, train, _ = C.load_split(dataset, mode="noniid_y")
+    keys = jax.random.split(jax.random.PRNGKey(0), C.J)
+    fmaps = [select_features(keys[j], ds.dim, d_feat, C.SIGMA, train[j].x,
+                             train[j].y, method="energy")
+             for j in range(C.J)]
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(C.TOPOLOGY, fmaps, train,
+                         DeKRRConfig(lam=C.LAM, c_nei=cfrac * n))
+    return solver, pack_problem(solver)
+
+
+def _dispatch_counts(num_iters: int) -> dict:
+    """Per-backend pallas_call counts of the traced accelerated and fused
+    async entry points — the same counter the J002 lint pins, run on the
+    synthetic packed problem so tracing stays sub-second."""
+    from repro.analysis import jaxpr_lint as JL
+    from repro.dist.async_gossip import async_solve_batched
+
+    packed = JL.synthetic_packed()
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for b in BACKENDS:
+        cheb, cheb_exact = JL.count_pallas_dispatches(jax.make_jaxpr(
+            lambda pk, b=b: chebyshev_solve_packed(
+                pk, 0.9, 0.0, num_iters=num_iters, backend=b))(packed))
+        asyn, asyn_exact = JL.count_pallas_dispatches(jax.make_jaxpr(
+            lambda pk, k, b=b: async_solve_batched(
+                pk, num_iters, k, backend=b))(packed, key))
+        assert cheb_exact and asyn_exact
+        out[b] = {"chebyshev_solve_packed": cheb,
+                  "async_solve_batched": asyn}
+    return out
+
+
+def _time_solve(packed, hi, lo, num_iters, backend, reps=3):
+    def call():
+        return jax.block_until_ready(chebyshev_solve_packed(
+            packed, hi, lo, num_iters=num_iters, backend=backend))
+
+    call()                                     # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        call()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(dataset="houses", d_feat=30, fast=False) -> None:
+    solver, packed = _build_problem(dataset, d_feat, cfrac=0.005)
+    exact = solver.solve_exact()
+    dmax = packed.d.shape[1]
+    theta_star = jnp.stack(
+        [jnp.pad(t, (0, dmax - t.shape[0])) for t in exact.theta])
+    lo, hi = estimate_spectral_interval(packed)
+    bpr = comm_bytes_per_round(packed, "ppermute")
+
+    tols = (1e-4, 1e-6) if fast else (1e-3, 1e-4, 1e-5, 1e-6)
+    ladder = []
+    for tol in tols:
+        plain, cheb = rounds_to_tolerance(packed, theta_star, tol=tol,
+                                          mu_max=hi, mu_min=lo)
+        ladder.append({"tol": tol, "rounds_plain": plain,
+                       "rounds_chebyshev": cheb,
+                       "speedup": round(plain / max(cheb, 1), 2),
+                       "comm_plain_bytes": plain * bpr,
+                       "comm_chebyshev_bytes": cheb * bpr})
+        C.csv_row(f"accel/{dataset}/tol{tol:g}", 0.0,
+                  f"rounds_plain={plain};rounds_chebyshev={cheb};"
+                  f"speedup={plain / max(cheb, 1):.1f}x")
+
+    num_iters = 10 if fast else 30
+    dispatches = _dispatch_counts(num_iters)
+    timings = {}
+    for b in BACKENDS:
+        us = _time_solve(packed, hi, lo, num_iters, b,
+                         reps=1 if fast else 3)
+        timings[b] = round(us, 1)
+        C.csv_row(f"accel/solve{num_iters}/{b}", us,
+                  f"dispatches={dispatches[b]['chebyshev_solve_packed']}")
+
+    payload = {
+        "benchmark": ("Chebyshev-accelerated DeKRR: rounds-to-tolerance "
+                      "vs plain iteration, dispatch counts, per-backend "
+                      "solve wall time"),
+        "backend": jax.default_backend(),
+        "dataset": dataset,
+        "j_nodes": packed.num_nodes,
+        "d_feat": d_feat,
+        "spectral_interval": [float(lo), float(hi)],
+        "bytes_per_round": bpr,
+        "rounds_to_tolerance": ladder,
+        "round_dispatches": dispatches,
+        "solve_us": {"num_iters": num_iters, **timings},
+        "note": ("round_dispatches counts pallas_call eqns on the traced "
+                 "program (J002 contract: pallas_fused = 1 per chunk for "
+                 "both the accelerated and the fused async path). Off-TPU "
+                 "the pallas/pallas_fused wall-time columns run interpret "
+                 "mode and are placeholders, not perf."),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"accel/json,0.0,wrote={os.path.relpath(OUT_PATH, REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    run(fast=("--fast" in sys.argv) or ("--smoke" in sys.argv))

@@ -21,7 +21,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (ablation_ddrf, analysis_bench,
+    from benchmarks import (ablation_ddrf, accel_bench, analysis_bench,
                             async_gossip_bench, chebyshev_bench, comm_costs,
                             convergence_curve, kernel_bench,
                             paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
@@ -39,6 +39,7 @@ def main() -> None:
         "convergence": convergence_curve.run,
         "ablation": ablation_ddrf.run,
         "chebyshev": chebyshev_bench.run,
+        "accel": accel_bench.run,
         "kernel": kernel_bench.run,
         "step": step_kernel_bench.run,
         "solve": solve_bench.run,

@@ -55,8 +55,10 @@ from repro.analysis.report import (Finding, render_json,  # noqa: F401
 from repro.analysis.vmem import (VMEM_BUDGET_BYTES,  # noqa: F401
                                  VmemBudgetError, VmemEstimate,
                                  check_index_table, effective_itemsize,
-                                 estimate_blocks, estimate_dekrr_solve,
-                                 estimate_dekrr_step,
+                                 estimate_blocks,
+                                 estimate_dekrr_async_solve,
+                                 estimate_dekrr_cheb_solve,
+                                 estimate_dekrr_solve, estimate_dekrr_step,
                                  estimate_flash_decode,
                                  estimate_rff_gram)
 
@@ -64,6 +66,7 @@ __all__ = [
     "Finding", "render_json", "render_report",
     "VMEM_BUDGET_BYTES", "VmemBudgetError", "VmemEstimate",
     "check_index_table", "effective_itemsize", "estimate_blocks",
-    "estimate_dekrr_step", "estimate_dekrr_solve", "estimate_rff_gram",
-    "estimate_flash_decode",
+    "estimate_dekrr_step", "estimate_dekrr_solve",
+    "estimate_dekrr_async_solve", "estimate_dekrr_cheb_solve",
+    "estimate_rff_gram", "estimate_flash_decode",
 ]

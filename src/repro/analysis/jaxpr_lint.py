@@ -504,15 +504,18 @@ def _tiny_solver():
 
 
 def batched_entry_points() -> list[EntryPoint]:
-    """Single-host entry points: `solve_batched`, `async_solve_batched`
-    (every backend × {tol=0, tol>0}), the ops wrappers, streaming ingest."""
+    """Single-host entry points: `solve_batched`, `async_solve_batched`,
+    `chebyshev_solve_packed` (every backend × {tol=0, tol>0} where
+    applicable), the ops wrappers, streaming ingest."""
+    from repro.core.acceleration import chebyshev_solve_packed
     from repro.dist.async_gossip import async_solve_batched
     from repro.dist.dekrr_spmd import _BACKENDS, solve_batched
 
     packed = synthetic_packed()
     key = jax.random.PRNGKey(0)
     sync_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": 1}
-    async_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": ROUNDS}
+    async_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": 1}
+    cheb_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": 1}
     eps = []
     for b in _BACKENDS:
         eps.append(EntryPoint(
@@ -536,6 +539,12 @@ def batched_entry_points() -> list[EntryPoint]:
             lambda b=b: jax.make_jaxpr(
                 lambda pk, k: async_solve_batched(
                     pk, ROUNDS, k, backend=b, tol=1e-3))(packed, key)))
+        eps.append(EntryPoint(
+            f"chebyshev_solve_packed[backend={b}]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: chebyshev_solve_packed(
+                    pk, 0.9, 0.0, num_iters=ROUNDS, backend=b))(packed),
+            cheb_expect[b]))
     eps.append(EntryPoint("ops.dekrr_step", _trace_ops_step, 1))
     eps.append(EntryPoint("ops.dekrr_solve", _trace_ops_solve, 1))
     eps.append(EntryPoint("StreamingDeKRR.ingest", _trace_ingest, 0))

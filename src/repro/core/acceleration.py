@@ -11,13 +11,25 @@ a direct improvement on the paper's own objective.
 Chebyshev iteration on A·θ = b with A = I − M and spec(M) ⊂ [μ_min, μ_max]
 (hence spec(A) ⊂ [1−μ_max, 1−μ_min]) achieves the optimal polynomial rate
   r_cheb = (√κ − 1)/(√κ + 1),  κ = (1 − μ_min)/(1 − μ_max),
-vs r_plain = μ_max: e.g. μ_max = 0.95, μ_min = 0 → 28 rounds/decade → 7
-rounds/decade (≈4×), and the advantage grows as ρ(M) → 1 (√ of the
+vs r_plain = μ_max: e.g. μ_max = 0.95, μ_min = 0 → ≈45 rounds/decade → ≈5
+rounds/decade (≈9×), and the advantage grows as ρ(M) → 1 (√ of the
 iteration count). Each Chebyshev step applies F exactly once — one θ
 exchange with one-hop neighbors — so per-round cost, privacy and topology
 are identical to Algorithm 1. The residual r = F(θ) − θ is local to each
 node; the scalar recurrence (α_k, β_k) is precomputed offline from the
-spectral-interval estimate, so no extra consensus is needed.
+spectral-interval estimate (`chebyshev_coefficients` — note the first
+step is special: β₁ = ½(c/d)², NOT the generic (c·α₀/2)² = ¼(c/d)²; the
+latter is a classic transcription bug that silently costs rounds), so no
+extra consensus is needed. All consumers — the host recurrence, the
+packed XLA/Pallas paths, and the fused multi-round kernel — share ONE
+precomputed (α, β) table (`chebyshev_scan` / scalar prefetch), so the
+recurrence exists in exactly one place.
+
+``backend="pallas_fused"`` on `chebyshev_solve_packed` runs the whole
+accelerated solve (or each `chunk_rounds` slice) as ONE
+`repro.kernels.dekrr_solve` Chebyshev pallas_call: the (α, β) table rides
+scalar prefetch like the slot tables, the two-term recurrence direction
+state lives in a VMEM table, and θ never touches HBM between rounds.
 
 Both interval ends are estimated by distributed power iteration on F
 (itself only neighbor exchanges): μ_max directly, μ_min via the shifted
@@ -30,12 +42,16 @@ margins on both ends (over-covering only costs a slightly weaker rate).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import lax
 
-from repro.dist.dekrr_spmd import PackedProblem, step_batched
+from repro.dist.dekrr_spmd import (PackedProblem, _check_backend,
+                                   step_batched)
 
 
 def safe_mu(mu_est: float, margin: float = 0.02) -> float:
@@ -46,25 +62,44 @@ def safe_mu(mu_est: float, margin: float = 0.02) -> float:
     return min(mu_est * (1.0 + margin) + 0.002, 0.99999)
 
 
+@partial(jax.jit, static_argnames=("iters", "backend", "shifted"))
+def _power_iteration_lam(packed, v0, shift, *, iters, backend, shifted):
+    """Jitted power iteration on the homogeneous part of F (b cancels in
+    differences): ONE device program for all `iters` rounds, one norm per
+    round. v is normalized before the loop, so ‖v‖ = 1 on every iterate
+    and λ = ‖M v‖ directly — no redundant ‖v‖ recompute, no per-round
+    host sync (the caller pulls the final scalar once)."""
+    zero = jnp.zeros_like(packed.d)
+    b = step_batched(packed, zero, backend=backend)      # F(0) = b
+    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+
+    def body(_, carry):
+        v, _ = carry
+        mv = step_batched(packed, v, backend=backend) - b    # M v
+        fv = shift * v - mv if shifted else mv
+        lam = jnp.linalg.norm(fv)
+        return fv / jnp.maximum(lam, 1e-30), lam
+
+    _, lam = lax.fori_loop(0, iters, body,
+                           (v0, jnp.zeros((), packed.d.dtype)))
+    return lam
+
+
 def power_iteration_mu_max(packed: PackedProblem, iters: int = 50,
                            seed: int = 0, backend: str = "xla") -> float:
     """Estimate ρ(M) with power iteration on the *homogeneous* part of F
     (b cancels in differences). Decentralized: each step is one Eq. 19
     round; the normalization uses a global norm (one scalar all-reduce —
     available in-network via gossip in practice). ``backend`` picks the
-    round implementation (`step_batched`'s switch)."""
+    round implementation (`step_batched`'s switch). Runs as one jitted
+    `lax.fori_loop` with a single device→host transfer at the end."""
+    _check_backend(backend)
     v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
                           packed.d.dtype)
     v = v * packed.theta_mask
-    zero = jnp.zeros_like(packed.d)
-    b = step_batched(packed, zero, backend=backend)  # F(0) = b
-    lam = 0.0
-    for _ in range(iters):
-        fv = step_batched(packed, v, backend=backend) - b      # M v
-        lam = float(jnp.linalg.norm(fv) / jnp.maximum(
-            jnp.linalg.norm(v), 1e-30))
-        v = fv / jnp.maximum(jnp.linalg.norm(fv), 1e-30)
-    return lam
+    return float(_power_iteration_lam(
+        packed, v, jnp.zeros((), packed.d.dtype), iters=iters,
+        backend=backend, shifted=False))
 
 
 def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
@@ -75,20 +110,16 @@ def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
     operator is similar to a symmetric matrix (real spectrum) but not PSD
     in general — a small negative tail is typical, and Chebyshev diverges
     if the interval excludes it (the acceleration polynomial grows
-    exponentially outside [μ_min, μ_max])."""
+    exponentially outside [μ_min, μ_max]). Same single-program /
+    single-transfer shape as `power_iteration_mu_max`."""
+    _check_backend(backend)
     v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
                           packed.d.dtype)
     v = v * packed.theta_mask
-    zero = jnp.zeros_like(packed.d)
-    b = step_batched(packed, zero, backend=backend)
-    lam = 0.0
-    for _ in range(iters):
-        mv = step_batched(packed, v, backend=backend) - b
-        fv = mu_max * v - mv
-        lam = float(jnp.linalg.norm(fv) / jnp.maximum(
-            jnp.linalg.norm(v), 1e-30))
-        v = fv / jnp.maximum(jnp.linalg.norm(fv), 1e-30)
-    return mu_max - lam
+    lam = _power_iteration_lam(
+        packed, v, jnp.asarray(mu_max, packed.d.dtype), iters=iters,
+        backend=backend, shifted=True)
+    return mu_max - float(lam)
 
 
 def estimate_spectral_interval(packed: PackedProblem, iters: int = 60,
@@ -104,6 +135,74 @@ def estimate_spectral_interval(packed: PackedProblem, iters: int = 60,
     return mu_lo, mu_hi
 
 
+def chebyshev_coefficients(mu_max: float, mu_min: float,
+                           num_iters: int
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """The (α_k, β_k) schedule for `num_iters` Chebyshev steps, as float64
+    NumPy tables — the SINGLE source of the recurrence (Golub & Van Loan
+    §10.1.5) consumed by the host scan, the packed XLA/Pallas paths, and
+    the fused kernel's scalar-prefetch tables:
+
+      α₀ = 1/d,   β₀ = 0,
+      β₁ = ½(c/d)²          ← first step is special (T₁(μ) = μ, not the
+                              generic 2μT_k − T_{k−1} recurrence); using
+                              the generic formula here gives ¼(c/d)² and
+                              a measurably slower — no longer optimal —
+                              error polynomial
+      α_k = 1/(d − β_k/α_{k−1}),  β_k = (c·α_{k−1}/2)²   for k ≥ 2
+
+    with d = (a+b)/2, c = (b−a)/2 on [a, b] = [1−μ_max, 1−μ_min].
+    """
+    a_lo, b_hi = 1.0 - float(mu_max), 1.0 - float(mu_min)
+    d = (a_lo + b_hi) / 2.0
+    c = (b_hi - a_lo) / 2.0
+    alphas = np.empty(num_iters, np.float64)
+    betas = np.empty(num_iters, np.float64)
+    alpha_prev = None
+    for k in range(num_iters):
+        if k == 0:
+            alpha, beta = 1.0 / d, 0.0
+        else:
+            beta = 0.5 * (c / d) ** 2 if k == 1 \
+                else (c * alpha_prev / 2.0) ** 2
+            alpha = 1.0 / (d - beta / alpha_prev)
+        alphas[k] = alpha
+        betas[k] = beta
+        alpha_prev = alpha
+    return alphas, betas
+
+
+def chebyshev_scan(apply_f: Callable[[jax.Array], jax.Array],
+                   theta0: jax.Array, alphas: jax.Array,
+                   betas: jax.Array, *, theta_star: jax.Array | None = None,
+                   p0: jax.Array | None = None):
+    """The shared (α, β)-table `lax.scan` every host/XLA Chebyshev path
+    runs: one F-application per step, two-term recurrence on the search
+    direction p (θ_{k+1} = θ_k + α_k p_k with p_k = r_k + β_k p_{k−1},
+    i.e. Δ_k = α_k p_k), coefficients consumed from the precomputed
+    tables (`chebyshev_coefficients`). Returns ``(theta, p, errs)`` —
+    ``errs`` is the per-step ‖θ_k − θ*‖ trace when ``theta_star`` is
+    given (how `rounds_to_tolerance` counts rounds without per-round
+    host syncs), else None. ``p0`` resumes the recurrence mid-schedule
+    (chunked callers); the cold start is p₀ = 0 (β₀ = 0 makes the first
+    step pure residual descent either way)."""
+    if p0 is None:
+        p0 = jnp.zeros_like(theta0)
+
+    def body(carry, ab):
+        theta, p = carry
+        alpha, beta = ab
+        resid = apply_f(theta) - theta
+        p = resid + beta * p
+        theta = theta + alpha * p
+        err = None if theta_star is None \
+            else jnp.linalg.norm(theta - theta_star)
+        return (theta, p), err
+
+    (theta, p), errs = lax.scan(body, (theta0, p0), (alphas, betas))
+    return theta, p, errs
+
+
 def chebyshev_solve(
     apply_f: Callable[[jax.Array], jax.Array],
     theta0: jax.Array,
@@ -116,43 +215,121 @@ def chebyshev_solve(
     Standard two-term recurrence (Golub & Van Loan §10.1.5) on A = I − M
     with eigenvalue interval [a, b] = [1−μ_max, 1−μ_min]:
       r_k = b − Aθ_k = F(θ_k) − θ_k
-      Δ_k = α_k r_k + β_k Δ_{k−1},   θ_{k+1} = θ_k + Δ_k
+      p_k = r_k + β_k p_{k−1},   θ_{k+1} = θ_k + α_k p_k
       α_0 = 1/d, β_1 = ½(c/d)², α_k = 1/(d − β_k/α_{k−1}),
       β_k = (c·α_{k−1}/2)²   with d = (a+b)/2, c = (b−a)/2.
+    The schedule comes from `chebyshev_coefficients` and runs through the
+    shared `chebyshev_scan` (k iterates match the closed-form Chebyshev
+    error polynomial T_k((d−λ)/c)/T_k(d/c) — pinned at rtol 1e-9 by
+    `tests/test_acceleration_chebyshev.py`).
     """
-    a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
-    d = (a_lo + b_hi) / 2.0
-    c = (b_hi - a_lo) / 2.0
+    if num_iters == 0:
+        return theta0
+    alphas, betas = chebyshev_coefficients(mu_max, mu_min, num_iters)
+    theta, _, _ = chebyshev_scan(apply_f, theta0,
+                                 jnp.asarray(alphas, theta0.dtype),
+                                 jnp.asarray(betas, theta0.dtype))
+    return theta
 
-    theta = theta0
-    delta = jnp.zeros_like(theta0)
-    alpha_prev = None
-    for k in range(num_iters):
-        r = apply_f(theta) - theta
-        if k == 0:
-            alpha, beta = 1.0 / d, 0.0
-        else:
-            beta = (c * alpha_prev / 2.0) ** 2
-            alpha = 1.0 / (d - beta / alpha_prev)
-        delta = alpha * r + beta * delta
-        theta = theta + delta
-        alpha_prev = alpha
+
+def _chebyshev_fused(packed: PackedProblem, alphas: np.ndarray,
+                     betas: np.ndarray,
+                     chunk_rounds: int | None) -> jax.Array:
+    """backend="pallas_fused": run the whole (α, β) schedule — or each
+    `chunk_rounds` slice of it — as one Chebyshev `dekrr_solve`
+    pallas_call (coefficients via scalar prefetch, the direction state
+    in a VMEM table; chunk boundaries chain (θ, p) bit-exactly)."""
+    from repro.kernels import ops
+
+    dtype = packed.d.dtype
+    theta = jnp.zeros_like(packed.d)
+    p_dir = jnp.zeros_like(packed.d)
+    self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
+    a = jnp.asarray(alphas, dtype)
+    b = jnp.asarray(betas, dtype)
+    num_iters = int(a.shape[0])
+
+    def call(th, pv, aa, bb):
+        return ops.dekrr_cheb_solve(
+            packed.g, packed.d, packed.s, packed.p, th, pv,
+            packed.nbr_idx, self_idx, packed.nbr_mask, aa, bb)
+
+    if chunk_rounds is None or chunk_rounds >= num_iters:
+        theta, _ = call(theta, p_dir, a, b)
+        return theta
+
+    n_full, rem = divmod(num_iters, chunk_rounds)
+
+    def chunk_fn(carry, xs):
+        th, pv = carry
+        aa, bb = xs
+        return call(th, pv, aa, bb), None
+
+    cut = n_full * chunk_rounds
+    (theta, p_dir), _ = lax.scan(
+        chunk_fn, (theta, p_dir),
+        (a[:cut].reshape(n_full, chunk_rounds),
+         b[:cut].reshape(n_full, chunk_rounds)))
+    if rem:
+        theta, p_dir = call(theta, p_dir, a[cut:], b[cut:])
     return theta
 
 
 def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
                            mu_min: float = 0.0,
                            num_iters: int = 100,
-                           backend: str = "xla") -> jax.Array:
+                           backend: str = "xla",
+                           chunk_rounds: int | None = None) -> jax.Array:
     """Chebyshev on the packed batched runtime (same exchange as Alg. 1).
-    ``backend`` routes each F-application through `step_batched`'s switch
-    — "pallas" runs the fused round kernel per Chebyshev step (the
-    recurrence needs every residual r_k = F(θ_k) − θ_k, so rounds cannot
-    be fused past the α/β update; the fused-solve kernel applies to the
-    plain iteration only)."""
+
+    ``backend`` routes each F-application through `step_batched`'s switch:
+    "xla" / "pallas" scan the shared (α, β) table one round kernel at a
+    time; "pallas_fused" feeds the precomputed table through scalar
+    prefetch and runs ALL rounds (or each ``chunk_rounds`` slice — one
+    pallas_call per chunk, default one for the whole schedule) inside the
+    fused multi-round kernel, with the Δ recurrence state VMEM-resident
+    (`repro.kernels.dekrr_solve`). The fused path matches the host
+    recurrence at rtol 1e-9 under x64 and is chunk-size bit-invariant;
+    ``chunk_rounds`` is ignored on the per-round backends."""
+    _check_backend(backend)
+    if chunk_rounds is not None and chunk_rounds < 1:
+        raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
+    num_iters = int(num_iters)
+    if num_iters == 0:
+        return jnp.zeros_like(packed.d)
+    alphas, betas = chebyshev_coefficients(mu_max, mu_min, num_iters)
+    if backend == "pallas_fused":
+        return _chebyshev_fused(packed, alphas, betas, chunk_rounds)
     apply_f = lambda th: step_batched(packed, th, backend=backend)
-    return chebyshev_solve(apply_f, jnp.zeros_like(packed.d), mu_max,
-                           mu_min, num_iters)
+    dtype = packed.d.dtype
+    theta, _, _ = chebyshev_scan(apply_f, jnp.zeros_like(packed.d),
+                                 jnp.asarray(alphas, dtype),
+                                 jnp.asarray(betas, dtype))
+    return theta
+
+
+@partial(jax.jit, static_argnames=("max_rounds", "backend"))
+def _plain_error_curve(packed, theta_star, *, max_rounds, backend):
+    """‖θ_k − θ*‖ for k = 1…max_rounds of the plain Eq. 19 iteration —
+    one scanned device program, errors pulled to the host in a single
+    transfer (the old per-round float() loop cost 2·rounds dispatches)."""
+    def body(theta, _):
+        theta = step_batched(packed, theta, backend=backend)
+        return theta, jnp.linalg.norm(theta - theta_star)
+
+    _, errs = lax.scan(body, jnp.zeros_like(packed.d), None,
+                       length=max_rounds)
+    return errs
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def _cheb_error_curve(packed, theta_star, alphas, betas, *, backend):
+    """Chebyshev counterpart of `_plain_error_curve` — the SAME shared
+    scan as `chebyshev_solve` (the β₁ fix lands exactly once)."""
+    apply_f = lambda th: step_batched(packed, th, backend=backend)
+    _, _, errs = chebyshev_scan(apply_f, jnp.zeros_like(packed.d),
+                                alphas, betas, theta_star=theta_star)
+    return errs
 
 
 def rounds_to_tolerance(packed: PackedProblem, theta_star: jax.Array,
@@ -161,42 +338,30 @@ def rounds_to_tolerance(packed: PackedProblem, theta_star: jax.Array,
                         mu_min: float | None = None,
                         backend: str = "xla"
                         ) -> tuple[int, int]:
-    """(plain rounds, chebyshev rounds) to reach relative error ≤ tol."""
+    """(plain rounds, chebyshev rounds) to reach relative error ≤ tol.
+
+    Both curves run as single scanned device programs emitting the
+    per-round error trace; the first tol crossing is found host-side from
+    one transfer. The Chebyshev curve consumes the same
+    `chebyshev_coefficients` table as every other consumer — this
+    function no longer carries its own copy of the recurrence."""
+    _check_backend(backend)
     if mu_max is None or mu_min is None:
         lo, hi = estimate_spectral_interval(packed, backend=backend)
         mu_max = hi if mu_max is None else mu_max
         mu_min = lo if mu_min is None else mu_min
     norm_star = float(jnp.linalg.norm(theta_star))
+    target = tol * norm_star
 
-    # plain Eq. 19
-    theta = jnp.zeros_like(packed.d)
-    plain = max_rounds
-    for k in range(max_rounds):
-        theta = step_batched(packed, theta, backend=backend)
-        if float(jnp.linalg.norm(theta - theta_star)) <= tol * norm_star:
-            plain = k + 1
-            break
+    def first_crossing(errs: np.ndarray) -> int:
+        hit = errs <= target
+        return int(np.argmax(hit)) + 1 if hit.any() else max_rounds
 
-    # chebyshev
-    apply_f = lambda th: step_batched(packed, th, backend=backend)
-    a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
-    d = (a_lo + b_hi) / 2.0
-    c = (b_hi - a_lo) / 2.0
-    theta = jnp.zeros_like(packed.d)
-    delta = jnp.zeros_like(packed.d)
-    alpha_prev = None
-    cheb = max_rounds
-    for k in range(max_rounds):
-        r = apply_f(theta) - theta
-        if k == 0:
-            alpha, beta = 1.0 / d, 0.0
-        else:
-            beta = (c * alpha_prev / 2.0) ** 2
-            alpha = 1.0 / (d - beta / alpha_prev)
-        delta = alpha * r + beta * delta
-        theta = theta + delta
-        alpha_prev = alpha
-        if float(jnp.linalg.norm(theta - theta_star)) <= tol * norm_star:
-            cheb = k + 1
-            break
-    return plain, cheb
+    plain_errs = np.asarray(_plain_error_curve(
+        packed, theta_star, max_rounds=max_rounds, backend=backend))
+    alphas, betas = chebyshev_coefficients(mu_max, mu_min, max_rounds)
+    dtype = packed.d.dtype
+    cheb_errs = np.asarray(_cheb_error_curve(
+        packed, theta_star, jnp.asarray(alphas, dtype),
+        jnp.asarray(betas, dtype), backend=backend))
+    return first_crossing(plain_errs), first_crossing(cheb_errs)

@@ -20,9 +20,20 @@ pinned):
   batched, xla            exact (vmap round)  exact (masked vmap round)
   batched, pallas         exact (round        exact (activation-masked round
                           kernel)             kernel; buffers as θ-table rows)
-  batched, pallas_fused   exact (multi-round  masked per-round kernel — rounds
-                          fused kernel)       do NOT fuse (per-round mask /
-                                              censor control flow)
+  batched, pallas_fused   exact (multi-round  exact (fused async chain: the
+                          fused kernel)       [R, J] mask table + censor
+                                              thresholds prefetch into one
+                                              multi-round kernel — one
+                                              dispatch per chunk; tol>0 and
+                                              return_stats=True keep the
+                                              per-round path)
+  accelerated (Chebyshev  exact (shared (α,β)-table `lax.scan` on xla /
+  `repro.core.            per-round kernel on pallas;
+  acceleration`)          `chebyshev_solve_packed(backend="pallas_fused")`
+                          runs the whole schedule — θ and the search
+                          direction p VMEM-resident — in ONE kernel
+                          dispatch per chunk, pinned to the host scan at
+                          rtol 1e-9)
   SPMD, xla               exact               exact (shared-key masks
                                               replicated; dense collectives
                                               every round)

@@ -13,10 +13,16 @@ runtime it extends:
    pass θ through untouched; jnp.where on the XLA path, the
    activation-masked `repro.kernels.dekrr_step` variant on the Pallas
    paths) and ``nbr_theta`` (the [J, K, D_max] staleness buffers instead
-   of a fresh ``theta[nbr_idx]`` gather). ``backend="pallas_fused"`` is
-   accepted for plumbing uniformity but runs the per-round masked kernel:
-   the multi-round fused kernel cannot host the per-round mask sampling /
-   censoring control flow, so cross-round fusion remains sync-only.
+   of a fresh ``theta[nbr_idx]`` gather). ``backend="pallas_fused"`` runs
+   the whole precomputed schedule — [R, J] activation table + [R] censor
+   thresholds, scalar-prefetched like the slot tables — through the fused
+   async chain kernel (`repro.kernels.ops.dekrr_async_solve`): one
+   pallas_call per ``chunk_rounds`` chunk (default: one for the whole
+   solve), bit-for-bit the scanned per-round masked kernel. Two
+   accounting modes keep the per-round path even on "pallas_fused":
+   ``tol > 0`` (the per-round convergence freeze is host-orchestrated)
+   and ``return_stats=True`` (the fused kernel does not emit
+   broadcast/delivery counts).
 
 2. **SPMD nodes-on-devices execution** (`make_async_spmd_solver`): one
    node per device, same mesh/mode contract as `make_spmd_solver`. The
@@ -209,6 +215,42 @@ def _count(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask, dtype=jnp.int32)
 
 
+def _async_solve_fused(packed, state, masks, thresholds, *, gossip,
+                       censored, chunk_rounds):
+    """tol = 0 fused chain: the whole precomputed schedule (or each
+    `chunk_rounds` slice of it) runs as one async-chain pallas_call. The
+    kernel returns the full `AsyncGossipState`, so chunk boundaries chain
+    bit-exactly and the result is chunk-size bit-invariant."""
+    from repro.kernels.ops import dekrr_async_solve
+
+    num_iters = int(masks.shape[0])
+
+    def call(st, mask_tab, thr_tab):
+        theta, sent, buffers = dekrr_async_solve(
+            packed.g, packed.d, packed.s, packed.p, st.theta, st.sent,
+            st.buffers, packed.nbr_idx, packed.nbr_mask, mask_tab,
+            thr_tab, gossip=gossip, censored=censored)
+        return AsyncGossipState(theta=theta, sent=sent, buffers=buffers)
+
+    if chunk_rounds is None or chunk_rounds >= num_iters:
+        return call(state, masks, thresholds).theta
+
+    n_full, rem = divmod(num_iters, chunk_rounds)
+    cut = n_full * chunk_rounds
+
+    def chunk_fn(st, xs):
+        mask_tab, thr_tab = xs
+        return call(st, mask_tab, thr_tab), None
+
+    state, _ = lax.scan(
+        chunk_fn, state,
+        (masks[:cut].reshape(n_full, chunk_rounds, masks.shape[1]),
+         thresholds[:cut].reshape(n_full, chunk_rounds)))
+    if rem:
+        state = call(state, masks[cut:], thresholds[cut:])
+    return state.theta
+
+
 @partial(jax.jit, static_argnames=("num_iters", "gossip", "censored",
                                    "backend", "tol", "chunk_rounds",
                                    "return_rounds", "return_stats"))
@@ -217,6 +259,18 @@ def _async_solve_impl(packed, masks, thresholds, theta0, *, num_iters,
                       return_rounds, return_stats):
     state0 = init_async_state(packed, theta0)
     zero = jnp.asarray(0, jnp.int32)
+
+    if tol == 0.0 and backend == "pallas_fused" and not return_stats:
+        # Fused async chain: the whole schedule (or each chunk_rounds
+        # slice) is one pallas_call. tol > 0 keeps the per-round path
+        # (host-orchestrated convergence freeze), as does
+        # return_stats=True (the kernel does not emit wire counts).
+        theta = _async_solve_fused(packed, state0, masks, thresholds,
+                                   gossip=gossip, censored=censored,
+                                   chunk_rounds=chunk_rounds)
+        if return_rounds:
+            return theta, jnp.asarray(num_iters, jnp.int32)
+        return theta
 
     if tol == 0.0:
         def round_fn(carry, xs):
@@ -306,10 +360,14 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
 
     The whole activation/censor schedule is precomputed from `key` via the
     shared `repro.core.async_gossip` helpers (round r uses
-    ``fold_in(key, r)``), then the solve scans `async_step_batched`'s
-    round on the chosen ``backend`` ("xla" | "pallas" | "pallas_fused";
-    the Pallas paths run the activation-masked round kernel — see module
-    docstring for why rounds do not fuse).
+    ``fold_in(key, r)``), then the solve runs on the chosen ``backend``:
+    "xla" and "pallas" scan the per-round (activation-masked) round;
+    "pallas_fused" feeds the schedule through scalar prefetch and runs
+    ALL rounds in one async-chain pallas_call — or one per
+    ``chunk_rounds`` chunk, bit-invariant to the chunking — falling back
+    to the scanned per-round masked kernel only for the two accounting
+    modes the kernel cannot host (``tol > 0``, ``return_stats=True``;
+    see module docstring).
 
     ``tol > 0`` enables early stopping on max|Δθ| < tol, evaluated after
     every round on device — except rounds the activation draw left

@@ -40,6 +40,24 @@ is executable as `repro.analysis.vmem.estimate_dekrr_solve`
 wrapper checks it before dispatch and raises `VmemBudgetError` instead
 of a Mosaic allocation crash. All dims must be padded by the wrapper:
 D to lane multiples of 128, T to sublane multiples of 8.
+
+Two sibling kernels fuse the other two solve schedules the same way —
+both are precomputable per chunk, so the per-round control flow that used
+to force one dispatch per round rides scalar prefetch instead:
+
+  * `_dekrr_async_solve_kernel` — the COKE async-gossip chain
+    (`repro.dist.async_gossip`): the [R, J] activation table and [R]
+    censor thresholds prefetch like the slot tables; sent/staleness-buffer
+    state lives in VMEM scratch and broadcast flags in two round-parity
+    [J] SMEM vectors. Bit-for-bit the scanned per-round masked kernel.
+  * `_dekrr_cheb_solve_kernel` — the Chebyshev semi-iteration
+    (`repro.core.acceleration`): the precomputed (α_k, β_k) recurrence
+    tables prefetch as two [R] float vectors and the two-term Δ state is
+    a VMEM table, so the accelerated O(√κ)-round solve is also one
+    dispatch per chunk.
+
+Their VMEM working sets are `estimate_dekrr_async_solve` /
+`estimate_dekrr_cheb_solve` in `repro.analysis.vmem`.
 """
 from __future__ import annotations
 
@@ -161,6 +179,358 @@ def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
         ),
         interpret=interpret,
     )(nbr_idx, self_idx, nbr_mask, theta, g, d, s, p)
+
+
+# --------------------------------------------------------------- async chain
+def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
+                              theta0_ref, sent0_ref, buf0_ref, g_ref, d_ref,
+                              s_ref, p_ref, out_theta_ref, out_sent_ref,
+                              out_buf_ref, tab_even_ref, tab_odd_ref,
+                              sent_ref, buf_ref, fl_even_ref, fl_odd_ref, *,
+                              censored: bool, edge_gossip: bool,
+                              num_rounds: int):
+    """R censored async-gossip rounds in one kernel; grid (R + 1, J).
+
+    The whole COKE schedule is precomputed, so it rides scalar prefetch:
+    nbr_idx [J, K] int32 (NODE ids, not table rows — self row of node j is
+    row j), nbr_mask [J, K] int32, active [R, J] int32 activation table,
+    thr [R] float censor thresholds. Tensor operands: theta0/sent0 [T, D]
+    and buf0 [B, D] initial state (constant index maps, fetched once),
+    g/s [1, D, D], d [1, D], p [1, K, D, D] streamed per (r, j).
+
+    State lives in scratch across the whole grid: two round-parity θ
+    tables (Jacobi semantics, as in the sync kernel), a sent table and a
+    flattened staleness-buffer table (owner-only access — no parity
+    needed), and two parity [J] SMEM broadcast-flag vectors (node j at
+    step r can already have overwritten its round-r flag when a later
+    node j' > j of the *same* step reads flags, so flags alternate parity
+    exactly like θ).
+
+    Step (r, j) replays `repro.dist.async_gossip._async_round` for node j
+    with round r − 1's deliveries applied first:
+
+      deliver (r ≥ 1): slot k receives iff the slot is live and
+        broadcaster nbr_idx[j, k] raised its round r − 1 flag (edge
+        gossip additionally requires receiver j active in round r − 1);
+        the buffer row copies the broadcaster's post-round-(r−1) θ row.
+      compute (r < R): active nodes run the exact `_eq19_update`
+        arithmetic with neighbor rows read from the staleness buffer;
+        censored mode broadcasts iff max|new − sent| > thr[r], updating
+        sent on broadcast. Inactive nodes copy θ through and clear their
+        flag. Round R is delivery-only (flush of the last broadcasts).
+
+    The arithmetic sequence is identical to the per-round masked kernel
+    on the [θ; buffers] concat table, so the chain is bit-for-bit the
+    scanned per-round "pallas" backend.
+    """
+    r = pl.program_id(0)
+    j = pl.program_id(1)
+    num_slots = nbr_idx_ref.shape[1]
+    dtype = theta0_ref.dtype
+
+    @pl.when(jnp.logical_and(r == 0, j == 0))
+    def _init():
+        tab_even_ref[...] = theta0_ref[...]
+        tab_odd_ref[...] = theta0_ref[...]
+        sent_ref[...] = sent0_ref[...]
+        buf_ref[...] = buf0_ref[...]
+
+    def row_times(row, mat):
+        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+        return jax.lax.dot_general(
+            row, mat, _ROW_TIMES_MAT_T,
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=dtype)
+
+    def deliver(read_tab, fl_read):
+        for k in range(num_slots):
+            nb = nbr_idx_ref[j, k]
+            cond = jnp.logical_and(nbr_mask_ref[j, k] != 0,
+                                   fl_read[nb] != 0)
+            if edge_gossip:
+                cond = jnp.logical_and(cond, active_ref[r - 1, j] != 0)
+
+            @pl.when(cond)
+            def _recv(k=k, nb=nb):
+                buf_ref[pl.ds(j * num_slots + k, 1), :] = \
+                    read_tab[pl.ds(nb, 1), :]
+
+    def compute(read_tab, write_tab, fl_write):
+        is_active = active_ref[r, j] != 0
+
+        @pl.when(is_active)
+        def _update():
+            theta_self = read_tab[pl.ds(j, 1), :]                # [1, D]
+            acc = d_ref[...] + row_times(theta_self, s_ref[0])   # d + S θ
+            for k in range(num_slots):                           # K unroll
+                theta_k = buf_ref[pl.ds(j * num_slots + k, 1), :]
+                mask_k = nbr_mask_ref[j, k].astype(dtype)
+                acc += row_times(theta_k, p_ref[0, k]) * mask_k  # Σ m P θ
+            new = row_times(acc, g_ref[0])                       # G (…)
+            write_tab[pl.ds(j, 1), :] = new
+            out_theta_ref[...] = new
+            if censored:
+                delta = jnp.max(jnp.abs(new - sent_ref[pl.ds(j, 1), :]))
+                bc = delta > thr_ref[r]
+                fl_write[j] = bc.astype(jnp.int32)
+
+                @pl.when(bc)
+                def _bcast():
+                    sent_ref[pl.ds(j, 1), :] = new
+            else:
+                fl_write[j] = jnp.int32(1)
+                sent_ref[pl.ds(j, 1), :] = new
+
+        @pl.when(jnp.logical_not(is_active))
+        def _passthrough():
+            cur = read_tab[pl.ds(j, 1), :]
+            write_tab[pl.ds(j, 1), :] = cur
+            out_theta_ref[...] = cur
+            fl_write[j] = jnp.int32(0)
+
+    def step(read_tab, write_tab, fl_read, fl_write):
+        @pl.when(r >= 1)
+        def _deliver():
+            deliver(read_tab, fl_read)
+
+        @pl.when(r < num_rounds)
+        def _compute():
+            compute(read_tab, write_tab, fl_write)
+
+        @pl.when(r == num_rounds)
+        def _flush():
+            out_theta_ref[...] = read_tab[pl.ds(j, 1), :]
+
+        out_sent_ref[...] = sent_ref[pl.ds(j, 1), :]
+        out_buf_ref[...] = buf_ref[pl.ds(j * num_slots, num_slots), :]
+
+    even_round = r % 2 == 0
+
+    @pl.when(even_round)
+    def _even():
+        step(tab_even_ref, tab_odd_ref, fl_even_ref, fl_odd_ref)
+
+    @pl.when(jnp.logical_not(even_round))
+    def _odd():
+        step(tab_odd_ref, tab_even_ref, fl_odd_ref, fl_even_ref)
+
+
+def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
+                             p: jax.Array, theta: jax.Array,
+                             sent: jax.Array, buffers: jax.Array,
+                             nbr_idx: jax.Array, nbr_mask: jax.Array,
+                             active_tab: jax.Array, thresholds: jax.Array,
+                             *, censored: bool, edge_gossip: bool,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw pallas_call. All dims must already be padded/aligned:
+
+      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
+      of 128; theta/sent [T, D] with T ≥ J a multiple of 8 (row j = node
+      j); buffers [B, D] with B ≥ J·K a multiple of 8 (row j·K + k = slot
+      (j, k)); nbr_idx/nbr_mask [J, K] int32 with entries < J;
+      active_tab [R, J] int32 with R ≥ 1 static; thresholds [R] float.
+    Returns the post-schedule (θ rows [J, D], sent rows [J, D],
+    buffer rows [J·K, D]).
+    """
+    j_nodes, d_feat = d.shape
+    k_slots = p.shape[1]
+    t_rows = theta.shape[0]
+    b_rows = buffers.shape[0]
+    num_rounds = active_tab.shape[0]
+    assert d_feat % 128 == 0 and t_rows % 8 == 0 and b_rows % 8 == 0, \
+        (d_feat, t_rows, b_rows)
+    assert sent.shape == theta.shape, (sent.shape, theta.shape)
+    assert b_rows >= j_nodes * k_slots, (b_rows, j_nodes, k_slots)
+    assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
+    assert num_rounds >= 1, "schedule must cover >= 1 round"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,    # nbr_idx, nbr_mask, active_tab, thresholds
+        grid=(num_rounds + 1, j_nodes),       # final step: delivery flush
+        in_specs=[
+            pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # θ0
+            pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # sent0
+            pl.BlockSpec((b_rows, d_feat), lambda r, j, *_: (0, 0)),  # buf0
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, k_slots, d_feat, d_feat),
+                         lambda r, j, *_: (j, 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # θ
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # sent
+            pl.BlockSpec((k_slots, d_feat), lambda r, j, *_: (j, 0)),  # buf
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # sent table
+            pltpu.VMEM((b_rows, d_feat), theta.dtype),   # staleness buffers
+            pltpu.SMEM((j_nodes,), jnp.int32),           # even-round flags
+            pltpu.SMEM((j_nodes,), jnp.int32),           # odd-round flags
+        ],
+    )
+    kernel = functools.partial(
+        _dekrr_async_solve_kernel, censored=censored,
+        edge_gossip=edge_gossip, num_rounds=num_rounds)
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * k_slots, d_feat), theta.dtype),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=num_rounds * j_nodes * flops_per_node,
+            bytes_accessed=((2 * t_rows + b_rows) * d_feat
+                            + (num_rounds + 1) * j_nodes
+                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            ) * theta.dtype.itemsize,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(nbr_idx, nbr_mask, active_tab, thresholds, theta, sent, buffers,
+      g, d, s, p)
+
+
+# ---------------------------------------------------------------- chebyshev
+def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
+                             alpha_ref, beta_ref, theta0_ref, delta0_ref,
+                             g_ref, d_ref, s_ref, p_ref, out_theta_ref,
+                             out_delta_ref, tab_even_ref, tab_odd_ref,
+                             delta_ref):
+    """R Chebyshev semi-iteration rounds in one kernel; grid (R, J).
+
+    Identical layout to the plain fused solve — parity-alternating θ
+    tables, scalar-prefetched slot tables — plus the precomputed (α, β)
+    schedule (`repro.core.acceleration.chebyshev_coefficients`) as two
+    [R] float prefetch vectors and a [J', D] VMEM table holding each
+    node's two-term recurrence direction state p (owner-only access, no
+    parity; Δ_k = α_k p_k):
+
+        new  = eq19(θ_read)                      (the F-application)
+        p_j  ← (new − θ_j) + β_r p_j
+        θ_j  ← θ_j + α_r p_j
+
+    θ and p rows are emitted every round (last round wins) so chunked
+    callers can chain bit-exactly — the exact recurrence
+    `repro.core.acceleration.chebyshev_scan` runs on the host/XLA paths.
+    """
+    r = pl.program_id(0)
+    j = pl.program_id(1)
+    num_slots = nbr_idx_ref.shape[1]
+    dtype = theta0_ref.dtype
+
+    @pl.when(jnp.logical_and(r == 0, j == 0))
+    def _init():
+        tab_even_ref[...] = theta0_ref[...]
+        tab_odd_ref[...] = theta0_ref[...]
+        delta_ref[...] = delta0_ref[...]
+
+    def row_times(row, mat):
+        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+        return jax.lax.dot_general(
+            row, mat, _ROW_TIMES_MAT_T,
+            precision=jax.lax.Precision.HIGHEST,
+            preferred_element_type=dtype)
+
+    def round_body(read_ref, write_ref):
+        theta_self = read_ref[pl.ds(self_idx_ref[j], 1), :]      # [1, D]
+        acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
+        for k in range(num_slots):                               # K unroll
+            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+            mask_k = nbr_mask_ref[j, k].astype(dtype)
+            acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ
+        new = row_times(acc, g_ref[0])                           # F(θ)_j
+        resid = new - theta_self
+        p_new = resid + beta_ref[r] * delta_ref[pl.ds(j, 1), :]
+        th_new = theta_self + alpha_ref[r] * p_new
+        write_ref[pl.ds(self_idx_ref[j], 1), :] = th_new
+        delta_ref[pl.ds(j, 1), :] = p_new
+        out_theta_ref[...] = th_new
+        out_delta_ref[...] = p_new
+
+    even_round = r % 2 == 0
+
+    @pl.when(even_round)
+    def _even():
+        round_body(tab_even_ref, tab_odd_ref)
+
+    @pl.when(jnp.logical_not(even_round))
+    def _odd():
+        round_body(tab_odd_ref, tab_even_ref)
+
+
+def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
+                            p: jax.Array, theta: jax.Array,
+                            delta: jax.Array, nbr_idx: jax.Array,
+                            self_idx: jax.Array, nbr_mask: jax.Array,
+                            alphas: jax.Array, betas: jax.Array, *,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Raw pallas_call. Same operand contract as `dekrr_solve_pallas`,
+    plus delta [J', D] (J' ≥ J a multiple of 8, row j = node j's
+    direction state p) and the [R] float (α, β) schedule with R ≥ 1
+    static. Returns the (θ rows [J, D], p rows [J, D]) after R
+    Chebyshev rounds.
+    """
+    j_nodes, d_feat = d.shape
+    k_slots = p.shape[1]
+    t_rows = theta.shape[0]
+    j_rows = delta.shape[0]
+    num_rounds = alphas.shape[0]
+    assert d_feat % 128 == 0 and t_rows % 8 == 0 and j_rows % 8 == 0, \
+        (d_feat, t_rows, j_rows)
+    assert j_rows >= j_nodes, (j_rows, j_nodes)
+    assert alphas.shape == betas.shape, (alphas.shape, betas.shape)
+    assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
+    assert num_rounds >= 1, "schedule must cover >= 1 round"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,   # nbr_idx, self_idx, nbr_mask, alphas, betas
+        grid=(num_rounds, j_nodes),
+        in_specs=[
+            pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # θ0
+            pl.BlockSpec((j_rows, d_feat), lambda r, j, *_: (0, 0)),  # Δ0
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
+            pl.BlockSpec((1, k_slots, d_feat, d_feat),
+                         lambda r, j, *_: (j, 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # θ
+            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # Δ
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
+            pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
+            pltpu.VMEM((j_rows, d_feat), theta.dtype),   # Δ table
+        ],
+    )
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    return pl.pallas_call(
+        _dekrr_cheb_solve_kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=num_rounds * j_nodes * flops_per_node,
+            bytes_accessed=((t_rows + j_rows) * d_feat
+                            + num_rounds * j_nodes
+                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            ) * theta.dtype.itemsize,
+            transcendentals=0,
+        ),
+        interpret=interpret,
+    )(nbr_idx, self_idx, nbr_mask, alphas, betas, theta, delta,
+      g, d, s, p)
 
 
 @functools.partial(jax.jit, static_argnames=("num_rounds", "interpret"))

@@ -20,11 +20,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.vmem import (check_index_table, estimate_dekrr_solve,
-                                 estimate_dekrr_step,
+from repro.analysis.vmem import (check_index_table,
+                                 estimate_dekrr_async_solve,
+                                 estimate_dekrr_cheb_solve,
+                                 estimate_dekrr_solve, estimate_dekrr_step,
                                  estimate_flash_decode, estimate_rff_gram)
 from repro.core.rff import FeatureMap
-from repro.kernels.dekrr_solve import dekrr_solve_pallas
+from repro.kernels.dekrr_solve import (dekrr_async_solve_pallas,
+                                       dekrr_cheb_solve_pallas,
+                                       dekrr_solve_pallas)
 from repro.kernels.dekrr_step import dekrr_step_pallas
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_gram import rff_gram_pallas
@@ -45,10 +49,25 @@ def _check_dekrr_budget(kernel: str, d, p, theta) -> None:
     d_pad = _pad_dim(d.shape[1], 128)
     t_pad = _pad_dim(theta.shape[0], 8)
     k_pad = max(int(p.shape[1]), 1)
-    est = estimate_dekrr_step if kernel == "dekrr_step" \
-        else estimate_dekrr_solve
-    est(t_rows=t_pad, d_feat=d_pad, k_slots=k_pad,
-        itemsize=jnp.dtype(d.dtype).itemsize).check()
+    j_pad = _pad_dim(d.shape[0], 8)
+    size = jnp.dtype(d.dtype).itemsize
+    if kernel == "dekrr_step":
+        est = estimate_dekrr_step(t_rows=t_pad, d_feat=d_pad,
+                                  k_slots=k_pad, itemsize=size)
+    elif kernel == "dekrr_solve":
+        est = estimate_dekrr_solve(t_rows=t_pad, d_feat=d_pad,
+                                   k_slots=k_pad, itemsize=size)
+    elif kernel == "dekrr_async_solve":
+        est = estimate_dekrr_async_solve(
+            t_rows=t_pad, b_rows=_pad_dim(d.shape[0] * k_pad, 8),
+            d_feat=d_pad, k_slots=k_pad, itemsize=size)
+    elif kernel == "dekrr_cheb_solve":
+        est = estimate_dekrr_cheb_solve(t_rows=t_pad, j_rows=j_pad,
+                                        d_feat=d_pad, k_slots=k_pad,
+                                        itemsize=size)
+    else:  # pragma: no cover - programming error
+        raise ValueError(f"unknown DeKRR kernel {kernel!r}")
+    est.check()
 
 
 def _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask) -> None:
@@ -294,6 +313,148 @@ def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
     return _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
                             num_rounds=num_rounds, interpret=interpret)
+
+
+def _check_async_nbr_indices(j_nodes, nbr_idx, nbr_mask) -> None:
+    """Async variant of `_check_dekrr_indices`: nbr_idx entries are NODE
+    ids — they index the [J] SMEM broadcast-flag vectors as well as θ
+    rows — so live slots must lie in [0, J), not merely within the padded
+    θ table. Concrete tables only; traced ones are validated at the
+    staging layer (`repro.dist.pack_problem`)."""
+    if isinstance(nbr_idx, jax.core.Tracer):
+        return
+    import numpy as np
+
+    idx = np.asarray(nbr_idx)
+    if idx.size and not isinstance(nbr_mask, jax.core.Tracer):
+        live = np.asarray(nbr_mask) != 0
+        if not live.any():
+            return
+        idx = idx[live]
+    check_index_table("nbr_idx", idx, j_nodes)
+
+
+@partial(jax.jit, static_argnames=("gossip", "censored", "interpret"))
+def _dekrr_async_solve_jit(g, d, s, p, theta, sent, buffers, nbr_idx,
+                           nbr_mask, active_tab, thresholds, *, gossip,
+                           censored, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    j_nodes, d_feat = d.shape
+    k_in = buffers.shape[1]
+
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    k_pad = p_p.shape[1]
+    sent_p = _pad_to(_pad_to(sent, 1, 128), 0, 8)
+    buf = buffers if k_in else jnp.zeros((j_nodes, k_pad, d_feat),
+                                         buffers.dtype)
+    buf_p = _pad_to(_pad_to(buf.reshape(j_nodes * k_pad, d_feat), 1, 128),
+                    0, 8)
+    out_theta, out_sent, out_buf = dekrr_async_solve_pallas(
+        g_p, d_p, s_p, p_p, theta_p, sent_p, buf_p, nbr_idx_p, nbr_mask_p,
+        (active_tab != 0).astype(jnp.int32), thresholds.astype(d.dtype),
+        censored=censored, edge_gossip=(gossip == "edge"),
+        interpret=interpret)
+    out_buf = out_buf.reshape(j_nodes, k_pad, -1)[:, :k_in, :d_feat]
+    return out_theta[:, :d_feat], out_sent[:, :d_feat], out_buf
+
+
+def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
+                      p: jax.Array, theta: jax.Array, sent: jax.Array,
+                      buffers: jax.Array, nbr_idx: jax.Array,
+                      nbr_mask: jax.Array, active_tab: jax.Array,
+                      thresholds: jax.Array, *, gossip: str = "bernoulli",
+                      censored: bool = False,
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused async-gossip chain: the whole R-round COKE schedule in ONE
+    pallas_call (`repro.kernels.dekrr_solve._dekrr_async_solve_kernel`).
+
+    Same block contract as `dekrr_step` — g/s [J, D, D], d [J, D],
+    p [J, K, D, D], nbr_idx/nbr_mask [J, K] — but θ indexing is by node
+    id (row j = node j, no self_idx indirection): theta/sent [J, D],
+    buffers [J, K, D] staleness buffers (slot (j, k) holds the last θ
+    received from nbr_idx[j, k]). The precomputed schedule is
+    active_tab [R, J] (nonzero = node active in that round) and
+    thresholds [R] (censor thresholds; ignored when ``censored`` is
+    False). ``gossip`` ∈ {"bernoulli", "edge"} selects whether delivery
+    additionally requires the receiver active (edge gossip).
+
+    Returns the post-schedule (theta [J, D], sent [J, D],
+    buffers [J, K, D]) — exactly the `AsyncGossipState` fields, so chunked
+    callers chain bit-exactly. R = 0 returns the state unchanged.
+
+    The in-kernel round replays `repro.dist.async_gossip._async_round`'s
+    operation sequence, so the chain is bit-for-bit the scanned per-round
+    masked kernel (and, at p = 1 uncensored, the sync fused solve).
+
+    VMEM working set at the padded shapes is
+    `5·T·D + 2·B·D + 2·(2+K)·D² + 3·D` elements (B = J·K buffer rows;
+    consolidated table: `repro.analysis.vmem`); over-budget shapes raise
+    `VmemBudgetError` here, before dispatch.
+    """
+    if gossip not in ("bernoulli", "edge"):
+        raise ValueError(f"gossip must be 'bernoulli' or 'edge', "
+                         f"got {gossip!r}")
+    _check_async_nbr_indices(int(d.shape[0]), nbr_idx, nbr_mask)
+    if int(active_tab.shape[0]) == 0:
+        return theta, sent, buffers
+    _check_dekrr_budget("dekrr_async_solve", d, p, theta)
+    return _dekrr_async_solve_jit(
+        g, d, s, p, theta, sent, buffers, nbr_idx, nbr_mask, active_tab,
+        thresholds, gossip=gossip, censored=censored, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx, self_idx,
+                          nbr_mask, alphas, betas, *, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    d_feat = d.shape[1]
+
+    g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
+        _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
+    delta_p = _pad_to(_pad_to(delta, 1, 128), 0, 8)
+    out_theta, out_delta = dekrr_cheb_solve_pallas(
+        g_p, d_p, s_p, p_p, theta_p, delta_p, nbr_idx_p,
+        self_idx.astype(jnp.int32), nbr_mask_p,
+        alphas.astype(d.dtype), betas.astype(d.dtype),
+        interpret=interpret)
+    return out_theta[:, :d_feat], out_delta[:, :d_feat]
+
+
+def dekrr_cheb_solve(g: jax.Array, d: jax.Array, s: jax.Array,
+                     p: jax.Array, theta: jax.Array, delta: jax.Array,
+                     nbr_idx: jax.Array, self_idx: jax.Array,
+                     nbr_mask: jax.Array, alphas: jax.Array,
+                     betas: jax.Array, *, interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Fused Chebyshev semi-iteration: R accelerated Eq. 19 rounds in ONE
+    pallas_call (`repro.kernels.dekrr_solve._dekrr_cheb_solve_kernel`).
+
+    Same operand contract as `dekrr_solve` — g/s [J, D, D], d [J, D],
+    p [J, K, D, D], theta [T, D] θ table, nbr_idx [J, K] / self_idx [J]
+    rows into the table, nbr_mask [J, K] — plus delta [J, D] (each node's
+    two-term recurrence direction state p, with Δ_k = α_k p_k) and the
+    precomputed [R] (α, β) schedule from
+    `repro.core.acceleration.chebyshev_coefficients` (R static via
+    the schedule length). Returns the (θ rows [J, D], p rows [J, D])
+    after the schedule, so chunked callers chain bit-exactly; R = 0
+    returns (theta[self_idx], delta) unchanged.
+
+    VMEM working set at the padded shapes is
+    `3·T·D + 2·J'·D + 2·(2+K)·D² + 3·D` elements (consolidated table:
+    `repro.analysis.vmem`); over-budget shapes raise `VmemBudgetError`
+    here, before dispatch.
+    """
+    if int(alphas.shape[0]) == 0:
+        return theta[self_idx], delta
+    _check_dekrr_budget("dekrr_cheb_solve", d, p, theta)
+    _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
+    return _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx,
+                                 self_idx, nbr_mask, alphas, betas,
+                                 interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -1,0 +1,206 @@
+"""Chebyshev acceleration: closed-form optimality pin and fused-kernel
+parity.
+
+The β₁ = ½(c/d)² special case is what makes the two-term recurrence THE
+Chebyshev method: each iterate's error must equal the degree-k Chebyshev
+error polynomial σ_k(A) = T_k((d−A)/c)/T_k(d/c) applied to e₀, which a
+dense eigendecomposition evaluates in closed form.  The pin here fails
+for the pre-fix generic-β₁ table (¼(c/d)²) from k = 2 on, and
+`rounds_to_tolerance` must report strictly fewer Chebyshev rounds than
+the pre-fix recurrence on the bench problem.  The fused single-dispatch
+kernel path (`chebyshev_solve_packed(backend="pallas_fused")`) is pinned
+against the shared host scan at rtol 1e-9 and must be chunk-invariant
+bit for bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from conftest import cached_fmaps, cached_split
+from repro.core import DeKRRConfig, DeKRRSolver, circulant
+from repro.core.acceleration import (chebyshev_coefficients,
+                                     chebyshev_scan, chebyshev_solve,
+                                     chebyshev_solve_packed,
+                                     power_iteration_mu_max,
+                                     power_iteration_mu_min,
+                                     rounds_to_tolerance)
+from repro.dist import pack_problem, solve_batched, step_batched
+
+TOL = dict(rtol=1e-9, atol=1e-12)
+MU_MAX, MU_MIN = 0.9, -0.05
+
+
+def _dense_problem(n=24, seed=0):
+    """F(θ) = Mθ + b with a known eigendecomposition M = QΛQᵀ,
+    spec(M) ⊂ [−0.05, 0.9] (a strictly sub-unit but sign-indefinite
+    spectrum, like the DeKRR fixed-point map)."""
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    eigs = np.linspace(MU_MIN, MU_MAX, n)
+    m = q @ np.diag(eigs) @ q.T
+    b = rng.standard_normal(n)
+    theta_star = np.linalg.solve(np.eye(n) - m, b)
+    return q, eigs, jnp.asarray(m), jnp.asarray(b), theta_star
+
+
+def _cheb_t(k, x):
+    """T_k(x) elementwise by the scalar recurrence."""
+    t_prev, t = np.ones_like(x), np.asarray(x, np.float64)
+    if k == 0:
+        return t_prev
+    for _ in range(k - 1):
+        t_prev, t = t, 2.0 * x * t - t_prev
+    return t
+
+
+def _closed_form_iterate(q, eigs, theta_star, k):
+    """θ_k = θ* + Q σ_k(Λ_A) Qᵀ (θ₀ − θ*) for θ₀ = 0, A = I − M."""
+    a_lo, b_hi = 1.0 - MU_MAX, 1.0 - MU_MIN
+    d0, c0 = (a_lo + b_hi) / 2.0, (b_hi - a_lo) / 2.0
+    lam_a = 1.0 - eigs
+    sigma = _cheb_t(k, (d0 - lam_a) / c0) / _cheb_t(
+        k, np.full_like(lam_a, d0 / c0))
+    return theta_star + q @ (sigma * (q.T @ (-theta_star)))
+
+
+def _buggy_coefficients(mu_max, mu_min, num_iters):
+    """The pre-fix table: generic β_k = (c·α_{k−1}/2)² applied at k = 1
+    too, which evaluates to ¼(c/d)² instead of ½(c/d)²."""
+    a_lo, b_hi = 1.0 - mu_max, 1.0 - mu_min
+    d0, c0 = (a_lo + b_hi) / 2.0, (b_hi - a_lo) / 2.0
+    alphas = np.empty(num_iters, np.float64)
+    betas = np.empty(num_iters, np.float64)
+    alpha_prev = None
+    for k in range(num_iters):
+        if k == 0:
+            alpha, beta = 1.0 / d0, 0.0
+        else:
+            beta = (c0 * alpha_prev / 2.0) ** 2
+            alpha = 1.0 / (d0 - beta / alpha_prev)
+        alphas[k] = alpha
+        betas[k] = beta
+        alpha_prev = alpha
+    return alphas, betas
+
+
+# --------------------------------------------------------------------------
+# Closed-form pin: the fixed recurrence IS Chebyshev; the buggy one is not
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [1, 2, 3, 5, 8, 12])
+def test_chebyshev_matches_dense_closed_form(k):
+    q, eigs, m, b, theta_star = _dense_problem()
+    theta = chebyshev_solve(lambda th: m @ th + b, jnp.zeros_like(b),
+                            MU_MAX, MU_MIN, num_iters=k)
+    expect = _closed_form_iterate(q, eigs, theta_star, k)
+    np.testing.assert_allclose(np.asarray(theta), expect, **TOL)
+
+
+def test_buggy_beta1_breaks_closed_form():
+    # teeth for the pin above: ¼(c/d)² at k = 1 matches T₁ trivially but
+    # diverges from the optimal polynomial from k = 2 on
+    q, eigs, m, b, theta_star = _dense_problem()
+    for k, should_match in ((1, True), (2, False), (5, False)):
+        al, be = _buggy_coefficients(MU_MAX, MU_MIN, k)
+        theta, _, _ = chebyshev_scan(lambda th: m @ th + b,
+                                     jnp.zeros_like(b), jnp.asarray(al),
+                                     jnp.asarray(be))
+        expect = _closed_form_iterate(q, eigs, theta_star, k)
+        close = np.allclose(np.asarray(theta), expect, **TOL)
+        assert close == should_match, f"k={k}"
+
+
+def test_beta1_coefficient_value():
+    al, be = chebyshev_coefficients(0.9, 0.0, 3)
+    a_lo, b_hi = 1.0 - 0.9, 1.0
+    d0, c0 = (a_lo + b_hi) / 2.0, (b_hi - a_lo) / 2.0
+    assert be[0] == 0.0 and al[0] == 1.0 / d0
+    np.testing.assert_allclose(be[1], 0.5 * (c0 / d0) ** 2, rtol=1e-15)
+    np.testing.assert_allclose(be[2], (c0 * al[1] / 2.0) ** 2, rtol=1e-15)
+
+
+# --------------------------------------------------------------------------
+# Packed-problem paths: fewer rounds than pre-fix, backend/chunk parity
+# --------------------------------------------------------------------------
+def _packed_problem():
+    topo, dims = circulant(6, (1, 2)), [8, 10, 12, 8, 10, 12]
+    j = topo.num_nodes
+    _, train, _ = cached_split("air_quality", j, subsample=300, seed=0)
+    fmaps = cached_fmaps("air_quality", j, tuple(dims), subsample=300,
+                         seed=0)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(topo, fmaps, train,
+                         DeKRRConfig(lam=1e-6, c_nei=0.02 * n))
+    return pack_problem(solver)
+
+
+def test_fixed_recurrence_needs_strictly_fewer_rounds():
+    packed = _packed_problem()
+    hi = power_iteration_mu_max(packed, iters=15)
+    lo = power_iteration_mu_min(packed, hi, iters=15)
+    theta_star = solve_batched(packed, 3000)
+    tol, max_rounds = 1e-5, 800
+    plain, cheb_fixed = rounds_to_tolerance(
+        packed, theta_star, tol=tol, max_rounds=max_rounds, mu_max=hi,
+        mu_min=lo)
+    assert cheb_fixed < plain < max_rounds
+
+    # emulate the pre-fix code exactly: Δ-form body driven by the
+    # generic-β₁ table
+    al, be = _buggy_coefficients(hi, lo, max_rounds)
+
+    def body(carry, ab):
+        theta, delta = carry
+        alpha, beta = ab
+        resid = step_batched(packed, theta) - theta
+        delta = alpha * resid + beta * delta
+        theta = theta + delta
+        return (theta, delta), jnp.linalg.norm(theta - theta_star)
+
+    z = jnp.zeros_like(packed.d)
+    _, errs = lax.scan(body, (z, z), (jnp.asarray(al), jnp.asarray(be)))
+    hit = np.asarray(errs) <= tol * float(jnp.linalg.norm(theta_star))
+    cheb_old = int(np.argmax(hit)) + 1 if hit.any() else max_rounds
+    assert cheb_fixed < cheb_old
+
+
+def test_fused_chebyshev_matches_host_scan():
+    packed = _packed_problem()
+    hi = power_iteration_mu_max(packed, iters=15)
+    lo = power_iteration_mu_min(packed, hi, iters=15)
+    th_xla = chebyshev_solve_packed(packed, hi, lo, num_iters=30)
+    th_pal = chebyshev_solve_packed(packed, hi, lo, num_iters=30,
+                                    backend="pallas")
+    th_fused = chebyshev_solve_packed(packed, hi, lo, num_iters=30,
+                                      backend="pallas_fused")
+    np.testing.assert_allclose(np.asarray(th_pal), np.asarray(th_xla),
+                               **TOL)
+    np.testing.assert_allclose(np.asarray(th_fused), np.asarray(th_xla),
+                               **TOL)
+
+
+def test_fused_chebyshev_chunk_invariant_bitwise():
+    packed = _packed_problem()
+    hi = power_iteration_mu_max(packed, iters=15)
+    lo = power_iteration_mu_min(packed, hi, iters=15)
+    fused = chebyshev_solve_packed(packed, hi, lo, num_iters=30,
+                                   backend="pallas_fused")
+    for chunk in (1, 7, 30, 64):
+        chunked = chebyshev_solve_packed(packed, hi, lo, num_iters=30,
+                                         backend="pallas_fused",
+                                         chunk_rounds=chunk)
+        np.testing.assert_array_equal(np.asarray(chunked),
+                                      np.asarray(fused),
+                                      err_msg=f"chunk_rounds={chunk}")
+
+
+def test_chebyshev_solve_packed_rejects_bad_arguments():
+    packed = _packed_problem()
+    with pytest.raises(ValueError, match="backend"):
+        chebyshev_solve_packed(packed, 0.9, backend="cuda_fused")
+    with pytest.raises(ValueError, match="chunk_rounds"):
+        chebyshev_solve_packed(packed, 0.9, chunk_rounds=0)
+    zero = chebyshev_solve_packed(packed, 0.9, num_iters=0,
+                                  backend="pallas_fused")
+    assert not np.asarray(zero).any()

@@ -19,7 +19,8 @@ from jax import lax
 from conftest import REPO_ROOT, subprocess_env
 
 from repro.analysis import (VMEM_BUDGET_BYTES, VmemBudgetError,
-                            check_index_table, estimate_dekrr_solve,
+                            check_index_table, estimate_dekrr_async_solve,
+                            estimate_dekrr_cheb_solve, estimate_dekrr_solve,
                             estimate_dekrr_step, estimate_flash_decode,
                             estimate_rff_gram, render_json, render_report)
 from repro.analysis import conventions
@@ -44,6 +45,14 @@ def test_vmem_docstring_anchors():
     # flash_decode: "G ≤ 8, dh = 128, block_s = 512: < 1 MB"
     fd = estimate_flash_decode(g_heads=8, head_dim=128, block_s=512)
     assert fd.bytes == 544864 and fd.bytes < 2**20
+    # dekrr_async_solve: two θ tables + sent + working/init buffer tables
+    av = estimate_dekrr_async_solve(t_rows=128, b_rows=512, d_feat=512,
+                                    k_slots=4)
+    assert av.bytes == 15996928 and av.fits
+    # dekrr_cheb_solve: two θ tables + direction table
+    cv = estimate_dekrr_cheb_solve(t_rows=256, j_rows=256, d_feat=512,
+                                   k_slots=4)
+    assert cv.bytes == 15210496 and cv.fits
 
 
 def test_vmem_monotone_in_shape():
@@ -218,13 +227,15 @@ def test_live_jaxpr_lint_clean():
     assert findings == [], render_report(findings)
 
 
-@pytest.mark.parametrize("backend,sync_n,async_n", [
-    ("xla", 0, 0), ("pallas", 5, 5), ("pallas_fused", 1, 5)])
-def test_dispatch_count_contract(backend, sync_n, async_n):
+@pytest.mark.parametrize("backend,sync_n,async_n,cheb_n", [
+    ("xla", 0, 0, 0), ("pallas", 5, 5, 5), ("pallas_fused", 1, 1, 1)])
+def test_dispatch_count_contract(backend, sync_n, async_n, cheb_n):
     eps = _entry_point_map()
-    for name, want in (("solve_batched", sync_n),
-                       ("async_solve_batched", async_n)):
-        ep = eps[f"{name}[backend={backend},tol=0]"]
+    for label, want in (
+            (f"solve_batched[backend={backend},tol=0]", sync_n),
+            (f"async_solve_batched[backend={backend},tol=0]", async_n),
+            (f"chebyshev_solve_packed[backend={backend}]", cheb_n)):
+        ep = eps[label]
         assert ep.expected_dispatches == want
         count, exact = JL.count_pallas_dispatches(ep.trace())
         assert exact and count == want

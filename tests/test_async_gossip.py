@@ -173,7 +173,8 @@ def test_p1_uncensored_is_bitwise_synchronous(topo_name, backend):
     async runtime must reproduce `solve_batched` of the SAME backend
     bit-for-bit — any jnp.where, buffer plumbing or mask arithmetic that
     perturbs a single ulp fails this. (backend="pallas_fused" pins the
-    async per-round fallback against the sync multi-round fused kernel.)
+    fused multi-round async chain against the sync multi-round fused
+    kernel — same dot_general sequence, one dispatch each.)
     """
     _, packed, _ = _problem(topo_name)
     sync = solve_batched(packed, ROUNDS, backend=backend)
@@ -182,6 +183,55 @@ def test_p1_uncensored_is_bitwise_synchronous(topo_name, backend):
                                        backend=backend)
     np.testing.assert_array_equal(np.asarray(sync),
                                   np.asarray(asynchronous))
+
+
+# --------------------------------------------------------------------------
+# Fused async chain: bit-parity with the per-round kernel, chunk-invariant
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("gossip", ["bernoulli", "edge"])
+@pytest.mark.parametrize("censored", [False, True])
+def test_fused_async_chain_conformance(gossip, censored):
+    """`backend="pallas_fused"` runs the whole schedule (masks, censor
+    thresholds, delivery parity) inside one kernel chain. It must be
+    BIT-identical to the per-round masked kernel (`backend="pallas"`) —
+    both execute the same dot_general sequence at precision=HIGHEST —
+    allclose to the XLA path, and invariant to chunk_rounds ∈
+    {1, 7, 64} bit for bit."""
+    _, packed, dims = _problem("circulant")
+    config = AsyncGossipConfig(prob=0.6, gossip=gossip,
+                               **(CENSOR if censored else {}))
+    th_fused = async_solve_batched(packed, ROUNDS, KEY, config=config,
+                                   backend="pallas_fused")
+    th_pal = async_solve_batched(packed, ROUNDS, KEY, config=config,
+                                 backend="pallas")
+    th_xla = async_solve_batched(packed, ROUNDS, KEY, config=config)
+    np.testing.assert_array_equal(np.asarray(th_fused), np.asarray(th_pal))
+    np.testing.assert_allclose(np.asarray(th_fused), np.asarray(th_xla),
+                               **TOL)
+    for chunk in (1, 7, 64):
+        chunked = async_solve_batched(packed, ROUNDS, KEY, config=config,
+                                      backend="pallas_fused",
+                                      chunk_rounds=chunk)
+        np.testing.assert_array_equal(np.asarray(chunked),
+                                      np.asarray(th_fused),
+                                      err_msg=f"chunk_rounds={chunk}")
+
+
+def test_fused_async_stats_fall_back_to_per_round():
+    """return_stats=True keeps the per-round accounting path even under
+    backend="pallas_fused" — its θ and wire counts must match XLA's."""
+    _, packed, _ = _problem("circulant")
+    config = AsyncGossipConfig(prob=0.6, **CENSOR)
+    th_fused, stats_fused = async_solve_batched(
+        packed, ROUNDS, KEY, config=config, backend="pallas_fused",
+        return_stats=True)
+    th_xla, stats_xla = async_solve_batched(
+        packed, ROUNDS, KEY, config=config, return_stats=True)
+    np.testing.assert_allclose(np.asarray(th_fused), np.asarray(th_xla),
+                               **TOL)
+    assert int(stats_fused.broadcasts) == int(stats_xla.broadcasts)
+    assert int(stats_fused.deliveries) == int(stats_xla.deliveries)
+    assert int(stats_fused.rounds) == int(stats_xla.rounds) == ROUNDS
 
 
 # --------------------------------------------------------------------------
