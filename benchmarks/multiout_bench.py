@@ -1,0 +1,174 @@
+"""Multi-output DeKRR: fused Dy-batched solve vs a per-output scalar loop,
+emitting ``BENCH_multiout.json`` for the perf trajectory.
+
+The Eq. 17 auxiliaries are label-free, so a Dy-output problem CAN be
+solved as Dy independent scalar solves — that loop is the baseline this
+bench prices. The fused path packs labels/θ as [J, D_max, Dy] and runs
+ONE solve whose kernels carry Dy as extra flattened θ-table row blocks,
+so the G/S/P operand traffic (the dominant term: (2+K)·D² per node per
+round) is paid once instead of Dy times, and the dispatch count is
+UNCHANGED — the per-output loop pays Dy× the dispatches.
+
+Per backend × Dy the bench records:
+
+  * fused_us / loop_us — wall time of the Dy-batched solve vs Dy scalar
+    solves of the column-sliced problems (identical data; the two agree
+    at rtol 1e-9 by tests/test_multioutput.py, asserted here too);
+  * dispatches_fused / dispatches_loop — static pallas_call counts of the
+    traced programs (the same `count_pallas_dispatches` counter the J002
+    lint pins): fused keeps the scalar contract {xla: 0, pallas: R,
+    pallas_fused: 1} at every Dy, the loop multiplies it by Dy.
+
+On CPU the Pallas columns run in interpret mode — Python-evaluated kernel
+bodies whose wall time means nothing — so they are labeled placeholders
+(`*_us_placeholder`); the dispatch counts and the XLA timings are real
+everywhere. Run on TPU to fill the kernel timing columns.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import DeKRRConfig, DeKRRSolver, NodeData, sample_rff
+from repro.dist import pack_problem, solve_batched
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_multiout.json")
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
+
+
+def _build_packs(dy: int, j_nodes: int, d_feat: int, n_per_node: int):
+    """(fused Dy-output pack, per-output scalar packs) on identical data.
+
+    Synthetic random draws: parity is exact algebra and the bench prices
+    operand traffic, so dataset realism buys nothing here.
+    """
+    from repro.core import circulant
+
+    topo = circulant(j_nodes, (1, 2))
+    rng = np.random.default_rng(0)
+    fmaps = [sample_rff(jax.random.PRNGKey(j), 4, d_feat, C.SIGMA)
+             for j in range(j_nodes)]
+    xs = [rng.normal(size=(4, n_per_node)) for _ in range(j_nodes)]
+    ys = [rng.normal(size=(n_per_node, dy)) for _ in range(j_nodes)]
+
+    def pack(cols):
+        data = [NodeData(x=jnp.asarray(x),
+                         y=jnp.asarray(y if cols is None else y[:, cols]))
+                for x, y in zip(xs, ys)]
+        solver = DeKRRSolver(topo, fmaps, data,
+                             DeKRRConfig(lam=0.1, c_nei=1.0),
+                             build_aux=False)
+        return pack_problem(solver)
+
+    return pack(None), [pack(o) for o in range(dy)]
+
+
+def _dispatch_counts(rounds: int, dy: int) -> dict:
+    """Static pallas_call counts (the J002 counter) of the fused Dy solve
+    vs the per-output loop, traced on the synthetic packed problem."""
+    from repro.analysis import jaxpr_lint as JL
+
+    fused_pk = JL.synthetic_packed(dy=dy)
+    scalar_pk = JL.synthetic_packed()
+    out = {}
+    for b in BACKENDS:
+        fused, fused_exact = JL.count_pallas_dispatches(jax.make_jaxpr(
+            lambda pk, b=b: solve_batched(pk, rounds,
+                                          backend=b))(fused_pk))
+        one, one_exact = JL.count_pallas_dispatches(jax.make_jaxpr(
+            lambda pk, b=b: solve_batched(pk, rounds,
+                                          backend=b))(scalar_pk))
+        assert fused_exact and one_exact
+        out[b] = {"fused": fused, "loop": dy * one}
+    return out
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())                 # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(fast: bool = False) -> None:
+    rounds = 10 if fast else 30
+    j_nodes, d_feat = (6, 16) if fast else (10, 32)
+    n_per_node = 40 if fast else 120
+    dys = (1, 4) if fast else (1, 4, 8)
+    reps = 1 if fast else 3
+    interpret_mode = jax.default_backend() != "tpu"
+
+    results = []
+    for dy in dys:
+        fused_pk, scalar_pks = _build_packs(dy, j_nodes, d_feat,
+                                            n_per_node)
+        dispatches = _dispatch_counts(rounds, dy)
+        row = {"dy": dy, "backends": {}}
+        for b in BACKENDS:
+            th_fused = solve_batched(fused_pk, rounds, backend=b)
+            th_loop = jnp.stack(
+                [solve_batched(pk, rounds, backend=b)
+                 for pk in scalar_pks], axis=2)
+            np.testing.assert_allclose(np.asarray(th_fused),
+                                       np.asarray(th_loop),
+                                       rtol=1e-9, atol=1e-12)
+
+            fused_us = _time(
+                lambda b=b: solve_batched(fused_pk, rounds, backend=b),
+                reps)
+            loop_us = _time(
+                lambda b=b: [solve_batched(pk, rounds, backend=b)
+                             for pk in scalar_pks], reps)
+            placeholder = interpret_mode and b != "xla"
+            key = "us_placeholder" if placeholder else "us"
+            row["backends"][b] = {
+                f"fused_{key}": round(fused_us, 1),
+                f"loop_{key}": round(loop_us, 1),
+                "speedup": round(loop_us / max(fused_us, 1e-9), 2),
+                "dispatches_fused": dispatches[b]["fused"],
+                "dispatches_loop": dispatches[b]["loop"],
+            }
+            C.csv_row(
+                f"multiout/dy{dy}/{b}", fused_us,
+                f"loop_us={loop_us:.1f};"
+                f"dispatches={dispatches[b]['fused']}"
+                f"vs{dispatches[b]['loop']}"
+                f"{';interpret-placeholder' if placeholder else ''}")
+        results.append(row)
+
+    payload = {
+        "benchmark": ("multi-output DeKRR: fused Dy-batched solve vs "
+                      "per-output scalar loop (identical data, rtol-1e-9 "
+                      "parity asserted per row)"),
+        "backend": jax.default_backend(),
+        "interpret_mode": interpret_mode,
+        "j_nodes": j_nodes,
+        "d_feat": d_feat,
+        "rounds": rounds,
+        "note": ("dispatch counts are static pallas_call counts of the "
+                 "traced programs (the J002 counter) — the fused path "
+                 "keeps the scalar round_dispatches contract at every Dy, "
+                 "the loop pays Dy× it. *_us_placeholder columns are "
+                 "interpret-mode (CPU) wall times: kernel dispatch "
+                 "semantics, meaningless absolute numbers — run on TPU "
+                 "for real kernel timings."),
+        "results": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"multiout/json,0.0,wrote={os.path.relpath(OUT_PATH, REPO_ROOT)}")
+
+
+if __name__ == "__main__":
+    run(fast=("--fast" in sys.argv) or ("--smoke" in sys.argv))

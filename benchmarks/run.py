@@ -23,7 +23,7 @@ def main() -> None:
 
     from benchmarks import (ablation_ddrf, accel_bench, analysis_bench,
                             async_gossip_bench, chebyshev_bench, comm_costs,
-                            convergence_curve, kernel_bench,
+                            convergence_curve, kernel_bench, multiout_bench,
                             paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
                             paper_fig3_imbalanced, paper_fig4_pernode,
                             paper_table2, roofline, solve_bench,
@@ -44,6 +44,7 @@ def main() -> None:
         "step": step_kernel_bench.run,
         "solve": solve_bench.run,
         "async": async_gossip_bench.run,
+        "multiout": multiout_bench.run,
         "stream": stream_bench.run,
         "roofline": roofline.run,
         "analysis": analysis_bench.run,

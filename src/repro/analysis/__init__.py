@@ -60,6 +60,7 @@ from repro.analysis.vmem import (VMEM_BUDGET_BYTES,  # noqa: F401
                                  estimate_dekrr_cheb_solve,
                                  estimate_dekrr_solve, estimate_dekrr_step,
                                  estimate_flash_decode,
+                                 estimate_rff_features,
                                  estimate_rff_gram)
 
 __all__ = [
@@ -68,5 +69,6 @@ __all__ = [
     "check_index_table", "effective_itemsize", "estimate_blocks",
     "estimate_dekrr_step", "estimate_dekrr_solve",
     "estimate_dekrr_async_solve", "estimate_dekrr_cheb_solve",
-    "estimate_rff_gram", "estimate_flash_decode",
+    "estimate_rff_gram", "estimate_rff_features",
+    "estimate_flash_decode",
 ]

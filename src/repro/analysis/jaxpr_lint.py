@@ -452,10 +452,11 @@ class EntryPoint:
 
 
 def synthetic_packed(j_nodes: int = SPMD_NODES, d_feat: int = 8,
-                     dtype=np.float64):
+                     dtype=np.float64, dy: int = 1):
     """Tiny circulant ring `PackedProblem` built from random arrays —
     shapes and slot layout are real, the numerics are irrelevant (entry
-    points are traced, never executed)."""
+    points are traced, never executed). ``dy > 1`` builds the
+    multi-output layout (`d` carries a trailing `[.., Dy]` axis)."""
     from repro.dist.dekrr_spmd import PackedProblem, _circulant_slot_table
 
     rng = np.random.default_rng(0)
@@ -463,10 +464,11 @@ def synthetic_packed(j_nodes: int = SPMD_NODES, d_feat: int = 8,
     nbr_idx = _circulant_slot_table(offsets, j_nodes)
     k_slots = nbr_idx.shape[1]
     shp = dict(dtype=dtype)
+    d_shape = (j_nodes, d_feat) if dy == 1 else (j_nodes, d_feat, dy)
     return PackedProblem(
         g=jnp.asarray(rng.standard_normal((j_nodes, d_feat, d_feat)),
                       **shp),
-        d=jnp.asarray(rng.standard_normal((j_nodes, d_feat)), **shp),
+        d=jnp.asarray(rng.standard_normal(d_shape), **shp),
         s=jnp.asarray(rng.standard_normal((j_nodes, d_feat, d_feat)),
                       **shp),
         p=jnp.asarray(
@@ -506,12 +508,15 @@ def _tiny_solver():
 def batched_entry_points() -> list[EntryPoint]:
     """Single-host entry points: `solve_batched`, `async_solve_batched`,
     `chebyshev_solve_packed` (every backend × {tol=0, tol>0} where
-    applicable), the ops wrappers, streaming ingest."""
+    applicable, at Dy=1 and the multi-output Dy=3 layout — the Dy axis
+    folds into the kernel row dimension, so the dispatch pins are
+    identical), the ops wrappers, streaming ingest."""
     from repro.core.acceleration import chebyshev_solve_packed
     from repro.dist.async_gossip import async_solve_batched
     from repro.dist.dekrr_spmd import _BACKENDS, solve_batched
 
     packed = synthetic_packed()
+    packed_dy = synthetic_packed(dy=3)
     key = jax.random.PRNGKey(0)
     sync_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": 1}
     async_expect = {"xla": 0, "pallas": ROUNDS, "pallas_fused": 1}
@@ -529,6 +534,12 @@ def batched_entry_points() -> list[EntryPoint]:
                 lambda pk: solve_batched(pk, ROUNDS, backend=b,
                                          tol=1e-3))(packed)))
         eps.append(EntryPoint(
+            f"solve_batched[backend={b},tol=0,dy=3]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: solve_batched(pk, ROUNDS,
+                                         backend=b))(packed_dy),
+            sync_expect[b]))
+        eps.append(EntryPoint(
             f"async_solve_batched[backend={b},tol=0]",
             lambda b=b: jax.make_jaxpr(
                 lambda pk, k: async_solve_batched(pk, ROUNDS, k,
@@ -540,10 +551,23 @@ def batched_entry_points() -> list[EntryPoint]:
                 lambda pk, k: async_solve_batched(
                     pk, ROUNDS, k, backend=b, tol=1e-3))(packed, key)))
         eps.append(EntryPoint(
+            f"async_solve_batched[backend={b},tol=0,dy=3]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk, k: async_solve_batched(
+                    pk, ROUNDS, k, backend=b))(packed_dy, key),
+            async_expect[b]))
+        eps.append(EntryPoint(
             f"chebyshev_solve_packed[backend={b}]",
             lambda b=b: jax.make_jaxpr(
                 lambda pk: chebyshev_solve_packed(
                     pk, 0.9, 0.0, num_iters=ROUNDS, backend=b))(packed),
+            cheb_expect[b]))
+        eps.append(EntryPoint(
+            f"chebyshev_solve_packed[backend={b},dy=3]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: chebyshev_solve_packed(
+                    pk, 0.9, 0.0, num_iters=ROUNDS,
+                    backend=b))(packed_dy),
             cheb_expect[b]))
     eps.append(EntryPoint("ops.dekrr_step", _trace_ops_step, 1))
     eps.append(EntryPoint("ops.dekrr_solve", _trace_ops_solve, 1))

@@ -16,29 +16,35 @@ reference it:
 
   kernel        formula (elements)                      paper anchor
   ------------  --------------------------------------  -------------------
-  dekrr_step    T·D + (2+K)·D² + 3·D                    D=512, K=4 → ~6.3 MB
-  dekrr_solve   2·T·D + 2·(2+K)·D² + 3·D                T=256, D=512, K=4
+  dekrr_step    T·D + (2+K)·D² + 3·D·dy                 D=512, K=4 → ~6.3 MB
+  dekrr_solve   2·T·D + 2·(2+K)·D² + 3·D·dy             T=256, D=512, K=4
                                                         → ~13.7 MB (ceiling)
-  dekrr_async_  5·T·D + 2·B·D + 2·(2+K)·D² + 3·D        T=128, B=512, D=512,
+  dekrr_async_  5·T·D + 2·B·D + 2·(2+K)·D² + 3·D·dy     T=128, B=512, D=512,
   solve                                                 K=4 → ~15.3 MB
                                                         (J=128 ceiling)
-  dekrr_cheb_   3·T·D + 2·J'·D + 2·(2+K)·D² + 3·D       T=J'=256, D=512,
+  dekrr_cheb_   3·T·D + 2·J'·D + 2·(2+K)·D² + 3·D·dy    T=J'=256, D=512,
   solve                                                 K=4 → ~14.5 MB
   rff_gram      D·d + d·Bn + D·Bn + D² (+ 2·D zy/bias)  D=512, d=160,
                                                         Bn=1024 → < 5 MB
+  rff_features  Bd·d + Bd + d·Bn + Bd·Bn                Bd=256, d=160,
+                                                        Bn=512 → < 1 MB
   flash_decode  G·dh + 2·Bs·dh + G·Bs (+ 3·G m/l state) G=8, dh=128, Bs=512
                                                         → < 1 MB
 
 Terms: T = θ-table rows (padded to 8 sublanes), D = padded feature dim
 (lane multiples of 128), K = padded neighbor-slot count (≥ 1), B =
 staleness-buffer rows (J·K padded to 8), J' = Δ-table rows (J padded to
-8), d = input dim, Bn/Bs = streaming block sizes, G = GQA query-group
-size, dh = head dim. dekrr_step holds one θ table and single-buffered
-blocks; dekrr_solve holds two θ scratch tables (round-parity Jacobi) and
-double-buffered block streams, hence the factor-2 terms. The async chain
-additionally holds the θ0/sent0/buf0 inputs plus sent/buffer scratch
-(5·T·D + 2·B·D total θ-shaped state); the Chebyshev chain holds the θ0
-input plus the Δ0 input and Δ scratch (3·T·D + 2·J'·D).
+8), d = input dim, Bd/Bn/Bs = streaming block sizes, G = GQA query-group
+size, dh = head dim, dy = output width Dy (1 for scalar targets).
+dekrr_step holds one θ table and single-buffered blocks; dekrr_solve
+holds two θ scratch tables (round-parity Jacobi) and double-buffered
+block streams, hence the factor-2 terms. The async chain additionally
+holds the θ0/sent0/buf0 inputs plus sent/buffer scratch (5·T·D + 2·B·D
+total θ-shaped state); the Chebyshev chain holds the θ0 input plus the
+Δ0 input and Δ scratch (3·T·D + 2·J'·D). Multi-output callers fold Dy
+into the flattened T/B/J' row counts (the kernels' [rows·Dy, D] layout)
+and pass ``dy`` to scale the per-step d/acc/out vector blocks; at dy = 1
+every formula is byte-identical to the scalar-target one.
 
 Itemsize: estimates use ``effective_itemsize`` = min(itemsize, 4). TPUs
 have no f64 — x64-mode callers run the kernels in interpret mode on CPU
@@ -99,70 +105,76 @@ class VmemEstimate:
 
 
 def estimate_dekrr_step(*, t_rows: int, d_feat: int, k_slots: int,
-                        itemsize: int = 4,
+                        itemsize: int = 4, dy: int = 1,
                         budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
-    """Single-round kernel: θ table + G/S/P blocks + d/acc/out vectors."""
+    """Single-round kernel: θ table + G/S/P blocks + d/acc/out vectors.
+    Multi-output callers pass the flattened T (table rows × Dy) and dy;
+    dy scales only the per-step [dy, D] vector blocks."""
     size = effective_itemsize(itemsize)
-    elements = t_rows * d_feat + (2 + k_slots) * d_feat**2 + 3 * d_feat
+    elements = (t_rows * d_feat + (2 + k_slots) * d_feat**2
+                + 3 * d_feat * dy)
     return VmemEstimate(
         kernel="dekrr_step",
-        formula="T*D + (2+K)*D^2 + 3*D",
+        formula="T*D + (2+K)*D^2 + 3*D*dy",
         detail=(f"{t_rows}*{d_feat} + (2+{k_slots})*{d_feat}^2 + "
-                f"3*{d_feat} elems @ {size} B"),
+                f"3*{d_feat}*{dy} elems @ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
 
 def estimate_dekrr_solve(*, t_rows: int, d_feat: int, k_slots: int,
-                         itemsize: int = 4,
+                         itemsize: int = 4, dy: int = 1,
                          budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
     """Fused multi-round kernel: two parity θ scratch tables +
-    double-buffered G/S/P block streams + d/acc/out vectors."""
+    double-buffered G/S/P block streams + d/acc/out vectors. T is the
+    flattened (× Dy) table row count for multi-output callers."""
     size = effective_itemsize(itemsize)
     elements = (2 * t_rows * d_feat + 2 * (2 + k_slots) * d_feat**2
-                + 3 * d_feat)
+                + 3 * d_feat * dy)
     return VmemEstimate(
         kernel="dekrr_solve",
-        formula="2*T*D + 2*(2+K)*D^2 + 3*D",
+        formula="2*T*D + 2*(2+K)*D^2 + 3*D*dy",
         detail=(f"2*{t_rows}*{d_feat} + 2*(2+{k_slots})*{d_feat}^2 + "
-                f"3*{d_feat} elems @ {size} B"),
+                f"3*{d_feat}*{dy} elems @ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
 
 def estimate_dekrr_async_solve(*, t_rows: int, b_rows: int, d_feat: int,
-                               k_slots: int, itemsize: int = 4,
+                               k_slots: int, itemsize: int = 4, dy: int = 1,
                                budget: int = VMEM_BUDGET_BYTES
                                ) -> VmemEstimate:
     """Fused async-gossip chain: two parity θ tables + sent table + the
     θ0/sent0/buf0 inputs + staleness-buffer scratch + double-buffered
     G/S/P streams + d/acc/out vectors (SMEM flag vectors excluded — they
-    do not live in VMEM)."""
+    do not live in VMEM). T/B are flattened (× Dy) row counts for
+    multi-output callers."""
     size = effective_itemsize(itemsize)
     elements = (5 * t_rows * d_feat + 2 * b_rows * d_feat
-                + 2 * (2 + k_slots) * d_feat**2 + 3 * d_feat)
+                + 2 * (2 + k_slots) * d_feat**2 + 3 * d_feat * dy)
     return VmemEstimate(
         kernel="dekrr_async_solve",
-        formula="5*T*D + 2*B*D + 2*(2+K)*D^2 + 3*D",
+        formula="5*T*D + 2*B*D + 2*(2+K)*D^2 + 3*D*dy",
         detail=(f"5*{t_rows}*{d_feat} + 2*{b_rows}*{d_feat} + "
-                f"2*(2+{k_slots})*{d_feat}^2 + 3*{d_feat} elems "
+                f"2*(2+{k_slots})*{d_feat}^2 + 3*{d_feat}*{dy} elems "
                 f"@ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
 
 def estimate_dekrr_cheb_solve(*, t_rows: int, j_rows: int, d_feat: int,
-                              k_slots: int, itemsize: int = 4,
+                              k_slots: int, itemsize: int = 4, dy: int = 1,
                               budget: int = VMEM_BUDGET_BYTES
                               ) -> VmemEstimate:
     """Fused Chebyshev chain: two parity θ tables + the θ0 input + the
     Δ0 input and Δ scratch table + double-buffered G/S/P streams +
-    d/acc/out vectors (the [R] α/β schedule prefetches to SMEM)."""
+    d/acc/out vectors (the [R] α/β schedule prefetches to SMEM). T/J'
+    are flattened (× Dy) row counts for multi-output callers."""
     size = effective_itemsize(itemsize)
     elements = (3 * t_rows * d_feat + 2 * j_rows * d_feat
-                + 2 * (2 + k_slots) * d_feat**2 + 3 * d_feat)
+                + 2 * (2 + k_slots) * d_feat**2 + 3 * d_feat * dy)
     return VmemEstimate(
         kernel="dekrr_cheb_solve",
-        formula="3*T*D + 2*J'*D + 2*(2+K)*D^2 + 3*D",
+        formula="3*T*D + 2*J'*D + 2*(2+K)*D^2 + 3*D*dy",
         detail=(f"3*{t_rows}*{d_feat} + 2*{j_rows}*{d_feat} + "
-                f"2*(2+{k_slots})*{d_feat}^2 + 3*{d_feat} elems "
+                f"2*(2+{k_slots})*{d_feat}^2 + 3*{d_feat}*{dy} elems "
                 f"@ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
@@ -181,6 +193,23 @@ def estimate_rff_gram(*, d_feat: int, d_in: int, block_n: int,
         detail=(f"{d_feat}*{d_in} + {d_in}*{block_n} + "
                 f"{d_feat}*{block_n} + {d_feat}^2 + 2*{d_feat} elems "
                 f"@ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_rff_features(*, block_d: int, d_in: int, block_n: int,
+                          itemsize: int = 4,
+                          budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Tiled featurize Z = scale·cos(Ω X + b) (the serving path's
+    `ops.rff_features`): per grid step an Ω tile [Bd, d] + bias column
+    [Bd, 1] + X tile [d, Bn] + Z output tile [Bd, Bn]."""
+    size = effective_itemsize(itemsize)
+    elements = (block_d * d_in + block_d + d_in * block_n
+                + block_d * block_n)
+    return VmemEstimate(
+        kernel="rff_features",
+        formula="Bd*d + Bd + d*Bn + Bd*Bn",
+        detail=(f"{block_d}*{d_in} + {block_d} + {d_in}*{block_n} + "
+                f"{block_d}*{block_n} elems @ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
 

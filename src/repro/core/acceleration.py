@@ -62,6 +62,13 @@ def safe_mu(mu_est: float, margin: float = 0.02) -> float:
     return min(mu_est * (1.0 + margin) + 0.002, 0.99999)
 
 
+def _mask_like(packed: PackedProblem, v: jax.Array) -> jax.Array:
+    """theta_mask broadcast against a θ-shaped array: [J, D_max] for
+    scalar targets, [J, D_max, 1] against multi-output [J, D_max, Dy]."""
+    mask = packed.theta_mask
+    return mask if v.ndim == mask.ndim else mask[..., None]
+
+
 @partial(jax.jit, static_argnames=("iters", "backend", "shifted"))
 def _power_iteration_lam(packed, v0, shift, *, iters, backend, shifted):
     """Jitted power iteration on the homogeneous part of F (b cancels in
@@ -96,7 +103,7 @@ def power_iteration_mu_max(packed: PackedProblem, iters: int = 50,
     _check_backend(backend)
     v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
                           packed.d.dtype)
-    v = v * packed.theta_mask
+    v = v * _mask_like(packed, v)
     return float(_power_iteration_lam(
         packed, v, jnp.zeros((), packed.d.dtype), iters=iters,
         backend=backend, shifted=False))
@@ -115,7 +122,7 @@ def power_iteration_mu_min(packed: PackedProblem, mu_max: float,
     _check_backend(backend)
     v = jax.random.normal(jax.random.PRNGKey(seed), packed.d.shape,
                           packed.d.dtype)
-    v = v * packed.theta_mask
+    v = v * _mask_like(packed, v)
     lam = _power_iteration_lam(
         packed, v, jnp.asarray(mu_max, packed.d.dtype), iters=iters,
         backend=backend, shifted=True)

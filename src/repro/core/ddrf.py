@@ -56,7 +56,16 @@ def _channels(fmap: FeatureMap, x: jax.Array) -> jax.Array:
 
 
 def energy_scores(fmap: FeatureMap, x: jax.Array, y: jax.Array) -> jax.Array:
-    """Per-frequency energy score on data (X [d,N], Y [1,N] or [N])."""
+    """Per-frequency energy score on data (X [d,N], Y [1,N] or [N]).
+
+    Multi-output labels Y [N, Dy] score each frequency by the SUM of its
+    per-output alignments — the natural extension of the polarization
+    objective to a vector target (and identical to the scalar score at
+    Dy=1)."""
+    if y.ndim == 2 and y.shape[0] != 1:                # [N, Dy] labels
+        n = y.shape[0]
+        align = _channels(fmap, x) @ y                 # [num_features, Dy]
+        return _fold_paired(jnp.sum(align**2, axis=1), fmap) / (n**2)
     y = y.reshape(-1)
     n = y.shape[0]
     align = _channels(fmap, x) @ y                     # [num_features]

@@ -37,12 +37,40 @@ from repro.core.rff import FeatureMap, featurize
 
 @dataclasses.dataclass
 class NodeData:
-    x: jax.Array  # [d, N_j]
-    y: jax.Array  # [N_j]
+    """One node's shard.
+
+    x: [d, N_j] inputs (paper layout, columns are samples).
+    y: [N_j] scalar targets, or [N_j, Dy] multi-output targets — the
+       trailing output axis threads through every layer (θ becomes
+       [D_j, Dy]; the Eq. 17 auxiliaries depend only on the features, so
+       the iteration is unchanged per output column).
+    bags: optional [N_j] int bag ids for aggregate-observation KRR
+       (aodisaggregation style): only bag-level label sums are observed,
+       so y then has one row per BAG (B_j = y.shape[0]) and every feature
+       block on this node's data is column-aggregated within bags before
+       entering the Eq. 17 build — β = (Agg(Z)Agg(Z)ᵀ + nλI)⁻¹Agg(Z)z.
+       With singleton bags (ids 0…N_j−1) Agg is the identity and the
+       standard build is recovered exactly.
+    """
+
+    x: jax.Array              # [d, N_j]
+    y: jax.Array              # [N_j] or [N_j, Dy] (bag-level when bagged)
+    bags: jax.Array | None = None   # [N_j] int bag ids, or None
 
     @property
     def num_samples(self) -> int:
         return self.x.shape[1]
+
+    @property
+    def num_bags(self) -> int:
+        """Observation count: bags when aggregated, samples otherwise."""
+        return self.y.shape[0] if self.bags is not None \
+            else self.num_samples
+
+    @property
+    def num_outputs(self) -> int:
+        """Dy — trailing output width (1 for scalar [N] targets)."""
+        return 1 if self.y.ndim == 1 else self.y.shape[1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +94,7 @@ class AuxMatrices:
 
 @dataclasses.dataclass
 class DeKRRState:
-    theta: list[jax.Array]             # [D_j] per node
+    theta: list[jax.Array]             # [D_j] (or [D_j, Dy]) per node
     iteration: int = 0
 
 
@@ -99,6 +127,40 @@ class DeKRRSolver:
         self.config = config
         self.J = topology.num_nodes
         self.N = sum(nd.num_samples for nd in data)
+        out_widths = {nd.num_outputs for nd in self.data}
+        if len(out_widths) > 1:
+            raise ValueError(
+                f"all nodes must share one output width Dy, got "
+                f"{sorted(out_widths)} — mixed scalar/multi-output shards "
+                f"cannot reach network consensus on one θ layout")
+        for j, nd in enumerate(self.data):
+            if nd.bags is None:
+                if nd.y.shape[0] != nd.num_samples:
+                    raise ValueError(
+                        f"node {j}: y has {nd.y.shape[0]} rows but x has "
+                        f"{nd.num_samples} samples")
+            else:
+                bags = np.asarray(nd.bags)
+                if bags.shape != (nd.num_samples,):
+                    raise ValueError(
+                        f"node {j}: bags must be [N_j]={nd.num_samples} "
+                        f"int bag ids, got shape {bags.shape}")
+                if not np.issubdtype(bags.dtype, np.integer):
+                    raise ValueError(f"node {j}: bags must be integer "
+                                     f"ids, got dtype {bags.dtype}")
+                if bags.size and (bags.min() < 0
+                                  or bags.max() >= nd.y.shape[0]):
+                    raise ValueError(
+                        f"node {j}: bag ids must lie in [0, B_j) with "
+                        f"B_j = y.shape[0] = {nd.y.shape[0]}, got range "
+                        f"[{bags.min()}, {bags.max()}]")
+        if gram_fn is not None and any(nd.bags is not None
+                                       for nd in self.data):
+            raise ValueError(
+                "gram_fn bypasses featurization, so the bag-aggregation "
+                "operator cannot be applied to its Gram blocks — "
+                "aggregate-observation nodes require the default "
+                "featurize path")
         self.c_nei = (
             list(c_nei_per_node)
             if c_nei_per_node is not None
@@ -136,11 +198,29 @@ class DeKRRSolver:
         """Z_{i,j} = Z_i(X_j) ∈ R^{D_i × N_j}."""
         return featurize(self.feature_maps[i], self.data[j].x)
 
+    def _agg_cols(self, z: jax.Array, j: int) -> jax.Array:
+        """Apply node j's bag-aggregation operator to the columns of a
+        feature block on node j's data: [D, N_j] → [D, B_j] with column b
+        the sum over samples in bag b. Identity (the very same array) for
+        un-bagged nodes, so the standard build is untouched."""
+        bags = self.data[j].bags
+        if bags is None:
+            return z
+        return jax.ops.segment_sum(
+            z.T, jnp.asarray(bags), num_segments=self.data[j].num_bags).T
+
+    def obs_features(self, i: int, j: int) -> jax.Array:
+        """Observation-space feature block Agg_j(Z_{i,j}) — what the aux
+        build and objective actually consume; equals `cross_features` for
+        un-bagged nodes."""
+        return self._agg_cols(self.cross_features(i, j), j)
+
     def _gram(self, i: int, j: int) -> jax.Array:
-        """Z_{i,j} Z_{i,j}ᵀ ∈ R^{D_i × D_i}; hot-spot (Pallas kernel path)."""
+        """Agg_j(Z_{i,j}) Agg_j(Z_{i,j})ᵀ ∈ R^{D_i × D_i}; hot-spot
+        (Pallas kernel path for un-bagged solvers)."""
         if self._gram_fn is not None:
             return self._gram_fn(self.feature_maps[i], self.data[j].x)
-        z = self.cross_features(i, j)
+        z = self.obs_features(i, j)
         return z @ z.T
 
     def _build_aux(self) -> AuxMatrices:
@@ -150,7 +230,7 @@ class DeKRRSolver:
             deg = topo.degree(j)
             ct_self = _c_tilde(self.c_self[j], self.N, deg)
             ct_nei = _c_tilde(self.c_nei[j], self.N, deg)
-            z_jj = self.cross_features(j, j)
+            z_jj = self.obs_features(j, j)
             dj_feat = z_jj.shape[0]
             gram_jj = z_jj @ z_jj.T
 
@@ -161,24 +241,32 @@ class DeKRRSolver:
                 a = a + ct_p_nei * self._gram(j, p)
             g_list.append(jnp.linalg.inv(a))
 
-            d_list.append((z_jj @ self.data[j].y.reshape(-1)) / self.N)
+            y_j = self.data[j].y
+            if y_j.ndim == 1:
+                d_list.append((z_jj @ y_j.reshape(-1)) / self.N)
+            else:
+                d_list.append((z_jj @ y_j) / self.N)      # [D_j, Dy]
             s_list.append(2.0 * ct_self * gram_jj)
 
             pj: dict[int, jax.Array] = {}
             for p in topo.neighbors(j):
                 ct_p_nei = _c_tilde(self.c_nei[p], self.N, topo.degree(p))
-                z_pj = self.cross_features(p, j)      # [D_p, N_j]
-                z_jp = self.cross_features(j, p)      # [D_j, N_p]
-                z_pp = self.cross_features(p, p)      # [D_p, N_p]
+                z_pj = self.obs_features(p, j)        # [D_p, B_j]
+                z_jp = self.obs_features(j, p)        # [D_j, B_p]
+                z_pp = self.obs_features(p, p)        # [D_p, B_p]
                 pj[p] = ct_nei * (z_jj @ z_pj.T) + ct_p_nei * (z_jp @ z_pp.T)
             p_list.append(pj)
         return AuxMatrices(g=g_list, d=d_list, s=s_list, p=p_list)
 
     # -- iteration ------------------------------------------------------------
     def init_state(self) -> DeKRRState:
+        # d_j is [D_j] for scalar targets and [D_j, Dy] for multi-output —
+        # θ shares that shape, so zeros_like the aux keeps both cases on
+        # one code path.
         return DeKRRState(
-            theta=[jnp.zeros(fm.num_features, dtype=self.aux.d[j].dtype)
-                   for j, fm in enumerate(self.feature_maps)]
+            theta=[jnp.zeros(self.aux.d[j].shape,
+                             dtype=self.aux.d[j].dtype)
+                   for j in range(self.J)]
         )
 
     def step(self, state: DeKRRState) -> DeKRRState:
@@ -221,7 +309,9 @@ class DeKRRSolver:
         off = np.concatenate([[0], np.cumsum(dims)])
         dt = int(off[-1])
         m = np.zeros((dt, dt))
-        b = np.zeros(dt)
+        # trailing output axis (empty tuple for scalar targets) rides the
+        # RHS: np.linalg.solve handles [dt] and [dt, Dy] alike.
+        b = np.zeros((dt,) + np.asarray(self.aux.d[0]).shape[1:])
         for j in range(self.J):
             g = np.asarray(self.aux.g[j])
             b[off[j]:off[j + 1]] = g @ np.asarray(self.aux.d[j])
@@ -255,14 +345,20 @@ class DeKRRSolver:
             deg = topo.degree(j)
             ct_self = _c_tilde(self.c_self[j], self.N, deg)
             ct_nei = _c_tilde(self.c_nei[j], self.N, deg)
-            z_jj = self.cross_features(j, j)
-            resid = theta[j] @ z_jj - self.data[j].y.reshape(-1)
+            z_jj = self.obs_features(j, j)
+            if theta[j].ndim == 1:
+                resid = theta[j] @ z_jj - self.data[j].y.reshape(-1)
+            else:
+                resid = theta[j].T @ z_jj - self.data[j].y.T   # [Dy, B_j]
             total = total + jnp.sum(resid**2) / self.N
             total = total + (cfg.lam / self.J) * jnp.sum(theta[j] ** 2)
             # consensus penalties over N̂_j (p = j contributes 0)
             for p in topo.neighbors(j):
-                z_pj = self.cross_features(p, j)
-                gap = theta[j] @ z_jj - theta[p] @ z_pj
+                z_pj = self.obs_features(p, j)
+                if theta[j].ndim == 1:
+                    gap = theta[j] @ z_jj - theta[p] @ z_pj
+                else:
+                    gap = theta[j].T @ z_jj - theta[p].T @ z_pj
                 total = total + ct_nei * jnp.sum(gap**2)
             del ct_self  # self-term is identically zero in L (kept for clarity)
         return total
@@ -270,11 +366,20 @@ class DeKRRSolver:
     # -- prediction -------------------------------------------------------------
     def predict(self, theta: Sequence[jax.Array], x: jax.Array,
                 node: int | None = None) -> jax.Array:
-        """f_j(x) for one node, or the network-average prediction."""
+        """f_j(x) for one node, or the network-average prediction.
+
+        Scalar θ [D_j] → [Q]; multi-output θ [D_j, Dy] → [Q, Dy] via
+        Z(x)ᵀ θ (queries lead, outputs trail)."""
         if node is not None:
-            return theta[node] @ featurize(self.feature_maps[node], x)
-        preds = [theta[j] @ featurize(self.feature_maps[j], x)
-                 for j in range(self.J)]
+            z = featurize(self.feature_maps[node], x)
+            return theta[node] @ z if theta[node].ndim == 1 \
+                else z.T @ theta[node]
+        if theta[0].ndim == 1:
+            preds = [theta[j] @ featurize(self.feature_maps[j], x)
+                     for j in range(self.J)]
+        else:
+            preds = [featurize(self.feature_maps[j], x).T @ theta[j]
+                     for j in range(self.J)]
         return jnp.mean(jnp.stack(preds), axis=0)
 
 
@@ -287,7 +392,7 @@ def prop1_required_c_self(solver: DeKRRSolver) -> np.ndarray:
     for j in range(solver.J):
         deg = topo.degree(j)
         ct_nei = _c_tilde(solver.c_nei[j], n, deg)
-        z_jj = solver.cross_features(j, j)
+        z_jj = solver.obs_features(j, j)
         gram_jj = z_jj @ z_jj.T
         acc = jnp.zeros_like(gram_jj)
         for p in topo.neighbors(j):

@@ -52,6 +52,19 @@ pinned):
 and bit-for-bit with the synchronous path of the same backend when the
 async schedule degenerates to it (prob = 1, bernoulli, censoring off).
 
+Multi-output targets (Dy > 1): EVERY cell above also supports a trailing
+output axis. Nodes with labels [N_j, Dy] pack into `d`/θ of shape
+[J, D_max, Dy] (the Eq. 17 feature-space auxiliaries are label-free, so
+G/S/P are unchanged), and every runtime — batched rounds, fused kernels,
+async gossip (censor thresholds max over features AND outputs), Chebyshev
+acceleration, SPMD collectives, tol stops (max|Δθ| over both axes), warm
+starts — carries the axis through as extra fused row blocks. Dy-batched
+solves match a per-output scalar loop at rtol 1e-9 on every backend
+(tests/test_multioutput.py), dispatch counts are UNCHANGED (the Dy axis
+folds into kernel rows, never into extra launches — `repro.analysis`
+pins the Dy=3 entry points to the same J002 contract), and a Dy=1
+problem takes the scalar code paths verbatim.
+
 Streaming modes (`repro.stream`, warm-start × backend × sync/async): the
 online runtime folds minibatches into the Eq. 17 auxiliaries by rank-b
 Woodbury updates and re-enters the SAME solvers above — every cell of the

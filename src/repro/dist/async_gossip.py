@@ -93,6 +93,11 @@ class AsyncGossipState:
                            last θ node j *received* from the neighbor in
                            slot k — under "edge" gossip this can be staler
                            than that neighbor's own ``sent``.
+
+    Multi-output packings append a trailing Dy axis to all three
+    (θ/sent [J, D_max, Dy], buffers [J, K, D_max, Dy]); the censor
+    decision then takes max|Δθ| over features AND outputs, so one
+    broadcast carries all Dy columns or none.
     """
 
     theta: jax.Array
@@ -177,7 +182,9 @@ def _async_round(packed: PackedProblem, state: AsyncGossipState,
     new = step_batched(packed, state.theta, backend=backend,
                        active=active, nbr_theta=state.buffers)
     if censored:
-        delta = jnp.max(jnp.abs(new - state.sent), axis=1)   # [J]
+        # per-node max|Δθ| over features AND (for multi-output) outputs
+        delta = jnp.max(jnp.abs(new - state.sent),
+                        axis=tuple(range(1, new.ndim)))      # [J]
         bcast = active & (delta > threshold)
     else:
         bcast = active
@@ -185,9 +192,11 @@ def _async_round(packed: PackedProblem, state: AsyncGossipState,
     received = live & bcast[packed.nbr_idx]                  # [J, K]
     if gossip == "edge":
         received = received & active[:, None]  # pairwise: endpoint only
-    sent = jnp.where(bcast[:, None], new, state.sent)
-    buffers = jnp.where(received[..., None], new[packed.nbr_idx],
-                        state.buffers)
+    sent = jnp.where(jnp.reshape(bcast, (-1,) + (1,) * (new.ndim - 1)),
+                     new, state.sent)
+    buffers = jnp.where(
+        jnp.reshape(received, received.shape + (1,) * (new.ndim - 1)),
+        new[packed.nbr_idx], state.buffers)
     return (AsyncGossipState(theta=new, sent=sent, buffers=buffers),
             AsyncRoundInfo(bcast=bcast, received=received))
 
@@ -501,7 +510,9 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
                     gate = active & mask_r[nbr_idx[0]] & flag & live
                 else:
                     gate = live
-                buffers = jnp.where(gate[:, None], payload, buffers)
+                buffers = jnp.where(
+                    jnp.reshape(gate, (-1,) + (1,) * (payload.ndim - 1)),
+                    payload, buffers)
                 return new, sent_new, buffers
 
             # round-0 staleness view: every buffer holds its neighbor's

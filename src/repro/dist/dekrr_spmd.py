@@ -128,7 +128,13 @@ class PackedProblem:
 
     Attributes (array leaves; J nodes, K neighbor slots, D_max features):
       g:          [J, D_max, D_max]     padded G_j (Eq. 17 inverse, applied).
-      d:          [J, D_max]            padded d_j.
+      d:          [J, D_max]            padded d_j — or [J, D_max, Dy] for
+                                        multi-output targets; θ and every
+                                        stage label share d's shape, with
+                                        the trailing output axis riding
+                                        through the iteration unchanged
+                                        (the Eq. 17 matrices are
+                                        features-only).
       s:          [J, D_max, D_max]     padded S_j.
       p:          [J, K, D_max, D_max]  padded P_{j, nbr_idx[j, k]}; the
                                         [k] slice is the zero matrix for
@@ -187,6 +193,11 @@ class PackedProblem:
     @property
     def num_slots(self) -> int:
         return self.nbr_idx.shape[1]
+
+    @property
+    def num_outputs(self) -> int:
+        """Dy — trailing output width (1 for scalar-target packings)."""
+        return self.d.shape[2] if self.d.ndim == 3 else 1
 
 
 def _circulant_slot_table(
@@ -266,11 +277,17 @@ def pack_problem(solver, *, method: str = "batched",
     if gram_backend not in (None, "xla", "pallas"):
         raise ValueError(f"unknown gram_backend {gram_backend!r}")
     kinds = {fm.kind for fm in solver.feature_maps}
+    has_bags = any(nd.bags is not None for nd in solver.data)
     if method == "batched" and (
             len(kinds) > 1                       # mixed cos_sin/cos_bias
-            or getattr(solver, "_gram_fn", None) is not None):
+            or getattr(solver, "_gram_fn", None) is not None
+            or has_bags):
         reason = ("the solver has a custom gram_fn"
                   if getattr(solver, "_gram_fn", None) is not None
+                  else "the solver has aggregate-observation (bagged) "
+                       "nodes, whose Agg operator only the ragged build "
+                       "applies"
+                  if has_bags
                   else f"the solver mixes feature kinds {sorted(kinds)}")
         if gram_backend == "pallas":
             raise ValueError(
@@ -309,7 +326,10 @@ def _pack_problem_from_aux(solver) -> PackedProblem:
     k_slots = nbr_idx.shape[1]
 
     g = np.zeros((j_nodes, d_max, d_max), dtype=dtype)
-    d = np.zeros((j_nodes, d_max), dtype=dtype)
+    # d_j is [D_j] or [D_j, Dy]; the packed stage labels carry the same
+    # trailing output axis.
+    out_tail = np.asarray(solver.aux.d[0]).shape[1:]
+    d = np.zeros((j_nodes, d_max) + out_tail, dtype=dtype)
     s = np.zeros((j_nodes, d_max, d_max), dtype=dtype)
     p = np.zeros((j_nodes, k_slots, d_max, d_max), dtype=dtype)
     theta_mask = np.zeros((j_nodes, d_max), dtype=dtype)
@@ -417,10 +437,15 @@ def _stage_packed_inputs(solver, *, gram_backend: str | None) -> dict:
     dim_in = solver.data[0].x.shape[0]
 
     x = np.zeros((j_nodes, dim_in, n_max), dtype=dtype)
-    y = np.zeros((j_nodes, n_max), dtype=dtype)
+    dy = solver.data[0].num_outputs if solver.data[0].y.ndim > 1 else None
+    y = np.zeros((j_nodes, n_max) if dy is None else (j_nodes, n_max, dy),
+                 dtype=dtype)
     for j, nd in enumerate(solver.data):
         x[j, :, :sizes[j]] = np.asarray(nd.x)
-        y[j, :sizes[j]] = np.asarray(nd.y).reshape(-1)
+        if dy is None:
+            y[j, :sizes[j]] = np.asarray(nd.y).reshape(-1)
+        else:
+            y[j, :sizes[j]] = np.asarray(nd.y)
     col_mask = (np.arange(n_max)[None, :] < sizes[:, None]).astype(dtype)
 
     ct_self, ct_nei = solver.coupling_coefficients()
@@ -461,9 +486,14 @@ def _pallas_gram_blocks(staged: dict) -> dict:
     omega, bias = staged["omega"], staged["bias"]
     x, y, cm = staged["x"], staged["y"], staged["col_mask"]
     j_nodes, k_slots = staged["nbr_mask"].shape
+    # The streaming kernel's zy accumulator is scalar-target only; for
+    # multi-output ([J, n_max, Dy]) y the label term is formed in
+    # `_node_aux` from the packed features instead, and the kernel only
+    # supplies the Gram blocks.
+    y_kernel = y if y.ndim == 2 else np.zeros(y.shape[:2], x.dtype)
     graw, zyraw = rff_gram_batched(
         jnp.asarray(omega), jnp.asarray(bias), jnp.asarray(x),
-        jnp.asarray(y), jnp.asarray(cm))
+        jnp.asarray(y_kernel), jnp.asarray(cm))
     f_max, dim_in = omega.shape[1:]
     if k_slots == 0:
         gcross = np.zeros((j_nodes, 0, f_max, f_max), x.dtype)
@@ -546,19 +576,27 @@ def _node_aux(omega, bias, x, y, col_mask, feat_mask, feat_idx, scale,
     z_nn = jax.vmap(pack)(raw_nn, feat_idx_n, feat_mask_n, scale_n,
                           col_mask_n)                       # Z_pp [K, D, N]
 
-    if gram_raw is not None:
-        # Pallas streaming kernel output (unit-scale frequency space ==
-        # packed feature space for cos_bias); mask + scale here.
-        fouter = feat_mask[:, None] * feat_mask[None, :]
-        gram_jj = gram_raw * scale**2 * fouter
-        d_vec = zy_raw * scale * feat_mask / n_total
-        gram_cross = (gram_cross_raw * scale**2 * fouter[None])
-    else:
-        gram_jj = jnp.einsum("an,bn->ab", z, z, precision=hi)
+    if y.ndim == 1:
         # mult+sum rather than a matvec: XLA's gemv rounds differently at
         # different batch sizes, this form is batch-invariant (regression
         # replay in tests/test_dist_property.py)
-        d_vec = jnp.sum(z * y[None, :], axis=1) / n_total
+        d_vec_z = jnp.sum(z * y[None, :], axis=1) / n_total
+    else:
+        # multi-output: same batch-invariant mult+sum per output column
+        d_vec_z = jnp.sum(z[:, :, None] * y[None, :, :], axis=1) / n_total
+
+    if gram_raw is not None:
+        # Pallas streaming kernel output (unit-scale frequency space ==
+        # packed feature space for cos_bias); mask + scale here. The
+        # kernel's zy accumulator only exists for scalar targets.
+        fouter = feat_mask[:, None] * feat_mask[None, :]
+        gram_jj = gram_raw * scale**2 * fouter
+        d_vec = (zy_raw * scale * feat_mask / n_total
+                 if y.ndim == 1 else d_vec_z)
+        gram_cross = (gram_cross_raw * scale**2 * fouter[None])
+    else:
+        gram_jj = jnp.einsum("an,bn->ab", z, z, precision=hi)
+        d_vec = d_vec_z
         gram_cross = jnp.einsum("kan,kbn->kab", z_j_on_n, z_j_on_n,
                                 precision=hi)
 
@@ -624,7 +662,7 @@ def _pack_problem_pernode(solver, *, gram_backend: str | None = None
 
 def pack_theta(packed: PackedProblem,
                theta: Sequence[jax.Array]) -> jax.Array:
-    """Ragged per-node θ list → padded [J, D_max] (inverse of unpack).
+    """Ragged per-node θ list → padded [J, D_max] (or [J, D_max, Dy]).
 
     Vectors shorter than their node's D_j re-pad with exact zeros, so a θ
     taken from a packing whose dims have since *grown* (e.g. a per-node
@@ -633,7 +671,11 @@ def pack_theta(packed: PackedProblem,
     when dims were not recorded) are rejected with a clear error — such a
     θ is stale against this layout, and padding it would either crash
     deep in `jnp.pad` with a negative pad width or silently put mass on
-    padded coordinates the iteration treats as dead.
+    padded coordinates the iteration treats as dead. The output width is
+    validated the same way: every θ_j must be [D_j]-shaped for a
+    scalar-target packing and [D_j, Dy]-shaped (with THIS packing's Dy)
+    for a multi-output one — a θ from a packing with a different Dy is
+    stale, and reshaping it would silently scramble output columns.
     """
     theta = list(theta)
     if len(theta) != packed.num_nodes:
@@ -641,7 +683,16 @@ def pack_theta(packed: PackedProblem,
             f"pack_theta got {len(theta)} θ vectors for a packed problem "
             f"with {packed.num_nodes} nodes")
     d_max = packed.max_features
+    out_tail = packed.d.shape[2:]            # () scalar, (Dy,) multi-output
     for j, t in enumerate(theta):
+        if t.shape[1:] != out_tail:
+            want = (f"[D_j, Dy={out_tail[0]}]" if out_tail
+                    else "[D_j] (scalar targets)")
+            raise ValueError(
+                f"theta[{j}] has shape {tuple(t.shape)} but this packing "
+                f"carries {want} per-node θ — this θ was packed under a "
+                f"different output width Dy and cannot be re-laid-out "
+                f"silently. Re-derive it for the current targets.")
         limit = (packed.node_dims[j] if packed.node_dims is not None
                  else d_max)
         if t.shape[0] > limit:
@@ -652,28 +703,33 @@ def pack_theta(packed: PackedProblem,
                 f"refreshed to fewer features?). Re-derive it for the "
                 f"current dims (repro.stream.repad_theta re-pads carried "
                 f"iterates across a refresh).")
-    return jnp.stack([jnp.pad(t, (0, d_max - t.shape[0])) for t in theta])
+    pad_tail = ((0, 0),) * len(out_tail)
+    return jnp.stack([jnp.pad(t, ((0, d_max - t.shape[0]),) + pad_tail)
+                      for t in theta])
 
 
 def unpack_theta(packed: PackedProblem,
                  theta: jax.Array) -> list[jax.Array]:
-    """Padded [J, D_max] θ → ragged per-node list (reference layout).
+    """Padded [J, D_max] (or [J, D_max, Dy]) θ → ragged per-node list.
 
-    Validates θ against the packed layout: a θ from a different packing
-    (e.g. carried across a `repro.stream` feature refresh that changed
-    D_max) must not be sliced silently — slicing a too-narrow θ would
-    truncate node vectors without any error.
+    Validates θ against the packed layout — BOTH the feature width and
+    the output width: a θ from a different packing (carried across a
+    `repro.stream` feature refresh that changed D_max, or packed under a
+    different Dy) must not be sliced silently — slicing a too-narrow θ
+    would truncate node vectors, and reinterpreting a different Dy would
+    scramble output columns, without any error.
     """
     if packed.node_dims is None:
         raise ValueError("packed problem has no node_dims recorded")
-    want = (packed.num_nodes, packed.max_features)
+    want = packed.d.shape                # (J, D_max) or (J, D_max, Dy)
     if theta.shape != want:
         raise ValueError(
             f"unpack_theta got θ of shape {theta.shape} for a packed "
-            f"problem of shape {want} — this θ belongs to a different "
-            f"packing (stale across a feature refresh that re-padded "
-            f"D_max?). Unpack it with ITS packing, then re-pack "
-            f"(or use repro.stream.repad_theta).")
+            f"problem of θ-shape {want} (Dy = {packed.num_outputs}) — "
+            f"this θ belongs to a different packing (stale across a "
+            f"feature refresh that re-padded D_max, or packed under a "
+            f"different output width Dy?). Unpack it with ITS packing, "
+            f"then re-pack (or use repro.stream.repad_theta).")
     return [theta[j, :dj] for j, dj in enumerate(packed.node_dims)]
 
 
@@ -685,12 +741,18 @@ def _node_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                nbr_mask: jax.Array) -> jax.Array:
     """θ_j ← G_j (d_j + S_j θ_j + Σ_k P_{j,k} θ_{nbr(j,k)})  for one node.
 
-    Shapes: g/s [D, D], d/theta [D], p [K, D, D], nbr_theta [K, D],
-    nbr_mask [K]. Masked slots carry zero P blocks, so the mask multiply is
-    belt-and-braces; padded coordinates come out exactly 0.0 because the
-    corresponding rows of g are zero.
+    Shapes: g/s [D, D], d/theta [D] (or [D, Dy]), p [K, D, D], nbr_theta
+    [K, D] (or [K, D, Dy]), nbr_mask [K]. Masked slots carry zero P
+    blocks, so the mask multiply is belt-and-braces; padded coordinates
+    come out exactly 0.0 because the corresponding rows of g are zero.
+    The multi-output branch is the same contraction per output column —
+    scalar targets keep the exact original trace.
     """
-    coupled = jnp.einsum("kab,kb->a", p, nbr_theta * nbr_mask[:, None])
+    if theta.ndim == 1:
+        coupled = jnp.einsum("kab,kb->a", p, nbr_theta * nbr_mask[:, None])
+    else:
+        coupled = jnp.einsum("kab,kbo->ao", p,
+                             nbr_theta * nbr_mask[:, None, None])
     return g @ (d + s @ theta + coupled)
 
 
@@ -715,8 +777,10 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
                  nbr_theta: jax.Array | None = None) -> jax.Array:
     """One Jacobi round of Eq. 19 over all nodes (synchronous by default).
 
-    theta: [J, D_max] → [J, D_max]. Padding is preserved exactly (zero in,
-    zero out) — see the module docstring for why no mask is needed.
+    theta: [J, D_max] → [J, D_max] (or [J, D_max, Dy] → [J, D_max, Dy]
+    for multi-output packings — the trailing output axis batches through
+    the same GEMMs). Padding is preserved exactly (zero in, zero out) —
+    see the module docstring for why no mask is needed.
 
     ``backend="xla"`` is the vmapped-GEMM round; ``backend="pallas"`` the
     fused `repro.kernels.dekrr_step` kernel (in-kernel slot-table gather, θ
@@ -750,8 +814,8 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
             table, nbr_idx = theta, packed.nbr_idx
         else:
             table = jnp.concatenate(
-                [theta, nbr_theta.reshape(j_nodes * k_slots,
-                                          packed.max_features)], axis=0)
+                [theta, nbr_theta.reshape((j_nodes * k_slots,)
+                                          + theta.shape[1:])], axis=0)
             nbr_idx = j_nodes + jnp.arange(
                 j_nodes * k_slots, dtype=jnp.int32).reshape(j_nodes,
                                                             k_slots)
@@ -763,7 +827,8 @@ def step_batched(packed: PackedProblem, theta: jax.Array,
         packed.g, packed.d, packed.s, packed.p, theta, nbr_theta,
         packed.nbr_mask)
     if active is not None:
-        new = jnp.where((active != 0)[:, None], new, theta)
+        gate = jnp.reshape(active != 0, (-1,) + (1,) * (theta.ndim - 1))
+        new = jnp.where(gate, new, theta)
     return new
 
 
@@ -1090,6 +1155,9 @@ def comm_bytes_per_round(packed: PackedProblem, mode: str, *,
     ``"allgather"``: J · (J−1) · D_max · itemsize — each node receives the
     full network state minus its own shard.
 
+    Multi-output packings ship Dy columns per θ exchange, so every
+    formula above carries an extra ·Dy factor (`packed.num_outputs`).
+
     Async gossip (`repro.dist.async_gossip`) scales the base cost to the
     *expected* payload under randomized activation and COKE censoring:
 
@@ -1118,7 +1186,8 @@ def comm_bytes_per_round(packed: PackedProblem, mode: str, *,
         raise ValueError(f"gossip must be 'bernoulli' or 'edge', "
                          f"got {gossip!r}")
     j_nodes = packed.num_nodes
-    d_max = packed.max_features
+    # multi-output payloads ship Dy columns per θ exchange
+    d_max = packed.max_features * packed.num_outputs
     itemsize = np.dtype(packed.d.dtype).itemsize
     if gossip == "edge":
         return 2 * d_max * itemsize * (1.0 - censor_fraction)

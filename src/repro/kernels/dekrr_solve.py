@@ -58,6 +58,16 @@ to force one dispatch per round rides scalar prefetch instead:
 
 Their VMEM working sets are `estimate_dekrr_async_solve` /
 `estimate_dekrr_cheb_solve` in `repro.analysis.vmem`.
+
+Multi-output targets (Dy > 1) use the flattened-row layout of
+`repro.kernels.dekrr_step`: θ/sent/Δ tables and d rows arrive as
+[T·Dy, D] with table row t owning flat rows [t·Dy, (t+1)·Dy) (that
+node's θᵀ as a [Dy, D] block), staleness buffers as [B·Dy, D] with slot
+(j, k) at rows [(j·K + k)·Dy, ...). Every kernel derives Dy from the d
+block's sublane extent and scales its dynamic row reads; at Dy = 1 the
+traces are unchanged. The censor reduction max|new − sent| runs over the
+[Dy, D] block, i.e. the max over features AND outputs the async runtime
+documents.
 """
 from __future__ import annotations
 
@@ -89,6 +99,7 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
+    dy = d_ref.shape[0]
     dtype = theta0_ref.dtype
 
     @pl.when(jnp.logical_and(r == 0, j == 0))
@@ -97,22 +108,22 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
         tab_even_ref[...] = theta0_ref[...]
         tab_odd_ref[...] = theta0_ref[...]
 
-    def row_times(row, mat):
-        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+    def row_times(rows, mat):
+        # rows [Dy, D] · mat [D', D]ᵀ → [Dy, D'] == (mat @ rows.T).T
         return jax.lax.dot_general(
-            row, mat, _ROW_TIMES_MAT_T,
+            rows, mat, _ROW_TIMES_MAT_T,
             precision=jax.lax.Precision.HIGHEST,
             preferred_element_type=dtype)
 
     def round_body(read_ref, write_ref):
-        theta_self = read_ref[pl.ds(self_idx_ref[j], 1), :]      # [1, D]
+        theta_self = read_ref[pl.ds(self_idx_ref[j] * dy, dy), :]  # [Dy, D]
         acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
         for k in range(num_slots):                               # K unroll
-            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k] * dy, dy), :]
             mask_k = nbr_mask_ref[j, k].astype(dtype)
             acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ
         new = row_times(acc, g_ref[0])                           # G (…)
-        write_ref[pl.ds(self_idx_ref[j], 1), :] = new
+        write_ref[pl.ds(self_idx_ref[j] * dy, dy), :] = new
         out_ref[...] = new
 
     even_round = r % 2 == 0
@@ -129,20 +140,24 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
 def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                        p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
                        self_idx: jax.Array, nbr_mask: jax.Array, *,
-                       num_rounds: int,
+                       num_rounds: int, dy: int = 1,
                        interpret: bool = False) -> jax.Array:
     """Raw pallas_call. All dims must already be padded/aligned:
 
-      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
-      of 128; theta [T, D] with T a multiple of 8; nbr_idx [J, K] int32
-      rows into theta; self_idx [J] int32 (distinct rows); nbr_mask [J, K]
-      int32; num_rounds ≥ 1 static.
-    Returns the θ rows after `num_rounds` Jacobi rounds, [J, D] (row r for
-    node r — callers with T ≠ J re-assemble their table themselves).
+      g/s [J, D, D], d [J·Dy, D], p [J, K, D, D] with K ≥ 1 and D a
+      multiple of 128; theta [T·Dy, D] with T·Dy padded to a multiple of
+      8; nbr_idx [J, K] int32 *table* rows (pre-flattening); self_idx [J]
+      int32 (distinct rows); nbr_mask [J, K] int32; num_rounds ≥ 1 static;
+      dy ≥ 1 static (1 = scalar targets, today's layout).
+    Returns the θ rows after `num_rounds` Jacobi rounds, [J·Dy, D] (rows
+    [r·Dy, (r+1)·Dy) for node r — callers with T ≠ J re-assemble their
+    table themselves).
     """
-    j_nodes, d_feat = d.shape
+    j_nodes = d.shape[0] // dy
+    d_feat = d.shape[1]
     k_slots = p.shape[1]
     t_rows = theta.shape[0]
+    assert d.shape[0] % dy == 0, (d.shape, dy)
     assert d_feat % 128 == 0 and t_rows % 8 == 0, (d_feat, t_rows)
     assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
     assert num_rounds >= 1, "num_rounds must be a positive static int"
@@ -153,27 +168,28 @@ def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
         in_specs=[
             pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # θ0
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
             pl.BlockSpec((1, k_slots, d_feat, d_feat),
                          lambda r, j, *_: (j, 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+        out_specs=pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
         ],
     )
-    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
         _dekrr_solve_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+        out_shape=jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=(t_rows * d_feat            # θ0, fetched once
                             + num_rounds * j_nodes
-                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            * ((3 + k_slots) * d_feat * d_feat
+                               + dy * d_feat)
                             ) * theta.dtype.itemsize,
             transcendentals=0,
         ),
@@ -226,6 +242,7 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
+    dy = d_ref.shape[0]
     dtype = theta0_ref.dtype
 
     @pl.when(jnp.logical_and(r == 0, j == 0))
@@ -235,10 +252,10 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
         sent_ref[...] = sent0_ref[...]
         buf_ref[...] = buf0_ref[...]
 
-    def row_times(row, mat):
-        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+    def row_times(rows, mat):
+        # rows [Dy, D] · mat [D', D]ᵀ → [Dy, D'] == (mat @ rows.T).T
         return jax.lax.dot_general(
-            row, mat, _ROW_TIMES_MAT_T,
+            rows, mat, _ROW_TIMES_MAT_T,
             precision=jax.lax.Precision.HIGHEST,
             preferred_element_type=dtype)
 
@@ -252,39 +269,40 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
 
             @pl.when(cond)
             def _recv(k=k, nb=nb):
-                buf_ref[pl.ds(j * num_slots + k, 1), :] = \
-                    read_tab[pl.ds(nb, 1), :]
+                buf_ref[pl.ds((j * num_slots + k) * dy, dy), :] = \
+                    read_tab[pl.ds(nb * dy, dy), :]
 
     def compute(read_tab, write_tab, fl_write):
         is_active = active_ref[r, j] != 0
 
         @pl.when(is_active)
         def _update():
-            theta_self = read_tab[pl.ds(j, 1), :]                # [1, D]
+            theta_self = read_tab[pl.ds(j * dy, dy), :]          # [Dy, D]
             acc = d_ref[...] + row_times(theta_self, s_ref[0])   # d + S θ
             for k in range(num_slots):                           # K unroll
-                theta_k = buf_ref[pl.ds(j * num_slots + k, 1), :]
+                theta_k = buf_ref[pl.ds((j * num_slots + k) * dy, dy), :]
                 mask_k = nbr_mask_ref[j, k].astype(dtype)
                 acc += row_times(theta_k, p_ref[0, k]) * mask_k  # Σ m P θ
             new = row_times(acc, g_ref[0])                       # G (…)
-            write_tab[pl.ds(j, 1), :] = new
+            write_tab[pl.ds(j * dy, dy), :] = new
             out_theta_ref[...] = new
             if censored:
-                delta = jnp.max(jnp.abs(new - sent_ref[pl.ds(j, 1), :]))
+                # max over features AND outputs — the [Dy, D] block
+                delta = jnp.max(jnp.abs(new - sent_ref[pl.ds(j * dy, dy), :]))
                 bc = delta > thr_ref[r]
                 fl_write[j] = bc.astype(jnp.int32)
 
                 @pl.when(bc)
                 def _bcast():
-                    sent_ref[pl.ds(j, 1), :] = new
+                    sent_ref[pl.ds(j * dy, dy), :] = new
             else:
                 fl_write[j] = jnp.int32(1)
-                sent_ref[pl.ds(j, 1), :] = new
+                sent_ref[pl.ds(j * dy, dy), :] = new
 
         @pl.when(jnp.logical_not(is_active))
         def _passthrough():
-            cur = read_tab[pl.ds(j, 1), :]
-            write_tab[pl.ds(j, 1), :] = cur
+            cur = read_tab[pl.ds(j * dy, dy), :]
+            write_tab[pl.ds(j * dy, dy), :] = cur
             out_theta_ref[...] = cur
             fl_write[j] = jnp.int32(0)
 
@@ -299,10 +317,11 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
 
         @pl.when(r == num_rounds)
         def _flush():
-            out_theta_ref[...] = read_tab[pl.ds(j, 1), :]
+            out_theta_ref[...] = read_tab[pl.ds(j * dy, dy), :]
 
-        out_sent_ref[...] = sent_ref[pl.ds(j, 1), :]
-        out_buf_ref[...] = buf_ref[pl.ds(j * num_slots, num_slots), :]
+        out_sent_ref[...] = sent_ref[pl.ds(j * dy, dy), :]
+        out_buf_ref[...] = buf_ref[pl.ds(j * num_slots * dy,
+                                         num_slots * dy), :]
 
     even_round = r % 2 == 0
 
@@ -321,27 +340,31 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                              nbr_idx: jax.Array, nbr_mask: jax.Array,
                              active_tab: jax.Array, thresholds: jax.Array,
                              *, censored: bool, edge_gossip: bool,
-                             interpret: bool = False
+                             dy: int = 1, interpret: bool = False
                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Raw pallas_call. All dims must already be padded/aligned:
 
-      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
-      of 128; theta/sent [T, D] with T ≥ J a multiple of 8 (row j = node
-      j); buffers [B, D] with B ≥ J·K a multiple of 8 (row j·K + k = slot
+      g/s [J, D, D], d [J·Dy, D], p [J, K, D, D] with K ≥ 1 and D a
+      multiple of 128; theta/sent [T·Dy, D] with T ≥ J and T·Dy padded to
+      a multiple of 8 (rows [j·Dy, (j+1)·Dy) = node j); buffers [B·Dy, D]
+      with B ≥ J·K, B·Dy a multiple of 8 (rows [(j·K + k)·Dy, ...) = slot
       (j, k)); nbr_idx/nbr_mask [J, K] int32 with entries < J;
-      active_tab [R, J] int32 with R ≥ 1 static; thresholds [R] float.
-    Returns the post-schedule (θ rows [J, D], sent rows [J, D],
-    buffer rows [J·K, D]).
+      active_tab [R, J] int32 with R ≥ 1 static; thresholds [R] float;
+      dy ≥ 1 static (1 = scalar targets, today's layout).
+    Returns the post-schedule (θ rows [J·Dy, D], sent rows [J·Dy, D],
+    buffer rows [J·K·Dy, D]).
     """
-    j_nodes, d_feat = d.shape
+    j_nodes = d.shape[0] // dy
+    d_feat = d.shape[1]
     k_slots = p.shape[1]
     t_rows = theta.shape[0]
     b_rows = buffers.shape[0]
     num_rounds = active_tab.shape[0]
+    assert d.shape[0] % dy == 0, (d.shape, dy)
     assert d_feat % 128 == 0 and t_rows % 8 == 0 and b_rows % 8 == 0, \
         (d_feat, t_rows, b_rows)
     assert sent.shape == theta.shape, (sent.shape, theta.shape)
-    assert b_rows >= j_nodes * k_slots, (b_rows, j_nodes, k_slots)
+    assert b_rows >= j_nodes * k_slots * dy, (b_rows, j_nodes, k_slots, dy)
     assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
     assert num_rounds >= 1, "schedule must cover >= 1 round"
 
@@ -353,15 +376,16 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # sent0
             pl.BlockSpec((b_rows, d_feat), lambda r, j, *_: (0, 0)),  # buf0
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
             pl.BlockSpec((1, k_slots, d_feat, d_feat),
                          lambda r, j, *_: (j, 0, 0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # θ
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # sent
-            pl.BlockSpec((k_slots, d_feat), lambda r, j, *_: (j, 0)),  # buf
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # θ
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # sent
+            pl.BlockSpec((k_slots * dy, d_feat),
+                         lambda r, j, *_: (j, 0)),                    # buf
         ),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
@@ -375,20 +399,22 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     kernel = functools.partial(
         _dekrr_async_solve_kernel, censored=censored,
         edge_gossip=edge_gossip, num_rounds=num_rounds)
-    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=(
-            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
-            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
-            jax.ShapeDtypeStruct((j_nodes * k_slots, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * k_slots * dy, d_feat),
+                                 theta.dtype),
         ),
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=((2 * t_rows + b_rows) * d_feat
                             + (num_rounds + 1) * j_nodes
-                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            * ((3 + k_slots) * d_feat * d_feat
+                               + dy * d_feat)
                             ) * theta.dtype.itemsize,
             transcendentals=0,
         ),
@@ -423,6 +449,7 @@ def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
+    dy = d_ref.shape[0]
     dtype = theta0_ref.dtype
 
     @pl.when(jnp.logical_and(r == 0, j == 0))
@@ -431,26 +458,26 @@ def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
         tab_odd_ref[...] = theta0_ref[...]
         delta_ref[...] = delta0_ref[...]
 
-    def row_times(row, mat):
-        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+    def row_times(rows, mat):
+        # rows [Dy, D] · mat [D', D]ᵀ → [Dy, D'] == (mat @ rows.T).T
         return jax.lax.dot_general(
-            row, mat, _ROW_TIMES_MAT_T,
+            rows, mat, _ROW_TIMES_MAT_T,
             precision=jax.lax.Precision.HIGHEST,
             preferred_element_type=dtype)
 
     def round_body(read_ref, write_ref):
-        theta_self = read_ref[pl.ds(self_idx_ref[j], 1), :]      # [1, D]
+        theta_self = read_ref[pl.ds(self_idx_ref[j] * dy, dy), :]  # [Dy, D]
         acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
         for k in range(num_slots):                               # K unroll
-            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+            theta_k = read_ref[pl.ds(nbr_idx_ref[j, k] * dy, dy), :]
             mask_k = nbr_mask_ref[j, k].astype(dtype)
             acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ
         new = row_times(acc, g_ref[0])                           # F(θ)_j
         resid = new - theta_self
-        p_new = resid + beta_ref[r] * delta_ref[pl.ds(j, 1), :]
+        p_new = resid + beta_ref[r] * delta_ref[pl.ds(j * dy, dy), :]
         th_new = theta_self + alpha_ref[r] * p_new
-        write_ref[pl.ds(self_idx_ref[j], 1), :] = th_new
-        delta_ref[pl.ds(j, 1), :] = p_new
+        write_ref[pl.ds(self_idx_ref[j] * dy, dy), :] = th_new
+        delta_ref[pl.ds(j * dy, dy), :] = p_new
         out_theta_ref[...] = th_new
         out_delta_ref[...] = p_new
 
@@ -470,22 +497,25 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                             delta: jax.Array, nbr_idx: jax.Array,
                             self_idx: jax.Array, nbr_mask: jax.Array,
                             alphas: jax.Array, betas: jax.Array, *,
-                            interpret: bool = False
+                            dy: int = 1, interpret: bool = False
                             ) -> tuple[jax.Array, jax.Array]:
-    """Raw pallas_call. Same operand contract as `dekrr_solve_pallas`,
-    plus delta [J', D] (J' ≥ J a multiple of 8, row j = node j's
-    direction state p) and the [R] float (α, β) schedule with R ≥ 1
-    static. Returns the (θ rows [J, D], p rows [J, D]) after R
-    Chebyshev rounds.
+    """Raw pallas_call. Same operand contract as `dekrr_solve_pallas`
+    (Dy-flattened θ/d rows when dy > 1), plus delta [J'·Dy, D] (J' ≥ J,
+    J'·Dy a multiple of 8, rows [j·Dy, (j+1)·Dy) = node j's direction
+    state p) and the [R] float (α, β) schedule with R ≥ 1 static.
+    Returns the (θ rows [J·Dy, D], p rows [J·Dy, D]) after R Chebyshev
+    rounds.
     """
-    j_nodes, d_feat = d.shape
+    j_nodes = d.shape[0] // dy
+    d_feat = d.shape[1]
     k_slots = p.shape[1]
     t_rows = theta.shape[0]
     j_rows = delta.shape[0]
     num_rounds = alphas.shape[0]
+    assert d.shape[0] % dy == 0, (d.shape, dy)
     assert d_feat % 128 == 0 and t_rows % 8 == 0 and j_rows % 8 == 0, \
         (d_feat, t_rows, j_rows)
-    assert j_rows >= j_nodes, (j_rows, j_nodes)
+    assert j_rows >= j_nodes * dy, (j_rows, j_nodes, dy)
     assert alphas.shape == betas.shape, (alphas.shape, betas.shape)
     assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
     assert num_rounds >= 1, "schedule must cover >= 1 round"
@@ -497,14 +527,14 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             pl.BlockSpec((t_rows, d_feat), lambda r, j, *_: (0, 0)),  # θ0
             pl.BlockSpec((j_rows, d_feat), lambda r, j, *_: (0, 0)),  # Δ0
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
             pl.BlockSpec((1, d_feat, d_feat), lambda r, j, *_: (j, 0, 0)),
             pl.BlockSpec((1, k_slots, d_feat, d_feat),
                          lambda r, j, *_: (j, 0, 0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # θ
-            pl.BlockSpec((1, d_feat), lambda r, j, *_: (j, 0)),       # Δ
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # θ
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # Δ
         ),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
@@ -512,19 +542,20 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             pltpu.VMEM((j_rows, d_feat), theta.dtype),   # Δ table
         ],
     )
-    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
         _dekrr_cheb_solve_kernel,
         grid_spec=grid_spec,
         out_shape=(
-            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
-            jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
+            jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
         ),
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=((t_rows + j_rows) * d_feat
                             + num_rounds * j_nodes
-                            * ((3 + k_slots) * d_feat * d_feat + d_feat)
+                            * ((3 + k_slots) * d_feat * d_feat
+                               + dy * d_feat)
                             ) * theta.dtype.itemsize,
             transcendentals=0,
         ),
@@ -533,20 +564,26 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
       g, d, s, p)
 
 
-@functools.partial(jax.jit, static_argnames=("num_rounds", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("num_rounds", "dy", "interpret"))
 def dekrr_solve_reference(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
-                          *, num_rounds: int, interpret: bool = False):
+                          *, num_rounds: int, dy: int = 1,
+                          interpret: bool = False):
     """Pure-jnp oracle with the raw kernel's exact contract: scan the
     single-round oracle, scattering each round's new rows back into the
     θ table at `self_idx` (rows owned by no node stay at θ0) — what
     `tests/test_kernels_dekrr_solve.py` pins the kernel against before
     any repro.dist plumbing is involved."""
     del interpret
+    if dy == 1:
+        rows = self_idx
+    else:
+        rows = (self_idx[:, None] * dy + jnp.arange(dy)).reshape(-1)
 
     def one_round(table, _):
         new = dekrr_step_reference(g, d, s, p, table, nbr_idx, self_idx,
-                                   nbr_mask)
-        return table.at[self_idx].set(new), None
+                                   nbr_mask, dy=dy)
+        return table.at[rows].set(new), None
 
     table, _ = jax.lax.scan(one_round, theta, None, length=num_rounds)
-    return table[self_idx]
+    return table[rows]

@@ -39,9 +39,18 @@ belt-and-braces. Vectors are kept as [1, D] rows and every product is a
 dot_general contracting the matrix's second axis (computing (M v)ᵀ without
 materializing any transpose).
 
-VMEM working set per step: T·D (θ) + (2 + K)·D² (G, S, P) + 3·D (d, acc,
-out) floats — for the paper's D ≤ 512, K = 4 at f32 that is ~6.3 MB, within
-the 16 MB/core budget. This formula is executable as
+Multi-output targets (Dy > 1) keep the same kernel: θ tables and d/out
+rows arrive *flattened* along the sublane axis as [T·Dy, D] / [J·Dy, D],
+with table row t owning the Dy consecutive rows [t·Dy, (t+1)·Dy) (θᵀ for
+that node, laid out [Dy, D]). The kernel derives Dy from the d block's
+sublane extent and scales every dynamic row read by it; at Dy = 1 the
+index arithmetic degenerates to the scalar kernel's and the trace is
+unchanged. A [Dy, D] row block through the same dot_generals is exactly
+the per-output loop batched on the free axis — no arithmetic changes.
+
+VMEM working set per step: T·D (θ, Dy folded into T) + (2 + K)·D²
+(G, S, P) + 3·D·Dy (d, acc, out) floats — for the paper's D ≤ 512, K = 4
+at f32 that is ~6.3 MB, within the 16 MB/core budget. This formula is executable as
 `repro.analysis.vmem.estimate_dekrr_step` (the consolidated table for all
 four kernels lives in that module's docstring); the `ops.dekrr_step`
 wrapper checks it before dispatch and raises `VmemBudgetError` on
@@ -70,24 +79,27 @@ _ROW_TIMES_MAT_T = (((1,), (1,)), ((), ()))
 
 def _eq19_update(j, nbr_idx_ref, self_idx_ref, nbr_mask_ref,
                  theta_ref, g_ref, d_ref, s_ref, p_ref):
-    """Node j's Eq. 19 update as a [1, D] row — the arithmetic shared by
-    the unmasked and activation-masked round kernels (one body, so the
-    masked variant's active branch can never drift from the synchronous
-    kernel it must reproduce bit-for-bit at full activation)."""
+    """Node j's Eq. 19 update as a [Dy, D] row block — the arithmetic
+    shared by the unmasked and activation-masked round kernels (one body,
+    so the masked variant's active branch can never drift from the
+    synchronous kernel it must reproduce bit-for-bit at full activation).
+    Dy is the d block's sublane extent (1 for scalar targets); θ-table
+    row t lives at flat rows [t·Dy, (t+1)·Dy)."""
     num_slots = nbr_idx_ref.shape[1]
+    dy = d_ref.shape[0]
     dtype = theta_ref.dtype
 
-    def row_times(row, mat):
-        # row [1, D] · mat [D', D]ᵀ → [1, D'] == (mat @ row.T).T
+    def row_times(rows, mat):
+        # rows [Dy, D] · mat [D', D]ᵀ → [Dy, D'] == (mat @ rows.T).T
         return jax.lax.dot_general(
-            row, mat, _ROW_TIMES_MAT_T,
+            rows, mat, _ROW_TIMES_MAT_T,
             precision=jax.lax.Precision.HIGHEST,
             preferred_element_type=dtype)
 
-    theta_self = theta_ref[pl.ds(self_idx_ref[j], 1), :]     # [1, D]
-    acc = d_ref[...] + row_times(theta_self, s_ref[0])       # d + S θ
+    theta_self = theta_ref[pl.ds(self_idx_ref[j] * dy, dy), :]   # [Dy, D]
+    acc = d_ref[...] + row_times(theta_self, s_ref[0])           # d + S θ
     for k in range(num_slots):                               # K static unroll
-        theta_k = theta_ref[pl.ds(nbr_idx_ref[j, k], 1), :]
+        theta_k = theta_ref[pl.ds(nbr_idx_ref[j, k] * dy, dy), :]
         mask_k = nbr_mask_ref[j, k].astype(dtype)
         acc += row_times(theta_k, p_ref[0, k]) * mask_k      # Σ m P θ_nbr
     return row_times(acc, g_ref[0])                          # G (…)
@@ -129,27 +141,32 @@ def _dekrr_step_masked_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
 
     @pl.when(jnp.logical_not(is_active))
     def _passthrough():
-        out_ref[...] = theta_ref[pl.ds(self_idx_ref[j], 1), :]
+        dy = d_ref.shape[0]
+        out_ref[...] = theta_ref[pl.ds(self_idx_ref[j] * dy, dy), :]
 
 
 def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                       p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
                       self_idx: jax.Array, nbr_mask: jax.Array, *,
-                      active: jax.Array | None = None,
+                      active: jax.Array | None = None, dy: int = 1,
                       interpret: bool = False) -> jax.Array:
     """Raw pallas_call. All dims must already be padded/aligned:
 
-      g/s [J, D, D], d [J, D], p [J, K, D, D] with K ≥ 1 and D a multiple
-      of 128; theta [T, D] with T a multiple of 8; nbr_idx [J, K] int32
-      rows into theta; self_idx [J] int32; nbr_mask [J, K] int32.
+      g/s [J, D, D], d [J·Dy, D], p [J, K, D, D] with K ≥ 1 and D a
+      multiple of 128; theta [T·Dy, D] with T·Dy padded to a multiple of
+      8; nbr_idx [J, K] int32 *table* rows (pre-flattening — the kernel
+      scales by Dy); self_idx [J] int32; nbr_mask [J, K] int32.
     ``active`` ([J] int32, optional) selects the activation-masked async
-    kernel: nodes with active[j] == 0 emit their own θ row unchanged.
-    Returns the post-round θ rows, [J, D] (row r for node r — callers with
-    T ≠ J re-assemble their table themselves).
+    kernel: nodes with active[j] == 0 emit their own θ rows unchanged.
+    ``dy`` is the output width (1 = scalar targets, today's layout).
+    Returns the post-round θ rows, [J·Dy, D] (rows [r·Dy, (r+1)·Dy) for
+    node r — callers with T ≠ J re-assemble their table themselves).
     """
-    j_nodes, d_feat = d.shape
+    j_nodes = d.shape[0] // dy
+    d_feat = d.shape[1]
     k_slots = p.shape[1]
     t_rows = theta.shape[0]
+    assert d.shape[0] % dy == 0, (d.shape, dy)
     assert d_feat % 128 == 0 and t_rows % 8 == 0, (d_feat, t_rows)
     assert k_slots >= 1, "pad the slot axis to K >= 1 (zero P blocks)"
 
@@ -164,18 +181,18 @@ def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
         in_specs=[
             pl.BlockSpec((t_rows, d_feat), lambda j, *_: (0, 0)),   # θ table
             pl.BlockSpec((1, d_feat, d_feat), lambda j, *_: (j, 0, 0)),
-            pl.BlockSpec((1, d_feat), lambda j, *_: (j, 0)),
+            pl.BlockSpec((dy, d_feat), lambda j, *_: (j, 0)),
             pl.BlockSpec((1, d_feat, d_feat), lambda j, *_: (j, 0, 0)),
             pl.BlockSpec((1, k_slots, d_feat, d_feat),
                          lambda j, *_: (j, 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, d_feat), lambda j, *_: (j, 0)),
+        out_specs=pl.BlockSpec((dy, d_feat), lambda j, *_: (j, 0)),
     )
-    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat
+    flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((j_nodes, d_feat), theta.dtype),
+        out_shape=jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
         cost_estimate=pl.CostEstimate(
             flops=j_nodes * flops_per_node,
             bytes_accessed=(t_rows * d_feat
@@ -187,27 +204,50 @@ def dekrr_step_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     )(*scalar_args, theta, g, d, s, p)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _table_rows(table: jax.Array, idx: jax.Array, dy: int) -> jax.Array:
+    """Gather the dy consecutive flat rows of each table index: table
+    [T·dy, D] + idx [...] → [..., dy, D] (row block [i·dy, (i+1)·dy) for
+    index i)."""
+    flat = idx[..., None] * dy + jnp.arange(dy)
+    return table[flat]
+
+
+@functools.partial(jax.jit, static_argnames=("dy", "interpret"))
 def dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
-                         *, interpret: bool = False):
+                         *, dy: int = 1, interpret: bool = False):
     """Pure-jnp oracle with the raw kernel's exact contract (padded shapes,
-    θ-table indirection) — what `tests/test_kernels_dekrr_step.py` pins the
-    kernel against before any repro.dist plumbing is involved."""
+    θ-table indirection, Dy-flattened rows) — what
+    `tests/test_kernels_dekrr_step.py` pins the kernel against before any
+    repro.dist plumbing is involved."""
     del interpret
-    nbr_theta = theta[nbr_idx]                        # [J, K, D]
-    coupled = jnp.einsum("jkab,jkb->ja", p,
-                         nbr_theta * nbr_mask[..., None].astype(theta.dtype))
-    own = jnp.einsum("jab,jb->ja", s, theta[self_idx])
-    return jnp.einsum("jab,jb->ja", g, d + own + coupled)
+    if dy == 1:
+        nbr_theta = theta[nbr_idx]                    # [J, K, D]
+        coupled = jnp.einsum(
+            "jkab,jkb->ja", p,
+            nbr_theta * nbr_mask[..., None].astype(theta.dtype))
+        own = jnp.einsum("jab,jb->ja", s, theta[self_idx])
+        return jnp.einsum("jab,jb->ja", g, d + own + coupled)
+    nbr_theta = _table_rows(theta, nbr_idx, dy)       # [J, K, Dy, D]
+    coupled = jnp.einsum(
+        "jkab,jkob->joa", p,
+        nbr_theta * nbr_mask[..., None, None].astype(theta.dtype))
+    own = jnp.einsum("jab,job->joa", s, _table_rows(theta, self_idx, dy))
+    d3 = d.reshape(-1, dy, d.shape[1])                # [J, Dy, D]
+    out = jnp.einsum("jab,job->joa", g, d3 + own + coupled)
+    return out.reshape(-1, d.shape[1])
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("dy", "interpret"))
 def dekrr_step_masked_reference(g, d, s, p, theta, nbr_idx, self_idx,
-                                nbr_mask, active, *,
+                                nbr_mask, active, *, dy: int = 1,
                                 interpret: bool = False):
     """Pure-jnp oracle for the activation-masked kernel: nodes with
-    active == 0 return their own θ-table row unchanged; active nodes run
+    active == 0 return their own θ-table rows unchanged; active nodes run
     the unmasked oracle's arithmetic."""
     new = dekrr_step_reference(g, d, s, p, theta, nbr_idx, self_idx,
-                               nbr_mask, interpret=interpret)
-    return jnp.where((active != 0)[:, None], new, theta[self_idx])
+                               nbr_mask, dy=dy, interpret=interpret)
+    if dy == 1:
+        return jnp.where((active != 0)[:, None], new, theta[self_idx])
+    own = _table_rows(theta, self_idx, dy).reshape(new.shape)
+    gate = jnp.repeat(active != 0, dy)[:, None]
+    return jnp.where(gate, new, own)

@@ -24,7 +24,8 @@ from repro.analysis.vmem import (check_index_table,
                                  estimate_dekrr_async_solve,
                                  estimate_dekrr_cheb_solve,
                                  estimate_dekrr_solve, estimate_dekrr_step,
-                                 estimate_flash_decode, estimate_rff_gram)
+                                 estimate_flash_decode,
+                                 estimate_rff_features, estimate_rff_gram)
 from repro.core.rff import FeatureMap
 from repro.kernels.dekrr_solve import (dekrr_async_solve_pallas,
                                        dekrr_cheb_solve_pallas,
@@ -42,29 +43,59 @@ def _pad_dim(n: int, multiple: int) -> int:
     return max(multiple, -(-int(n) // multiple) * multiple)
 
 
+def _dekrr_dy(d) -> int:
+    """Output width Dy of a DeKRR operand set: d/theta are [.., D] for
+    scalar targets or [.., D, Dy] for multi-output."""
+    return 1 if d.ndim == 2 else int(d.shape[2])
+
+
+def _flatten_dy(a: jax.Array) -> jax.Array:
+    """[T, D, Dy] → [T·Dy, D] flat-row layout (table row t owns the Dy
+    consecutive rows [t·Dy, (t+1)·Dy), i.e. that node's θᵀ); identity for
+    2-D scalar-target operands so the Dy = 1 trace is unchanged."""
+    if a.ndim == 2:
+        return a
+    t, d_feat, dy = a.shape
+    return a.transpose(0, 2, 1).reshape(t * dy, d_feat)
+
+
+def _unflatten_dy(out: jax.Array, dy: int, d_feat: int,
+                  ndim: int = 2) -> jax.Array:
+    """Invert `_flatten_dy` on a kernel output. Scalar-layout operands
+    (ndim == 2) take the exact old [:, :d_feat] slice; trailing-axis
+    operands (ndim == 3) restore [J, d_feat, dy] — even at dy == 1, so a
+    [.., 1] multi-output layout round-trips with its axis intact."""
+    if ndim == 2:
+        return out[:, :d_feat]
+    j_nodes = out.shape[0] // dy
+    return out.reshape(j_nodes, dy, -1)[:, :, :d_feat].transpose(0, 2, 1)
+
+
 def _check_dekrr_budget(kernel: str, d, p, theta) -> None:
     """Static VMEM check at the padded dispatch shapes. Shapes are always
     static (works on tracers), so under jit this runs once at trace time
-    and is free at execution time."""
+    and is free at execution time. Multi-output operands fold Dy into the
+    flattened table/buffer row counts and the per-step vector term."""
+    dy = _dekrr_dy(d)
     d_pad = _pad_dim(d.shape[1], 128)
-    t_pad = _pad_dim(theta.shape[0], 8)
+    t_pad = _pad_dim(theta.shape[0] * dy, 8)
     k_pad = max(int(p.shape[1]), 1)
-    j_pad = _pad_dim(d.shape[0], 8)
+    j_pad = _pad_dim(d.shape[0] * dy, 8)
     size = jnp.dtype(d.dtype).itemsize
     if kernel == "dekrr_step":
         est = estimate_dekrr_step(t_rows=t_pad, d_feat=d_pad,
-                                  k_slots=k_pad, itemsize=size)
+                                  k_slots=k_pad, itemsize=size, dy=dy)
     elif kernel == "dekrr_solve":
         est = estimate_dekrr_solve(t_rows=t_pad, d_feat=d_pad,
-                                   k_slots=k_pad, itemsize=size)
+                                   k_slots=k_pad, itemsize=size, dy=dy)
     elif kernel == "dekrr_async_solve":
         est = estimate_dekrr_async_solve(
-            t_rows=t_pad, b_rows=_pad_dim(d.shape[0] * k_pad, 8),
-            d_feat=d_pad, k_slots=k_pad, itemsize=size)
+            t_rows=t_pad, b_rows=_pad_dim(d.shape[0] * k_pad * dy, 8),
+            d_feat=d_pad, k_slots=k_pad, itemsize=size, dy=dy)
     elif kernel == "dekrr_cheb_solve":
         est = estimate_dekrr_cheb_solve(t_rows=t_pad, j_rows=j_pad,
                                         d_feat=d_pad, k_slots=k_pad,
-                                        itemsize=size)
+                                        itemsize=size, dy=dy)
     else:  # pragma: no cover - programming error
         raise ValueError(f"unknown DeKRR kernel {kernel!r}")
     est.check()
@@ -135,7 +166,13 @@ def rff_gram(omega: jax.Array, bias: jax.Array, x: jax.Array, y: jax.Array,
 def rff_features(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
                  scale: float, block_d: int = 256, block_n: int = 512,
                  interpret: bool | None = None) -> jax.Array:
-    """Fused Z = scale·cos(Ω X + b): omega [D, d], x [d, N] → Z [D, N]."""
+    """Fused Z = scale·cos(Ω X + b): omega [D, d], x [d, N] → Z [D, N].
+
+    The serving path's featurize kernel: its tiled working set
+    (`Bd·d + Bd + d·Bn + Bd·Bn` elements) is checked against the VMEM
+    budget before dispatch — over-budget tilings raise `VmemBudgetError`
+    instead of a Mosaic allocation crash (`estimate_rff_features`).
+    """
     if interpret is None:
         interpret = _interpret_default()
     d_feat, n = omega.shape[0], x.shape[1]
@@ -143,6 +180,9 @@ def rff_features(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
 
     bd = min(block_d, max(8, 1 << (d_feat - 1).bit_length()))
     bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    estimate_rff_features(block_d=bd, d_in=_pad_dim(omega.shape[1], 128),
+                          block_n=bn,
+                          itemsize=jnp.dtype(dtype).itemsize).check()
     omega_p = _pad_to(_pad_to(omega, 0, bd), 1, 128).astype(dtype)
     bias_p = _pad_to(bias.reshape(-1, 1), 0, bd).astype(dtype)
     x_p = _pad_to(_pad_to(x, 0, 128), 1, bn)
@@ -198,18 +238,20 @@ def _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask):
     """Shared operand padding for the DeKRR round/solve kernels: D to lane
     multiples of 128, the θ table to sublane multiples of 8, the slot axis
     to K ≥ 1 (an all-masked zero-P slot for edgeless graphs), index/mask
-    tables coerced to int32. One helper so `dekrr_step` and `dekrr_solve`
-    can never drift apart on the operand layout."""
+    tables coerced to int32. Multi-output d/theta ([.., D, Dy]) are first
+    flattened to the kernels' [rows·Dy, D] layout (identity at Dy = 1).
+    One helper so `dekrr_step` and `dekrr_solve` can never drift apart on
+    the operand layout."""
     j_nodes = d.shape[0]
     g_p = _pad_to(_pad_to(g, 1, 128), 2, 128)
     s_p = _pad_to(_pad_to(s, 1, 128), 2, 128)
-    d_p = _pad_to(d, 1, 128)
+    d_p = _pad_to(_flatten_dy(d), 1, 128)
     p_p = _pad_to(_pad_to(p, 2, 128), 3, 128)
     if p_p.shape[1] == 0:                       # K = 0 (edgeless graph)
         p_p = jnp.zeros((j_nodes, 1) + p_p.shape[2:], p_p.dtype)
         nbr_idx = jnp.zeros((j_nodes, 1), jnp.int32)
         nbr_mask = jnp.zeros((j_nodes, 1), jnp.int32)
-    theta_p = _pad_to(_pad_to(theta, 1, 128), 0, 8)
+    theta_p = _pad_to(_pad_to(_flatten_dy(theta), 1, 128), 0, 8)
     return (g_p, d_p, s_p, p_p, theta_p, nbr_idx.astype(jnp.int32),
             (nbr_mask != 0).astype(jnp.int32))
 
@@ -220,6 +262,7 @@ def _dekrr_step_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
     if interpret is None:
         interpret = _interpret_default()
     d_feat = d.shape[1]
+    dy = _dekrr_dy(d)
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
@@ -227,8 +270,8 @@ def _dekrr_step_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
     out = dekrr_step_pallas(
         g_p, d_p, s_p, p_p, theta_p,
         nbr_idx_p, self_idx.astype(jnp.int32), nbr_mask_p,
-        active=active_p, interpret=interpret)
-    return out[:, :d_feat]
+        active=active_p, dy=dy, interpret=interpret)
+    return _unflatten_dy(out, dy, d_feat, d.ndim)
 
 
 def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
@@ -239,7 +282,10 @@ def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
 
     g/s [J, D, D], d [J, D], p [J, K, D, D], theta [T, D] (θ table),
     nbr_idx [J, K] / self_idx [J] rows into the table, nbr_mask [J, K]
-    (any dtype; nonzero = live slot) → [J, D].
+    (any dtype; nonzero = live slot) → [J, D]. Multi-output targets add
+    a trailing axis: d [J, D, Dy] / theta [T, D, Dy] → [J, D, Dy]
+    (internally flattened to the kernel's [rows·Dy, D] layout; the Dy = 1
+    trace is today's scalar path, bit-for-bit).
 
     ``active`` ([J], any dtype, optional) runs the activation-masked async
     variant: nodes with active[j] == 0 return their θ-table row unchanged
@@ -270,6 +316,7 @@ def _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask, *,
     if interpret is None:
         interpret = _interpret_default()
     d_feat = d.shape[1]
+    dy = _dekrr_dy(d)
     self_idx = self_idx.astype(jnp.int32)
     if num_rounds == 0:
         return theta[self_idx]
@@ -278,8 +325,8 @@ def _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask, *,
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
     out = dekrr_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, self_idx, nbr_mask_p,
-        num_rounds=num_rounds, interpret=interpret)
-    return out[:, :d_feat]
+        num_rounds=num_rounds, dy=dy, interpret=interpret)
+    return _unflatten_dy(out, dy, d_feat, d.ndim)
 
 
 def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
@@ -295,6 +342,7 @@ def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     rows into the table, nbr_mask [J, K] — plus static `num_rounds`.
     Returns the [J, D] θ rows after the last round; table rows owned by
     no node stay at their θ0 values throughout (oracle semantics).
+    Multi-output: d [J, D, Dy] / theta [T, D, Dy] → [J, D, Dy].
 
     Pads exactly like `dekrr_step` (D to 128 lanes, table to 8 sublanes,
     slot axis to K ≥ 1) and slices the padding back off; `num_rounds=0`
@@ -340,24 +388,37 @@ def _dekrr_async_solve_jit(g, d, s, p, theta, sent, buffers, nbr_idx,
                            censored, interpret=None):
     if interpret is None:
         interpret = _interpret_default()
-    j_nodes, d_feat = d.shape
+    j_nodes, d_feat = d.shape[0], d.shape[1]
+    dy = _dekrr_dy(d)
     k_in = buffers.shape[1]
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
     k_pad = p_p.shape[1]
-    sent_p = _pad_to(_pad_to(sent, 1, 128), 0, 8)
-    buf = buffers if k_in else jnp.zeros((j_nodes, k_pad, d_feat),
-                                         buffers.dtype)
-    buf_p = _pad_to(_pad_to(buf.reshape(j_nodes * k_pad, d_feat), 1, 128),
-                    0, 8)
+    sent_p = _pad_to(_pad_to(_flatten_dy(sent), 1, 128), 0, 8)
+    if k_in:
+        buf = buffers
+    else:
+        tail = (d_feat,) if d.ndim == 2 else (d_feat, dy)
+        buf = jnp.zeros((j_nodes, k_pad) + tail, buffers.dtype)
+    if buf.ndim == 3:
+        buf_flat = buf.reshape(j_nodes * k_pad, d_feat)
+    else:
+        buf_flat = buf.transpose(0, 1, 3, 2).reshape(
+            j_nodes * k_pad * dy, d_feat)
+    buf_p = _pad_to(_pad_to(buf_flat, 1, 128), 0, 8)
     out_theta, out_sent, out_buf = dekrr_async_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, sent_p, buf_p, nbr_idx_p, nbr_mask_p,
         (active_tab != 0).astype(jnp.int32), thresholds.astype(d.dtype),
-        censored=censored, edge_gossip=(gossip == "edge"),
+        censored=censored, edge_gossip=(gossip == "edge"), dy=dy,
         interpret=interpret)
-    out_buf = out_buf.reshape(j_nodes, k_pad, -1)[:, :k_in, :d_feat]
-    return out_theta[:, :d_feat], out_sent[:, :d_feat], out_buf
+    if d.ndim == 2:
+        out_buf = out_buf.reshape(j_nodes, k_pad, -1)[:, :k_in, :d_feat]
+    else:
+        out_buf = out_buf.reshape(j_nodes, k_pad, dy, -1)[
+            :, :k_in, :, :d_feat].transpose(0, 1, 3, 2)
+    return (_unflatten_dy(out_theta, dy, d_feat, d.ndim),
+            _unflatten_dy(out_sent, dy, d_feat, d.ndim), out_buf)
 
 
 def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
@@ -384,6 +445,9 @@ def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
     Returns the post-schedule (theta [J, D], sent [J, D],
     buffers [J, K, D]) — exactly the `AsyncGossipState` fields, so chunked
     callers chain bit-exactly. R = 0 returns the state unchanged.
+    Multi-output: d/theta/sent gain a trailing Dy axis and buffers become
+    [J, K, D, Dy]; the in-kernel censor reduction runs over features AND
+    outputs, matching `repro.dist.async_gossip`.
 
     The in-kernel round replays `repro.dist.async_gossip._async_round`'s
     operation sequence, so the chain is bit-for-bit the scanned per-round
@@ -412,16 +476,18 @@ def _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx, self_idx,
     if interpret is None:
         interpret = _interpret_default()
     d_feat = d.shape[1]
+    dy = _dekrr_dy(d)
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
-    delta_p = _pad_to(_pad_to(delta, 1, 128), 0, 8)
+    delta_p = _pad_to(_pad_to(_flatten_dy(delta), 1, 128), 0, 8)
     out_theta, out_delta = dekrr_cheb_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, delta_p, nbr_idx_p,
         self_idx.astype(jnp.int32), nbr_mask_p,
-        alphas.astype(d.dtype), betas.astype(d.dtype),
+        alphas.astype(d.dtype), betas.astype(d.dtype), dy=dy,
         interpret=interpret)
-    return out_theta[:, :d_feat], out_delta[:, :d_feat]
+    return (_unflatten_dy(out_theta, dy, d_feat, d.ndim),
+            _unflatten_dy(out_delta, dy, d_feat, d.ndim))
 
 
 def dekrr_cheb_solve(g: jax.Array, d: jax.Array, s: jax.Array,
@@ -441,7 +507,8 @@ def dekrr_cheb_solve(g: jax.Array, d: jax.Array, s: jax.Array,
     `repro.core.acceleration.chebyshev_coefficients` (R static via
     the schedule length). Returns the (θ rows [J, D], p rows [J, D])
     after the schedule, so chunked callers chain bit-exactly; R = 0
-    returns (theta[self_idx], delta) unchanged.
+    returns (theta[self_idx], delta) unchanged. Multi-output:
+    d/theta/delta gain a trailing Dy axis → ([J, D, Dy], [J, D, Dy]).
 
     VMEM working set at the padded shapes is
     `3·T·D + 2·J'·D + 2·(2+K)·D² + 3·D` elements (consolidated table:

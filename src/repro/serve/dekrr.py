@@ -14,6 +14,13 @@ Per wave, for query matrix X ∈ R^{d×Q}:
     f_j(X) = θ_jᵀ Z_j               (the paper's Eq. 1 predictor)
     f(X)   = (1/J) Σ_j f_j(X)       (network-average answer)
 
+θ shape contract: snapshot θ_j is [D_j] for scalar targets (answers are
+scalars / [Q] rows) or [D_j, Dy] for multi-output models (answers are
+[Dy] vectors / [Dy, Q] blocks — θ_jᵀ Z_j with the same amortized
+featurization; Dy only widens the final GEMM). The attached
+`StalenessBound.residual` is the max over features AND outputs, so one
+bound covers every component of a vector answer.
+
 Featurization routes through the fused Pallas kernel
 (`repro.kernels.ops.rff_features`, cos_bias maps) when
 ``backend="pallas"`` — compiled on TPU, interpret-mode on CPU — and
@@ -100,8 +107,10 @@ class DeKRRServeEngine:
         return featurize(fmap, x)
 
     def _answer_wave(self, snap: ServeSnapshot, x: jax.Array) -> np.ndarray:
-        """[J, Q] per-node predictions for one wave of queries."""
-        preds = [theta @ self._features(fmap, x)
+        """Per-node predictions for one wave of queries: [J, Q] for
+        scalar θ, [J, Dy, Q] for multi-output θ [D_j, Dy]."""
+        preds = [theta @ self._features(fmap, x) if theta.ndim == 1
+                 else theta.T @ self._features(fmap, x)
                  for fmap, theta in zip(snap.feature_maps, snap.theta)]
         return np.asarray(jnp.stack(preds))
 
@@ -136,14 +145,19 @@ class DeKRRServeEngine:
                 offset += xq.shape[1]
                 cols.append(xq)
             x = jnp.asarray(np.concatenate(cols, axis=1))
-            preds = self._answer_wave(snap, x)          # [J, Q_wave]
+            preds = self._answer_wave(snap, x)    # [J, Q] or [J, Dy, Q]
             mean = preds.mean(axis=0)
+            multi = preds.ndim == 3
             for q, (start, width) in zip(wave, spans):
                 sl = slice(start, start + width)
-                out = mean[sl] if q.node is None else preds[q.node, sl]
-                q.prediction = float(out[0]) if (width == 1
-                                                 and np.asarray(q.x).ndim
-                                                 == 1) else out
+                out = mean[..., sl] if q.node is None \
+                    else preds[q.node][..., sl]
+                if width == 1 and np.asarray(q.x).ndim == 1:
+                    # single point: scalar for scalar θ, [Dy] vector for
+                    # multi-output θ
+                    q.prediction = out[:, 0] if multi else float(out[0])
+                else:
+                    q.prediction = out
                 q.staleness = snap.staleness
                 q.done = True
                 finished.append(q)

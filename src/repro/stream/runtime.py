@@ -24,6 +24,14 @@ stream_bench.py` traces the warm-vs-cold rounds-to-tol gap.
 
 `snapshot()` exports an immutable view (feature maps + ragged θ + a
 staleness bound) for the query-serving path (`repro.serve.dekrr`).
+
+θ shape contract. The carried θ mirrors the packed label block
+`packed.d`: `[J, D_max]` for scalar targets, `[J, D_max, Dy]` for
+multi-output streams (node j's live coefficients are `theta[j, :D_j]`,
+one column per output). Every runtime path — warm starts, tol checks,
+`repad_theta` across refreshes, staleness residuals (max|F(θ) − θ| over
+features AND outputs), snapshots — carries the trailing axis through
+unchanged, and a Dy=1 stream is bit-identical to the scalar layout.
 """
 from __future__ import annotations
 
@@ -105,7 +113,10 @@ class StalenessBound:
     residual:        max|F(θ) − θ| of the snapshot θ under the CURRENT
                      packed operator (one extra Eq. 19 round) — the
                      contraction residual; θ is within
-                     residual / (1 − ρ(M)) of the live fixed point.
+                     residual / (1 − ρ(M)) of the live fixed point. For
+                     multi-output θ the max runs over features AND
+                     outputs, so the bound holds for every output column
+                     of every answer simultaneously.
     """
 
     theta_version: int
@@ -166,7 +177,10 @@ class StreamingDeKRR:
         # history on every minibatch would make ingest O(N) instead of
         # the O(D² b) the Woodbury fold delivers.
         self._x = [[np.array(np.asarray(nd.x))] for nd in solver.data]
-        self._y = [[np.array(np.asarray(nd.y)).reshape(-1)]
+        # Multi-output streams keep labels as [N, Dy] rows; scalar streams
+        # keep the flat [N] convention (the Dy=1 pin).
+        self._dy = self.aux.zy.shape[2] if self.aux.zy.ndim == 3 else None
+        self._y = [[self._as_labels(np.asarray(nd.y))]
                    for nd in solver.data]
         self._c_nei = list(solver.c_nei)
         self._c_self_ratio = float(solver.config.c_self_ratio)
@@ -184,6 +198,13 @@ class StreamingDeKRR:
         self._staleness_cache: tuple | None = None
 
     # -- views --------------------------------------------------------------
+    def _as_labels(self, y) -> np.ndarray:
+        """Canonicalize one node's labels: [N] scalar streams,
+        [N, Dy] multi-output streams."""
+        y = np.array(np.asarray(y))
+        return y.reshape(-1) if self._dy is None \
+            else y.reshape(-1, self._dy)
+
     @property
     def num_nodes(self) -> int:
         return self.aux.num_nodes
@@ -224,7 +245,7 @@ class StreamingDeKRR:
         policy; auto-refresh the node's features when it fires."""
         j = int(node)
         xb = np.asarray(xb)
-        yb = np.asarray(yb).reshape(-1)
+        yb = self._as_labels(yb)
         self.aux = _fold(self.aux, j, xb, yb)
         if xb.shape[1]:
             self._x[j].append(xb.astype(self._x[j][0].dtype))
@@ -388,12 +409,17 @@ class StreamingDeKRR:
     def predict(self, x, node: int | None = None) -> jax.Array:
         """f_j(x) for one node, or the network-average prediction, from
         the carried θ (convenience path; the batched serving engine is
-        `repro.serve.dekrr.DeKRRServeEngine`)."""
+        `repro.serve.dekrr.DeKRRServeEngine`). Scalar streams answer [Q];
+        multi-output streams answer [Dy, Q] (one row per output)."""
         x = jnp.asarray(x)
         snap_theta = [self.theta[j, :dj]
                       for j, dj in enumerate(self.aux.node_dims)]
+
+        def f_j(j: int) -> jax.Array:
+            z = featurize(self.feature_maps[j], x)     # [D_j, Q]
+            th = snap_theta[j]
+            return th @ z if th.ndim == 1 else th.T @ z
         if node is not None:
-            return snap_theta[node] @ featurize(self.feature_maps[node], x)
-        preds = [snap_theta[j] @ featurize(self.feature_maps[j], x)
-                 for j in range(self.num_nodes)]
+            return f_j(int(node))
+        preds = [f_j(j) for j in range(self.num_nodes)]
         return jnp.mean(jnp.stack(preds), axis=0)

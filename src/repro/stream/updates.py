@@ -92,7 +92,10 @@ class StreamAux:
       binv: [J, D_max, D_max]    (B_j + ν I)⁻¹, Woodbury-maintained; the
                                  padded diagonal block is the identity
                                  (masked off at materialization).
-      zy:   [J, D_max]           d̃_j = Z_jj Y_jᵀ.
+      zy:   [J, D_max]           d̃_j = Z_jj Y_jᵀ (multi-output streams
+                                 carry [J, D_max, Dy] — one label column
+                                 per output; every other auxiliary is
+                                 features-only and keeps its shape).
       st:   [J, D_max, D_max]    S̃_j.
       pt:   [J, K, D_max, D_max] P̃_{j, nbr_idx[j,k]}.
       theta_mask / nbr_idx / nbr_mask: the packed layout tables
@@ -211,6 +214,12 @@ def init_stream_aux(solver, packed: PackedProblem | None = None
     if getattr(solver, "_gram_fn", None) is not None:
         raise ValueError("repro.stream cannot maintain auxiliaries built "
                          "through a custom gram_fn")
+    if any(getattr(nd, "bags", None) is not None for nd in solver.data):
+        raise ValueError(
+            "repro.stream cannot maintain auxiliaries for "
+            "aggregate-observation (bagged) nodes — a bag couples its "
+            "members through the label term, so a minibatch fold is not "
+            "rank-b in the bagged Gram")
     if packed is None:
         packed = pack_problem(solver)
     dtype = np.asarray(packed.d).dtype
@@ -300,7 +309,12 @@ def _ingest_kernel(binv, zy, st, pt, theta_mask, omega, bias, feat_idx,
     binv = binv.at[idx].add(corr)
 
     zbj, zbn = zb[0], zb[1:]
-    zy = zy.at[idx[0]].add(jnp.einsum("db,b->d", zbj, yb, precision=hi))
+    if zy.ndim == 3:                         # multi-output: yb is [B, Dy]
+        zy = zy.at[idx[0]].add(
+            jnp.einsum("db,bo->do", zbj, yb, precision=hi))
+    else:
+        zy = zy.at[idx[0]].add(
+            jnp.einsum("db,b->d", zbj, yb, precision=hi))
     gram_b = jnp.einsum("ab,cb->ac", zbj, zbj, precision=hi)
     st = st.at[idx[0]].add(u_s_j * gram_b)
     # P̃_{j,k} += u_cross[j]·Z_b,j Z_b,pᵀ ; P̃_{p,rslot} += u_cross[j]·Z_b,p Z_b,jᵀ
@@ -318,15 +332,23 @@ def _bucket(b: int) -> int:
 
 
 def ingest(aux: StreamAux, node: int, xb, yb) -> StreamAux:
-    """Fold minibatch (xb [d, b], yb [b]) arriving at `node` into the
-    stream state — O(deg · D² b) exact rank-b updates, no O(D³) work.
-    Returns a new `StreamAux` (the array state is functional)."""
+    """Fold minibatch (xb [d, b], yb [b] — or [b, Dy] when the stream
+    state carries a multi-output `zy` [J, D_max, Dy]) arriving at `node`
+    into the stream state — O(deg · D² b) exact rank-b updates, no O(D³)
+    work. Returns a new `StreamAux` (the array state is functional)."""
     j = int(node)
     if not 0 <= j < aux.num_nodes:
         raise ValueError(f"node {j} out of range for J={aux.num_nodes}")
     dtype = aux.zy.dtype
     xb = np.asarray(xb, dtype=dtype)
-    yb = np.asarray(yb, dtype=dtype).reshape(-1)
+    if aux.zy.ndim == 3:
+        dy = aux.zy.shape[2]
+        yb = np.asarray(yb, dtype=dtype)
+        if yb.ndim != 2 or yb.shape[1] != dy:
+            raise ValueError(f"multi-output stream (Dy={dy}) needs "
+                             f"y [b, {dy}]; got {yb.shape}")
+    else:
+        yb = np.asarray(yb, dtype=dtype).reshape(-1)
     if xb.ndim != 2 or xb.shape[1] != yb.shape[0]:
         raise ValueError(f"minibatch must be x [d, b], y [b]; got "
                          f"{xb.shape} / {yb.shape}")
@@ -336,7 +358,7 @@ def ingest(aux: StreamAux, node: int, xb, yb) -> StreamAux:
     bb = _bucket(b)
     col_mask = (np.arange(bb) < b).astype(dtype)
     xb = np.pad(xb, ((0, 0), (0, bb - b)))
-    yb = np.pad(yb, (0, bb - b))
+    yb = np.pad(yb, ((0, bb - b),) + ((0, 0),) * (yb.ndim - 1))
 
     idx_t, gate_t, cvec_t = aux.ingest_tables      # host-side, no syncs
 
@@ -431,14 +453,21 @@ def refresh_node(aux: StreamAux, node: int, new_fmap: FeatureMap,
         return _packed_featurize(omega[i], bias[i], feat_idx[i], fmask[i],
                                  scale[i], x, ones, aux.kind)
 
-    y_j = jnp.asarray(np.asarray(data_y, dtype=dtype).reshape(-1))
+    if aux.zy.ndim == 3:                    # multi-output: y_j is [N, Dy]
+        y_j = jnp.asarray(np.asarray(data_y, dtype=dtype)
+                          .reshape(-1, aux.zy.shape[2]))
+    else:
+        y_j = jnp.asarray(np.asarray(data_y, dtype=dtype).reshape(-1))
     z_self = feats(j, data_x[j])                       # [D', N_j]
     u_self = aux.u_self[j]
     u_cross = aux.u_cross
     gram_self = jnp.einsum("an,bn->ab", z_self, z_self, precision=hi)
 
     b_new = u_self * gram_self
-    zy_new = jnp.einsum("dn,n->d", z_self, y_j, precision=hi)
+    if y_j.ndim == 2:
+        zy_new = jnp.einsum("dn,no->do", z_self, y_j, precision=hi)
+    else:
+        zy_new = jnp.einsum("dn,n->d", z_self, y_j, precision=hi)
     st_new = aux.u_s[j] * gram_self
 
     nbr_row = np.asarray(aux.nbr_idx[j])
@@ -516,7 +545,8 @@ def repad_theta(theta, old_dims: Sequence[int], new_dims: Sequence[int],
 
     Rows in `reset` (the refreshed nodes — their θ lives in the OLD
     feature basis) restart from zero; every other row re-pads into the
-    new [J, max(new_dims)] layout. A non-reset row whose D_j shrank is a
+    new [J, max(new_dims)] layout (multi-output θ [J, max(old_dims), Dy]
+    keeps its trailing Dy axis). A non-reset row whose D_j shrank is a
     stale iterate and raises — truncating it would silently drop live
     coordinates.
     """
@@ -525,13 +555,15 @@ def repad_theta(theta, old_dims: Sequence[int], new_dims: Sequence[int],
     if len(old_dims) != len(new_dims):
         raise ValueError("node count cannot change across a refresh")
     theta = np.asarray(theta)
-    if theta.shape != (len(old_dims), max(old_dims)):
+    lead = (len(old_dims), max(old_dims))
+    if theta.shape[:2] != lead or theta.ndim not in (2, 3):
         raise ValueError(
             f"theta has shape {theta.shape} but old_dims describe "
-            f"{(len(old_dims), max(old_dims))} — pass the θ that belongs "
-            f"to the OLD packing")
+            f"{lead} (+ an optional trailing Dy axis) — pass the θ that "
+            f"belongs to the OLD packing")
     reset = {int(r) for r in reset}
-    out = np.zeros((len(new_dims), max(new_dims)), dtype=theta.dtype)
+    out = np.zeros((len(new_dims), max(new_dims)) + theta.shape[2:],
+                   dtype=theta.dtype)
     for i, (do, dn) in enumerate(zip(old_dims, new_dims)):
         if i in reset:
             continue

@@ -1,0 +1,246 @@
+"""Multi-output (Dy) conformance web + aggregate-observation satellites.
+
+The Eq. 17 auxiliaries are label-free, so a Dy-output problem is the SAME
+linear Eq. 19 iteration per output column — which gives two independent
+oracles the fused Dy-batched runtimes must match at rtol 1e-9 under x64:
+
+* the Dy=1 pin: a [N, 1] trailing-axis problem takes the multi-output
+  code paths but must reproduce the scalar [N] layout exactly, on every
+  backend × sync/async × tol∈{0, >0};
+* the per-output loop: a Dy>1 solve must equal Dy scalar solves of the
+  column-sliced problems, stacked — over {circulant, star, Erdős–Rényi,
+  J=1} × Dy∈{1, 3, 8} and all three backends, plus async gossip and
+  Chebyshev acceleration.
+
+Satellites pinned here: `pack_theta`/`unpack_theta` reject a θ whose
+output width disagrees with the packing (regression for the silent
+reshape-scramble), and singleton bags (ids 0…N_j−1) reproduce the
+un-bagged reference build exactly (Agg = identity).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeKRRConfig, DeKRRSolver, circulant, erdos_renyi, star
+from repro.core.acceleration import (chebyshev_solve_packed,
+                                     estimate_spectral_interval)
+from repro.core.dekrr import NodeData
+from repro.core.graph import Topology
+from repro.core.rff import sample_rff
+from repro.dist import (pack_problem, pack_theta, solve_batched,
+                        unpack_theta)
+from repro.dist.async_gossip import async_solve_batched
+
+BACKENDS = ("xla", "pallas", "pallas_fused")
+ROUNDS = 20
+
+
+def _single_node_topology():
+    return Topology(adjacency=np.zeros((1, 1), dtype=bool))
+
+
+TOPOLOGIES = {
+    "circulant": lambda: circulant(4, (1,)),
+    "star": lambda: star(4),
+    "er": lambda: erdos_renyi(5, 0.6, seed=2),
+    "single": _single_node_topology,
+}
+
+
+def _solver(topo, ys, seed=0):
+    """Random-data solver; `ys` is the per-node label list (any target
+    shape — parity is exact algebra, so tiny random problems lose
+    nothing)."""
+    j_nodes = topo.num_nodes
+    rng = np.random.default_rng(seed)
+    fmaps = [sample_rff(jax.random.PRNGKey(seed + j), 3, 6 + 2 * j, 1.0)
+             for j in range(j_nodes)]
+    data = [NodeData(x=jnp.asarray(rng.normal(size=(3, y.shape[0]))),
+                     y=jnp.asarray(y))
+            for y in ys]
+    return DeKRRSolver(topo, fmaps, data,
+                       DeKRRConfig(lam=0.2, c_nei=1.0))
+
+
+@functools.lru_cache(maxsize=None)
+def _packs(topo_name: str, dy: int, seed: int = 0):
+    """(multi-output pack, per-output scalar packs) on identical data."""
+    topo = TOPOLOGIES[topo_name]()
+    rng = np.random.default_rng(100 + seed)
+    ys = [rng.normal(size=(10 + j, dy)) for j in range(topo.num_nodes)]
+    multi = pack_problem(_solver(topo, ys, seed=seed))
+    scalars = tuple(
+        pack_problem(_solver(topo, [y[:, o] for y in ys], seed=seed))
+        for o in range(dy))
+    return multi, scalars
+
+
+# --------------------------------------------------------------------------
+# Dy=1 pin: the trailing-axis layout reproduces the scalar layout
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("gossip", ["sync", "async"])
+@pytest.mark.parametrize("tol", [0.0, 1e-8])
+def test_dy1_pins_scalar_layout(backend, gossip, tol):
+    multi, (scalar,) = _packs("circulant", 1)
+    assert multi.d.shape == scalar.d.shape + (1,)
+    key = jax.random.PRNGKey(3)
+    if gossip == "sync":
+        th_m = solve_batched(multi, ROUNDS, backend=backend, tol=tol)
+        th_s = solve_batched(scalar, ROUNDS, backend=backend, tol=tol)
+    else:
+        th_m = async_solve_batched(multi, ROUNDS, key, backend=backend,
+                                   tol=tol)
+        th_s = async_solve_batched(scalar, ROUNDS, key, backend=backend,
+                                   tol=tol)
+    assert th_m.shape == th_s.shape + (1,)
+    np.testing.assert_allclose(np.asarray(th_m[..., 0]), np.asarray(th_s),
+                               rtol=1e-9, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# Dy>1: fused Dy-batched solves == per-output scalar loop
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("topo_name", sorted(TOPOLOGIES))
+@pytest.mark.parametrize("dy", [1, 3, 8])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_solve_matches_per_output_loop(topo_name, dy, backend):
+    multi, scalars = _packs(topo_name, dy)
+    assert multi.d.shape[2:] == (dy,) and multi.num_outputs == dy
+    th = solve_batched(multi, ROUNDS, backend=backend)
+    for o, scalar in enumerate(scalars):
+        th_o = solve_batched(scalar, ROUNDS, backend=backend)
+        np.testing.assert_allclose(np.asarray(th[:, :, o]),
+                                   np.asarray(th_o),
+                                   rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_async_matches_per_output_loop(backend):
+    multi, scalars = _packs("circulant", 3)
+    key = jax.random.PRNGKey(11)
+    th = async_solve_batched(multi, ROUNDS, key, backend=backend)
+    for o, scalar in enumerate(scalars):
+        th_o = async_solve_batched(scalar, ROUNDS, key, backend=backend)
+        np.testing.assert_allclose(np.asarray(th[:, :, o]),
+                                   np.asarray(th_o),
+                                   rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_chebyshev_matches_per_output_loop(backend):
+    multi, scalars = _packs("circulant", 3)
+    mu_lo, mu_hi = estimate_spectral_interval(multi, backend="xla")
+    th = chebyshev_solve_packed(multi, mu_hi, mu_lo, ROUNDS,
+                                backend=backend)
+    for o, scalar in enumerate(scalars):
+        th_o = chebyshev_solve_packed(scalar, mu_hi, mu_lo, ROUNDS,
+                                      backend=backend)
+        np.testing.assert_allclose(np.asarray(th[:, :, o]),
+                                   np.asarray(th_o),
+                                   rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tol_stop_reduces_over_outputs(backend):
+    """tol>0 on a Dy problem must stop on max|Δθ| over features AND
+    outputs: the early-stopped θ equals the tol=0 solve run for exactly
+    the rounds the tol path reports."""
+    multi, _ = _packs("circulant", 3)
+    th_t, rounds = solve_batched(multi, 200, backend=backend, tol=1e-6,
+                                 return_rounds=True)
+    rounds = int(rounds)
+    assert 0 < rounds < 200
+    th_0 = solve_batched(multi, rounds, backend=backend)
+    np.testing.assert_allclose(np.asarray(th_t), np.asarray(th_0),
+                               rtol=1e-9, atol=1e-12)
+
+
+# --------------------------------------------------------------------------
+# pack_theta / unpack_theta output-width validation (regression)
+# --------------------------------------------------------------------------
+def test_pack_unpack_theta_dy_mismatch():
+    multi, scalars = _packs("circulant", 3)
+    th = solve_batched(multi, 5)
+    ragged = unpack_theta(multi, th)
+    assert all(t.ndim == 2 and t.shape[1] == 3 for t in ragged)
+    np.testing.assert_array_equal(np.asarray(pack_theta(multi, ragged)),
+                                  np.asarray(th))
+
+    # scalar θ into a Dy=3 packing: rejected, names the output width
+    th_s = solve_batched(scalars[0], 5)
+    with pytest.raises(ValueError, match="Dy"):
+        pack_theta(multi, unpack_theta(scalars[0], th_s))
+    # wrong-Dy θ: reshaping would scramble output columns — rejected
+    with pytest.raises(ValueError, match="Dy"):
+        pack_theta(multi, [t[:, :2] for t in ragged])
+    with pytest.raises(ValueError, match="Dy"):
+        unpack_theta(multi, th[:, :, :2])
+    with pytest.raises(ValueError, match="different packing"):
+        unpack_theta(multi, th[..., 0])
+    # and the mirror image: multi-output θ into a scalar packing
+    with pytest.raises(ValueError, match="scalar"):
+        pack_theta(scalars[0], ragged)
+
+
+# --------------------------------------------------------------------------
+# Aggregate observations: singleton bags == per-sample labels
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dy", [None, 3])
+def test_singleton_bags_match_per_sample(dy):
+    """bags = (0…N_j−1) makes Agg the identity, so the bagged build and
+    solve must reproduce the un-bagged reference exactly — for scalar and
+    multi-output targets alike."""
+    topo = circulant(4, (1,))
+    rng = np.random.default_rng(7)
+    shapes = [(10 + j,) if dy is None else (10 + j, dy)
+              for j in range(topo.num_nodes)]
+    ys = [rng.normal(size=s) for s in shapes]
+    plain = _solver(topo, ys, seed=1)
+    bagged = DeKRRSolver(
+        topo, plain.feature_maps,
+        [NodeData(x=nd.x, y=nd.y,
+                  bags=jnp.arange(nd.num_samples, dtype=jnp.int32))
+         for nd in plain.data],
+        plain.config)
+    for j in range(topo.num_nodes):
+        np.testing.assert_allclose(np.asarray(bagged.aux.g[j]),
+                                   np.asarray(plain.aux.g[j]),
+                                   rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(np.asarray(bagged.aux.d[j]),
+                                   np.asarray(plain.aux.d[j]),
+                                   rtol=1e-9, atol=1e-12)
+    st_b = bagged.solve(num_iters=10)
+    st_p = plain.solve(num_iters=10)
+    for tb, tp in zip(st_b.theta, st_p.theta):
+        np.testing.assert_allclose(np.asarray(tb), np.asarray(tp),
+                                   rtol=1e-9, atol=1e-12)
+
+
+def test_bagged_pack_downgrades_to_aux_build():
+    """Bag aggregation lives in the ragged aux build: `pack_problem` on a
+    bagged solver must downgrade LOUDLY to the aux-based packing (never
+    silently drop the Agg operator) and still agree with the reference
+    iteration."""
+    topo = circulant(4, (1,))
+    rng = np.random.default_rng(9)
+    ys = [rng.normal(size=(4,)) for _ in range(topo.num_nodes)]
+    plain = _solver(topo, ys, seed=2)
+    bagged = DeKRRSolver(
+        topo, plain.feature_maps,
+        [NodeData(x=nd.x,
+                  y=jnp.asarray(rng.normal(size=(2,))),
+                  bags=jnp.asarray(
+                      np.arange(nd.num_samples, dtype=np.int32) % 2))
+         for nd in plain.data],
+        plain.config)
+    with pytest.warns(UserWarning, match="bagged"):
+        packed = pack_problem(bagged)
+    th = unpack_theta(packed, solve_batched(packed, 10))
+    st = bagged.solve(num_iters=10)
+    for tb, tp in zip(th, st.theta):
+        np.testing.assert_allclose(np.asarray(tb), np.asarray(tp),
+                                   rtol=1e-9, atol=1e-12)
