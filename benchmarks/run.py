@@ -26,7 +26,7 @@ def main() -> None:
                             convergence_curve, kernel_bench, multiout_bench,
                             paper_fig1_noniid_y, paper_fig2_noniid_xnorm,
                             paper_fig3_imbalanced, paper_fig4_pernode,
-                            paper_table2, roofline, solve_bench,
+                            paper_table2, roofline, serve_bench, solve_bench,
                             step_kernel_bench, stream_bench)
 
     suites = {
@@ -46,6 +46,7 @@ def main() -> None:
         "async": async_gossip_bench.run,
         "multiout": multiout_bench.run,
         "stream": stream_bench.run,
+        "serve": serve_bench.run,
         "roofline": roofline.run,
         "analysis": analysis_bench.run,
     }

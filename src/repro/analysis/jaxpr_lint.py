@@ -571,7 +571,22 @@ def batched_entry_points() -> list[EntryPoint]:
             cheb_expect[b]))
     eps.append(EntryPoint("ops.dekrr_step", _trace_ops_step, 1))
     eps.append(EntryPoint("ops.dekrr_solve", _trace_ops_solve, 1))
+    eps.append(EntryPoint("ops.rff_features", _trace_ops_rff_features, 1))
     eps.append(EntryPoint("StreamingDeKRR.ingest", _trace_ingest, 0))
+    # Serving answer wave (repro.serve.dekrr.answer_wave) on the tiny
+    # 3-node cos_bias snapshot: xla paths emit no pallas_call; the pallas
+    # paths dispatch one featurize kernel per node (J = 3) on both the
+    # full-precision (rff_features) and bf16 (rff_features_lowp) routes.
+    for backend, precision, pin in (("xla", None, 0), ("pallas", None, 3),
+                                    ("xla", "bf16", 0),
+                                    ("pallas", "bf16", 3)):
+        label = (f"serve.answer_wave[backend={backend}"
+                 + (f",precision={precision}" if precision else "") + "]")
+        eps.append(EntryPoint(
+            label,
+            lambda backend=backend, precision=precision:
+                _trace_serve_wave(backend, precision),
+            pin))
     return eps
 
 
@@ -596,6 +611,38 @@ def _trace_ops_solve():
                                    pk.nbr_idx, self_idx, pk.nbr_mask,
                                    num_rounds=ROUNDS)
     )(packed)
+
+
+def _trace_serve_wave(backend: str, precision: str | None):
+    """Trace one serving answer wave: the staged snapshot's θ/bound
+    constants are concrete (staged once per published version) and the
+    query columns are the tracer — exactly the per-wave split
+    `repro.serve.dekrr._serve_wave` dispatches."""
+    from repro.serve.dekrr import answer_wave, stage_snapshot
+    from repro.stream.runtime import ServeSnapshot, StalenessBound
+
+    solver = _tiny_solver()
+    rng = np.random.default_rng(3)
+    fmaps = tuple(solver.feature_maps)
+    theta = tuple(jnp.asarray(rng.standard_normal(fm.num_features))
+                  for fm in fmaps)
+    snap = ServeSnapshot(feature_maps=fmaps, theta=theta,
+                         staleness=StalenessBound(0, 0, 0, 0.0))
+    st = stage_snapshot(snap, backend=backend, precision=precision)
+    dtype = st.dtype if precision is None else jnp.float32
+    x = jnp.zeros((snap.input_dim, 8), dtype)
+    return jax.make_jaxpr(lambda xx: answer_wave(st, xx))(x)
+
+
+def _trace_ops_rff_features():
+    from repro.kernels import ops
+
+    fm = _tiny_solver().feature_maps[0]
+    x = jnp.zeros((fm.omega.shape[1], 8), fm.omega.dtype)
+    return jax.make_jaxpr(
+        lambda om, b, xx: ops.rff_features(
+            om, b, xx, scale=float(np.sqrt(2.0 / fm.num_frequencies)))
+    )(fm.omega, fm.bias, x)
 
 
 def _trace_ingest():

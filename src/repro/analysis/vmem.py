@@ -28,6 +28,9 @@ reference it:
                                                         Bn=1024 → < 5 MB
   rff_features  Bd·d + Bd + d·Bn + Bd·Bn                Bd=256, d=160,
                                                         Bn=512 → < 1 MB
+  serve_wave    Bd·d + Bd + d·Bn + Bd·Bn                Bd=256, d=160,
+                + dy·D + dy·Bn                          Bn=512, D=2048,
+                                                        dy=2 → < 1 MB
   flash_decode  G·dh + 2·Bs·dh + G·Bs (+ 3·G m/l state) G=8, dh=128, Bs=512
                                                         → < 1 MB
 
@@ -210,6 +213,27 @@ def estimate_rff_features(*, block_d: int, d_in: int, block_n: int,
         formula="Bd*d + Bd + d*Bn + Bd*Bn",
         detail=(f"{block_d}*{d_in} + {block_d} + {d_in}*{block_n} + "
                 f"{block_d}*{block_n} elems @ {size} B"),
+        elements=elements, bytes=elements * size, budget=budget)
+
+
+def estimate_serve_wave(*, block_d: int, d_in: int, block_n: int,
+                        d_feat: int, dy: int = 1, itemsize: int = 4,
+                        budget: int = VMEM_BUDGET_BYTES) -> VmemEstimate:
+    """Serving answer wave (`repro.serve.dekrr`, backend="pallas"): the
+    featurize tiles of `estimate_rff_features` plus the θᵀ GEMV operands
+    kept resident per wave — a [dy, D] θ row block and a [dy, Bn] answer
+    tile. D is the largest padded per-node feature count in the snapshot
+    and Bn the padded (bucketed) query-column count, so one check covers
+    every node of the wave."""
+    size = effective_itemsize(itemsize)
+    elements = (block_d * d_in + block_d + d_in * block_n
+                + block_d * block_n + dy * d_feat + dy * block_n)
+    return VmemEstimate(
+        kernel="serve_wave",
+        formula="Bd*d + Bd + d*Bn + Bd*Bn + dy*D + dy*Bn",
+        detail=(f"{block_d}*{d_in} + {block_d} + {d_in}*{block_n} + "
+                f"{block_d}*{block_n} + {dy}*{d_feat} + {dy}*{block_n} "
+                f"elems @ {size} B"),
         elements=elements, bytes=elements * size, budget=budget)
 
 

@@ -192,6 +192,33 @@ def rff_features(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
     return z[:d_feat, :n]
 
 
+@partial(jax.jit, static_argnames=("scale", "compute_dtype", "block_d",
+                                   "block_n", "interpret"))
+def rff_features_lowp(omega: jax.Array, bias: jax.Array, x: jax.Array, *,
+                      scale: float, compute_dtype: str = "bfloat16",
+                      block_d: int = 256, block_n: int = 512,
+                      interpret: bool | None = None) -> jax.Array:
+    """Low-precision serving featurize: Z = scale·cos(Ω X + b) with the
+    GEMM and cosine evaluated in ``compute_dtype`` (bf16 by default) and
+    the √(2/D) scale applied afterwards in f32.
+
+    This is the mixed-precision serving tier's featurize entry point
+    (`repro.serve.dekrr`, precision="bf16"/"int8"): queries run the
+    feature map at half width while the solve stays x64. Returns Z in
+    float32 regardless of compute dtype; the serving tier's analytic
+    forward-error bound assumes exactly this arrangement (low-precision
+    Ω/b/X/GEMM/cos, f32 scale multiply), so do not fold the scale into
+    the low-precision kernel. Same tiling and VMEM pre-check as
+    `rff_features` — at 2-byte elements the working set is half the f32
+    path's.
+    """
+    cdt = jnp.dtype(compute_dtype)
+    z = rff_features(omega.astype(cdt), bias.astype(cdt), x.astype(cdt),
+                     scale=1.0, block_d=block_d, block_n=block_n,
+                     interpret=interpret)
+    return z.astype(jnp.float32) * jnp.float32(scale)
+
+
 @partial(jax.jit, static_argnames=("block_s", "interpret"))
 def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                  cur_index: jax.Array, *, block_s: int = 512,

@@ -1,4 +1,59 @@
-from repro.serve.dekrr import DeKRRServeEngine, KernelQuery
+"""Serving tier: replicated, latency-accounted, precision-bounded answers.
+
+Architecture map (who talks to whom):
+
+    StreamingDeKRR ──snapshot()──▶ SnapshotRegistry ──latest()──▶ replicas
+      (solver side: ingest/solve    (repro.stream: immutable        │
+       keeps landing — writers      versioned ServeSnapshots,       │
+       never blocked by readers)    atomic tuple publish)           ▼
+                                                          DeKRRReplicaServer
+    queries ──validate(uid)──▶ AdmissionQueue ──take_wave──▶ N replica
+              at admission      (repro.serve.admission:      threads, each:
+                                 FIFO, slot+column budgets,  stage snapshot
+                                 pad_bucket shape reuse)     per version →
+                                                             featurize once
+    LatencyRecorder ◀──record_wave── answered queries ◀───── per node →
+    (p50/p99/qps,                    (owned copies, never     batched GEMVs
+     injectable clock)                wave-shared views)
+
+Three serving shapes share the machinery:
+
+  * `repro.serve.engine.ServeEngine` — the LLM continuous-batching
+    reference engine (token slots, width ≡ 1).
+  * `repro.serve.dekrr.DeKRRServeEngine` — one DeKRR engine over a
+    snapshot source (frozen `ServeSnapshot`, live `StreamingDeKRR`, or a
+    `SnapshotRegistry`), wave-batching variable-width [d, m] queries
+    into power-of-two column buckets.
+  * `repro.serve.dekrr.DeKRRReplicaServer` — N engine replicas (threads)
+    off one registry + one admission queue: the production shape.
+
+StalenessBound contract (extended): every answer carries the snapshot's
+staleness terms (theta_version / ingests_behind / samples_behind /
+residual) AND a `precision` term — 0.0 on full-precision paths; on the
+mixed-precision paths (precision="bf16"/"int8", solve stays x64) it is
+max(analytic forward-error bound for this answer, |f_hi − f_lo| measured
+per wave on a calibration stripe), in answer units, so
+|f_served − f_hi(θ)| ≤ precision holds for EVERY served answer. See
+`repro.stream.runtime.StalenessBound` and the bound derivation in
+`repro.serve.dekrr`.
+"""
+from repro.serve.admission import (Admitted, AdmissionQueue, LatencyRecorder,
+                                   LatencyReport, pad_bucket)
+from repro.serve.dekrr import (DeKRRReplicaServer, DeKRRServeEngine,
+                               KernelQuery, answer_wave, stage_snapshot)
 from repro.serve.engine import Request, ServeEngine
 
-__all__ = ["DeKRRServeEngine", "KernelQuery", "Request", "ServeEngine"]
+__all__ = [
+    "Admitted",
+    "AdmissionQueue",
+    "DeKRRReplicaServer",
+    "DeKRRServeEngine",
+    "KernelQuery",
+    "LatencyRecorder",
+    "LatencyReport",
+    "Request",
+    "ServeEngine",
+    "answer_wave",
+    "pad_bucket",
+    "stage_snapshot",
+]

@@ -1,0 +1,191 @@
+"""Shared admission / batching / latency machinery for the serving tier.
+
+Both engines in this package — the LLM continuous-batching reference
+engine (`repro.serve.engine`) and the DeKRR query tier
+(`repro.serve.dekrr`) — serve a stream of variably-sized requests
+through fixed-size compute waves. This module is the engine-agnostic
+part of that shape:
+
+  * `AdmissionQueue` — a thread-safe FIFO of admitted requests, each
+    carrying a *width* (query columns for DeKRR, 1 for LLM slots) and
+    its admission timestamp. `take_wave(max_slots, max_columns)` pops
+    the next wave under both budgets, so one queue serves slot-bounded
+    engines (LLM: width ≡ 1) and column-bounded ones (DeKRR: a [d, m]
+    block consumes m columns).
+  * `pad_bucket` — the power-of-two padding buckets a wave's column
+    count is rounded up to. Variable-width query streams would otherwise
+    retrace/recompile the jitted wave program per distinct total width;
+    bucketing caps the number of live compiled shapes at
+    O(log(max wave width)).
+  * `LatencyRecorder` / `LatencyReport` — per-request latency accounting
+    with p50/p99 percentiles, not just aggregate qps. The clock is
+    injectable so a seeded load trace produces bit-identical reports
+    (tests/test_serve_tier.py pins this determinism).
+
+Thread-safety contract: `AdmissionQueue` and `LatencyRecorder` may be
+driven from any number of submitter and replica threads; every public
+method holds the instance lock for its whole critical section. Waves are
+FIFO in admission order (a replica never reorders past another request —
+width bucketing pads, it does not reshuffle).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Iterable
+
+import numpy as np
+
+__all__ = [
+    "Admitted",
+    "AdmissionQueue",
+    "LatencyRecorder",
+    "LatencyReport",
+    "pad_bucket",
+]
+
+
+def pad_bucket(n: int, *, min_bucket: int = 8) -> int:
+    """Smallest power-of-two ≥ max(n, min_bucket) — the padded column
+    count a wave of n live query columns is staged at."""
+    n = int(n)
+    if n < 0:
+        raise ValueError(f"bucket size must be >= 0, got {n}")
+    floor = max(int(min_bucket), 1)
+    return max(floor, 1 << (max(n, 1) - 1).bit_length())
+
+
+@dataclasses.dataclass
+class Admitted:
+    """One queue entry: the engine-specific request plus the admission
+    metadata the wave scheduler and latency accounting need."""
+
+    item: Any
+    uid: int
+    width: int
+    t_arrival: float
+
+
+class AdmissionQueue:
+    """Thread-safe FIFO admission queue with slot- and column-budgeted
+    wave formation."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: list[Admitted] = []
+
+    def admit(self, item: Any, *, uid: int, width: int,
+              now: float) -> Admitted:
+        """Enqueue one request of `width` columns admitted at time
+        `now`; returns its queue entry."""
+        if int(width) < 1:
+            raise ValueError(
+                f"request {uid}: width must be >= 1, got {width}")
+        entry = Admitted(item=item, uid=int(uid), width=int(width),
+                         t_arrival=float(now))
+        with self._lock:
+            self._entries.append(entry)
+        return entry
+
+    def take_wave(self, max_slots: int,
+                  max_columns: int | None = None) -> list[Admitted]:
+        """Pop the next wave: up to `max_slots` requests, in FIFO order,
+        whose total width stays within `max_columns` (None = unbounded).
+        A head-of-line request wider than `max_columns` is returned alone
+        (it can never co-batch, but it must not deadlock the queue).
+        Returns [] when the queue is empty."""
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        with self._lock:
+            wave: list[Admitted] = []
+            cols = 0
+            while self._entries and len(wave) < max_slots:
+                nxt = self._entries[0]
+                if (wave and max_columns is not None
+                        and cols + nxt.width > max_columns):
+                    break
+                wave.append(self._entries.pop(0))
+                cols += nxt.width
+            return wave
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def pending_columns(self) -> int:
+        with self._lock:
+            return sum(e.width for e in self._entries)
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyReport:
+    """Latency/throughput summary of one serving run.
+
+    Latency is completion − admission per request (queueing included —
+    the open-loop number a caller actually experiences); `qps` is
+    requests / (last completion − first admission). Percentiles use the
+    linear-interpolation convention of `np.percentile` and are exact
+    deterministic functions of the recorded trace.
+    """
+
+    count: int
+    p50: float
+    p99: float
+    mean: float
+    max: float
+    qps: float
+
+    @staticmethod
+    def empty() -> "LatencyReport":
+        return LatencyReport(count=0, p50=0.0, p99=0.0, mean=0.0, max=0.0,
+                             qps=0.0)
+
+
+class LatencyRecorder:
+    """Thread-safe per-request latency accumulator."""
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter):
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._arrivals: list[float] = []
+        self._completions: list[float] = []
+
+    def now(self) -> float:
+        return float(self.clock())
+
+    def record(self, t_arrival: float, t_done: float) -> None:
+        if t_done < t_arrival:
+            raise ValueError(
+                f"completion {t_done} precedes admission {t_arrival}")
+        with self._lock:
+            self._arrivals.append(float(t_arrival))
+            self._completions.append(float(t_done))
+
+    def record_wave(self, entries: Iterable[Admitted],
+                    t_done: float) -> None:
+        for e in entries:
+            self.record(e.t_arrival, t_done)
+
+    def reset(self) -> None:
+        with self._lock:
+            self._arrivals.clear()
+            self._completions.clear()
+
+    def report(self) -> LatencyReport:
+        with self._lock:
+            arrivals = np.asarray(self._arrivals, dtype=np.float64)
+            completions = np.asarray(self._completions, dtype=np.float64)
+        if arrivals.size == 0:
+            return LatencyReport.empty()
+        lat = completions - arrivals
+        span = float(completions.max() - arrivals.min())
+        return LatencyReport(
+            count=int(lat.size),
+            p50=float(np.percentile(lat, 50)),
+            p99=float(np.percentile(lat, 99)),
+            mean=float(lat.mean()),
+            max=float(lat.max()),
+            qps=float(lat.size / span) if span > 0 else float("inf"),
+        )

@@ -16,13 +16,13 @@ launch/sharding.py, serve-policy params).
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
 from typing import Iterable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model, ModelConfig
+from repro.serve.admission import AdmissionQueue, LatencyRecorder
 
 
 @dataclasses.dataclass
@@ -62,16 +62,25 @@ class ServeEngine:
         self.batch_size = batch_size
         self.max_seq = max_seq
         self._step = jax.jit(self.model.decode_step)
+        # shared serving-tier machinery (repro.serve.admission): FIFO
+        # admission (one slot per request — width 1) + per-request
+        # latency percentiles over the last run()
+        self.latency = LatencyRecorder()
 
     def run(self, requests: Iterable[Request]) -> list[Request]:
-        """Serve all requests; returns them with .output filled."""
-        queue = deque(requests)
+        """Serve all requests; returns them with .output filled. Latency
+        percentiles for the run are in `self.latency.report()`."""
+        queue = AdmissionQueue()
+        self.latency.reset()
+        for r in requests:
+            queue.admit(r, uid=r.uid, width=1, now=self.latency.now())
         finished: list[Request] = []
         b = self.batch_size
 
-        while queue:
+        while len(queue):
             # admit up to b requests into this generation wave
-            wave = [queue.popleft() for _ in range(min(b, len(queue)))]
+            admitted = queue.take_wave(b)
+            wave = [a.item for a in admitted]
             cache = self.model.init_cache(b, self.max_seq)
             max_prompt = max(len(r.prompt) for r in wave)
             horizon = min(self.max_seq,
@@ -117,4 +126,5 @@ class ServeEngine:
             for r in wave:
                 r.done = True
                 finished.append(r)
+            self.latency.record_wave(admitted, self.latency.now())
         return finished

@@ -46,7 +46,8 @@ from-scratch comparison's λ).
 """
 from repro.stream.drift import DriftConfig, DriftDetector, DriftVerdict
 from repro.stream.runtime import (IngestReport, RefreshReport, ServeSnapshot,
-                                  SolveReport, StalenessBound, StreamConfig,
+                                  SnapshotRegistry, SolveReport,
+                                  StalenessBound, StreamConfig,
                                   StreamingDeKRR)
 from repro.stream.updates import (StreamAux, ingest, init_stream_aux,
                                   reference_lam, refresh_node, repad_theta,
@@ -59,6 +60,7 @@ __all__ = [
     "IngestReport",
     "RefreshReport",
     "ServeSnapshot",
+    "SnapshotRegistry",
     "SolveReport",
     "StalenessBound",
     "StreamAux",

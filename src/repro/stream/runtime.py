@@ -56,6 +56,7 @@ __all__ = [
     "StreamingDeKRR",
     "IngestReport",
     "RefreshReport",
+    "SnapshotRegistry",
     "SolveReport",
     "StalenessBound",
 ]
@@ -105,7 +106,8 @@ class StreamConfig:
 
 @dataclasses.dataclass(frozen=True)
 class StalenessBound:
-    """How stale an answer computed from a θ snapshot can be.
+    """How far an answer computed from a θ snapshot can be from the live
+    full-precision prediction — a staleness term AND a precision term.
 
     theta_version:   increments on every solve.
     ingests_behind:  ingest events folded since θ was last solved.
@@ -117,12 +119,26 @@ class StalenessBound:
                      multi-output θ the max runs over features AND
                      outputs, so the bound holds for every output column
                      of every answer simultaneously.
+    precision:       per-answer inference-precision bound, in ANSWER
+                     units: |f_served − f_hi(θ)| ≤ precision, where f_hi
+                     is the same Eq. 1 dot product evaluated at the
+                     snapshot dtype (the solve's x64). 0.0 on the
+                     full-precision path. On the mixed-precision serving
+                     paths (`repro.serve.dekrr`, precision="bf16"/"int8")
+                     it is max(analytic forward-error bound of the
+                     low-precision featurize+GEMV for this answer,
+                     |f_hi − f_lo| measured per wave on a calibration
+                     stripe) — so every answer carries staleness and
+                     quantization error through ONE contract, in the
+                     communication/precision-budget spirit of COKE
+                     (arXiv:2001.10133).
     """
 
     theta_version: int
     ingests_behind: int
     samples_behind: int
     residual: float
+    precision: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,11 +168,138 @@ class SolveReport:
 
 @dataclasses.dataclass(frozen=True)
 class ServeSnapshot:
-    """Immutable θ view for the serving path (`repro.serve.dekrr`)."""
+    """Immutable θ view for the serving path (`repro.serve.dekrr`).
+
+    Construction validates the serving contract so malformed snapshots
+    fail HERE, with the per-node facts named, instead of deep inside a
+    wave's `jnp.stack`/GEMM with an anonymous shape error:
+
+      * one θ per feature map, every θ either [D_j] (scalar targets) or
+        [D_j, Dy] with ONE shared Dy (mixed scalar/multi-output θ is
+        rejected with the per-node output widths listed);
+      * every θ's feature count equals its map's `num_features`;
+      * one shared θ dtype (the wave is cast to it — a lone f32 node
+        would silently degrade every sibling's x64 answer);
+      * one shared query input dim across the maps' Ω matrices.
+    """
 
     feature_maps: tuple[FeatureMap, ...]
     theta: tuple[jax.Array, ...]
     staleness: StalenessBound
+
+    def __post_init__(self):
+        fmaps, theta = self.feature_maps, self.theta
+        if len(fmaps) == 0 or len(fmaps) != len(theta):
+            raise ValueError(
+                f"snapshot needs one θ per feature map, got "
+                f"{len(theta)} θ for {len(fmaps)} maps")
+        widths = [1 if t.ndim == 1 else (t.shape[1] if t.ndim == 2 else -1)
+                  for t in theta]
+        if any(w < 0 for w in widths):
+            raise ValueError(
+                f"snapshot θ must be [D_j] or [D_j, Dy], got ndim "
+                f"{[t.ndim for t in theta]}")
+        ndims = {t.ndim for t in theta}
+        if len(ndims) > 1 or (2 in ndims and len(set(widths)) > 1):
+            raise ValueError(
+                f"mixed scalar/multi-output θ snapshot: per-node output "
+                f"widths {widths} (ndim {[t.ndim for t in theta]}) — "
+                f"pack every node's θ as [D_j], or every node's as "
+                f"[D_j, Dy] with one shared Dy")
+        feats = [(int(t.shape[0]), fm.num_features)
+                 for t, fm in zip(theta, fmaps)]
+        if any(got != want for got, want in feats):
+            raise ValueError(
+                f"snapshot θ feature counts {[g for g, _ in feats]} do "
+                f"not match the maps' num_features "
+                f"{[w for _, w in feats]}")
+        dtypes = [str(jnp.asarray(t).dtype) for t in theta]
+        if len(set(dtypes)) > 1:
+            raise ValueError(
+                f"snapshot θ dtypes must agree (the wave is cast to one "
+                f"dtype), got per-node {dtypes}")
+        dims_in = {int(fm.omega.shape[1]) for fm in fmaps}
+        if len(dims_in) > 1:
+            raise ValueError(
+                f"snapshot feature maps disagree on the query input dim: "
+                f"{sorted(dims_in)}")
+
+    @property
+    def dtype(self):
+        """The shared θ dtype waves are cast to."""
+        return jnp.asarray(self.theta[0]).dtype
+
+    @property
+    def output_width(self) -> int | None:
+        """Dy for multi-output snapshots, None for scalar targets."""
+        t0 = self.theta[0]
+        return None if t0.ndim == 1 else int(t0.shape[1])
+
+    @property
+    def input_dim(self) -> int:
+        """Query input dim d shared by every node's Ω."""
+        return int(self.feature_maps[0].omega.shape[1])
+
+
+class SnapshotRegistry:
+    """Versioned atomic-publish registry decoupling solvers from serving
+    replicas.
+
+    The solver side calls `publish(snapshot)` (or `publish_from(stream)`)
+    after each solve; N serving replicas call `latest()` per wave and
+    never block the solver — the published state is a single immutable
+    `(version, ServeSnapshot)` tuple swapped by one reference assignment,
+    so a reader sees either the whole previous snapshot or the whole new
+    one, never a torn mix (the lock below only serializes *writers*'
+    version bookkeeping). Registry versions increase by 1 per publish and
+    are independent of `StalenessBound.theta_version` (re-publishing an
+    unchanged θ bumps the registry version only).
+    """
+
+    def __init__(self):
+        import threading
+
+        self._write_lock = threading.Lock()
+        self._published: tuple[int, ServeSnapshot] | None = None
+
+    def publish(self, snapshot: ServeSnapshot) -> int:
+        """Atomically publish `snapshot`; returns its registry version."""
+        if not isinstance(snapshot, ServeSnapshot):
+            raise TypeError(
+                f"publish() takes a ServeSnapshot, got "
+                f"{type(snapshot).__name__}")
+        with self._write_lock:
+            version = (0 if self._published is None
+                       else self._published[0]) + 1
+            self._published = (version, snapshot)
+        return version
+
+    def publish_from(self, stream: "StreamingDeKRR") -> int:
+        """Snapshot a live `StreamingDeKRR` and publish it."""
+        return self.publish(stream.snapshot())
+
+    @property
+    def version(self) -> int:
+        """Latest published version (0 = nothing published yet)."""
+        pub = self._published
+        return 0 if pub is None else pub[0]
+
+    def latest(self) -> ServeSnapshot:
+        published = self._published
+        if published is None:
+            raise LookupError(
+                "SnapshotRegistry is empty — publish() a ServeSnapshot "
+                "before serving from it")
+        return published[1]
+
+    def latest_versioned(self) -> tuple[int, ServeSnapshot]:
+        """(version, snapshot) read atomically as one tuple."""
+        published = self._published
+        if published is None:
+            raise LookupError(
+                "SnapshotRegistry is empty — publish() a ServeSnapshot "
+                "before serving from it")
+        return published
 
 
 class StreamingDeKRR:

@@ -1,0 +1,433 @@
+"""Serving-tier conformance: replicas, admission, precision bounds.
+
+The production serving contracts pinned here:
+
+  * answers are owned copies — mutating one query's prediction can never
+    corrupt a wave sibling's (the aliasing regression);
+  * malformed queries are rejected at ADMISSION with the offending uid
+    named; malformed snapshots (mixed θ widths/dtypes) are rejected at
+    construction with the per-node facts named;
+  * N replicas off a `SnapshotRegistry` answer exactly like one engine
+    (rtol 1e-9), and publishes are atomic under interleaved ingest/solve
+    — every concurrent answer matches exactly one published θ;
+  * every low-precision answer satisfies |f_lo − f_hi| ≤ the attached
+    `StalenessBound.precision`, over a randomized sweep of maps, widths,
+    outputs and precisions;
+  * latency percentiles are deterministic functions of a seeded load
+    trace under an injected clock;
+  * the serve-wave VMEM working-set formula matches its docstring.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import cached_fmaps, cached_split
+from repro.analysis.vmem import VmemBudgetError, estimate_serve_wave
+from repro.core import DeKRRConfig, DeKRRSolver, circulant
+from repro.core.rff import sample_rff
+from repro.serve import (AdmissionQueue, DeKRRReplicaServer, DeKRRServeEngine,
+                         KernelQuery, LatencyRecorder, pad_bucket)
+from repro.stream import (ServeSnapshot, SnapshotRegistry, StalenessBound,
+                          StreamingDeKRR)
+
+
+def _snapshot(seed=0, j=3, d=5, freqs=16, dy=None,
+              kinds=("cos_bias", "cos_bias", "cos_sin")) -> ServeSnapshot:
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    fmaps, thetas = [], []
+    for i in range(j):
+        key, k = jax.random.split(key)
+        fm = sample_rff(k, d, freqs, 1.0, kind=kinds[i % len(kinds)])
+        fmaps.append(fm)
+        shape = (fm.num_features,) if dy is None else (fm.num_features, dy)
+        thetas.append(jnp.asarray(rng.normal(size=shape)))
+    return ServeSnapshot(feature_maps=tuple(fmaps), theta=tuple(thetas),
+                         staleness=StalenessBound(1, 0, 0, 0.0))
+
+
+class FakeClock:
+    """Deterministic injectable clock: advances a fixed step per call."""
+
+    def __init__(self, step=0.125):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# --------------------------------------------------------------------------
+# Shared admission machinery
+# --------------------------------------------------------------------------
+def test_pad_bucket():
+    assert pad_bucket(0) == 8
+    assert pad_bucket(1) == 8
+    assert pad_bucket(8) == 8
+    assert pad_bucket(9) == 16
+    assert pad_bucket(100) == 128
+    assert pad_bucket(3, min_bucket=2) == 4
+    with pytest.raises(ValueError):
+        pad_bucket(-1)
+
+
+def test_admission_queue_fifo_and_budgets():
+    q = AdmissionQueue()
+    for uid, width in enumerate([1, 3, 2, 8, 1]):
+        q.admit(uid, uid=uid, width=width, now=float(uid))
+    assert len(q) == 5 and q.pending_columns == 15
+    # slot budget only
+    wave = q.take_wave(2)
+    assert [e.uid for e in wave] == [0, 1]
+    # column budget stops before uid 3 (2 + 8 > 4)
+    wave = q.take_wave(8, max_columns=4)
+    assert [e.uid for e in wave] == [2]
+    # head-of-line wider than the budget is returned ALONE, not deadlocked
+    wave = q.take_wave(8, max_columns=4)
+    assert [e.uid for e in wave] == [3] and wave[0].width == 8
+    assert [e.uid for e in q.take_wave(8)] == [4]
+    assert q.take_wave(8) == []
+    with pytest.raises(ValueError):
+        q.admit(9, uid=9, width=0, now=0.0)
+
+
+def test_latency_recorder_deterministic_report():
+    rec = LatencyRecorder(FakeClock())
+    for t_arr, t_done in [(0.0, 1.0), (0.5, 1.0), (1.0, 9.0)]:
+        rec.record(t_arr, t_done)
+    rep = rec.report()
+    lat = np.array([1.0, 0.5, 8.0])
+    assert rep.count == 3
+    assert rep.p50 == pytest.approx(np.percentile(lat, 50))
+    assert rep.p99 == pytest.approx(np.percentile(lat, 99))
+    assert rep.qps == pytest.approx(3 / 9.0)
+    with pytest.raises(ValueError):
+        rec.record(2.0, 1.0)
+    rec.reset()
+    assert rec.report().count == 0
+
+
+# --------------------------------------------------------------------------
+# Snapshot registry + construction validation
+# --------------------------------------------------------------------------
+def test_snapshot_registry_versions():
+    reg = SnapshotRegistry()
+    assert reg.version == 0
+    with pytest.raises(LookupError):
+        reg.latest()
+    snap_a, snap_b = _snapshot(0), _snapshot(1)
+    assert reg.publish(snap_a) == 1
+    assert reg.publish(snap_b) == 2
+    ver, snap = reg.latest_versioned()
+    assert ver == 2 and snap is snap_b
+    with pytest.raises(TypeError):
+        reg.publish("not a snapshot")
+
+
+def test_snapshot_rejects_mixed_widths():
+    snap = _snapshot()
+    theta = list(snap.theta)
+    theta[1] = theta[1][:, None].repeat(2, axis=1)      # node 1 → [D, 2]
+    with pytest.raises(ValueError, match="widths"):
+        ServeSnapshot(feature_maps=snap.feature_maps, theta=tuple(theta),
+                      staleness=snap.staleness)
+    # multi-output with two different Dy is just as malformed
+    t2 = [t[:, None].repeat(2, axis=1) for t in snap.theta]
+    t2[2] = t2[2][:, :1]
+    with pytest.raises(ValueError, match="widths"):
+        ServeSnapshot(feature_maps=snap.feature_maps, theta=tuple(t2),
+                      staleness=snap.staleness)
+
+
+def test_snapshot_rejects_mixed_dtypes():
+    snap = _snapshot()
+    theta = list(snap.theta)
+    theta[2] = theta[2].astype(jnp.float32)             # lone f32 node
+    with pytest.raises(ValueError, match="float32"):
+        ServeSnapshot(feature_maps=snap.feature_maps, theta=tuple(theta),
+                      staleness=snap.staleness)
+
+
+def test_snapshot_rejects_feature_count_mismatch():
+    snap = _snapshot()
+    theta = list(snap.theta)
+    theta[0] = theta[0][:-1]
+    with pytest.raises(ValueError, match="num_features"):
+        ServeSnapshot(feature_maps=snap.feature_maps, theta=tuple(theta),
+                      staleness=snap.staleness)
+
+
+# --------------------------------------------------------------------------
+# Serve-path bugfix regressions
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dy", [None, 3])
+def test_predictions_are_owned_copies(dy):
+    """Aliasing regression: predictions in one wave must not share
+    storage — mutating one answer leaves every sibling intact."""
+    snap = _snapshot(dy=dy)
+    rng = np.random.default_rng(5)
+    xs = rng.normal(size=(5, 6))
+    queries = [KernelQuery(uid=0, x=xs[:, :3]), KernelQuery(uid=1, x=xs[:, 3:]),
+               KernelQuery(uid=2, x=xs[:, :3], node=1)]
+    DeKRRServeEngine(snap, batch_size=64).run(queries)
+    before = [np.array(q.prediction, copy=True) for q in queries]
+    np.asarray(queries[0].prediction)[...] = 1e9
+    for q, want in zip(queries[1:], before[1:]):
+        np.testing.assert_array_equal(np.asarray(q.prediction), want)
+
+
+def test_malformed_queries_rejected_at_admission_with_uid():
+    snap = _snapshot()
+    eng = DeKRRServeEngine(snap)
+    with pytest.raises(ValueError, match="query 41.*input dim 4"):
+        eng.run([KernelQuery(uid=41, x=np.zeros(4))])
+    with pytest.raises(ValueError, match="query 42"):
+        eng.run([KernelQuery(uid=42, x=np.zeros((5, 2, 2)))])
+    with pytest.raises(ValueError, match="query 43.*node 7"):
+        eng.run([KernelQuery(uid=43, x=np.zeros(5), node=7)])
+    with pytest.raises(ValueError, match="query 44"):
+        eng.run([KernelQuery(uid=44, x=np.zeros((5, 0)))])
+    # a bad query is rejected before ANY query is answered
+    good = KernelQuery(uid=0, x=np.zeros(5))
+    with pytest.raises(ValueError, match="query 45"):
+        eng.run([good, KernelQuery(uid=45, x=np.zeros(4))])
+    assert not good.done
+
+
+# --------------------------------------------------------------------------
+# Replica serving
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dy", [None, 2])
+def test_replica_parity_vs_single_engine(dy):
+    """N replicas off a registry answer exactly like one engine over the
+    same snapshot — mixed widths, node queries, several waves."""
+    snap = _snapshot(seed=3, dy=dy)
+
+    def queries():
+        rng = np.random.default_rng(11)
+        out = []
+        for uid in range(17):
+            width = int(rng.integers(1, 4)) if uid % 3 else 1
+            x = rng.normal(size=(5, width)) if uid % 3 else rng.normal(size=5)
+            node = 1 if uid % 5 == 0 else None
+            out.append(KernelQuery(uid=uid, x=x, node=node))
+        return out
+
+    want = DeKRRServeEngine(snap, batch_size=4).run(queries())
+    reg = SnapshotRegistry()
+    reg.publish(snap)
+    srv = DeKRRReplicaServer(reg, replicas=3, batch_size=4)
+    got = srv.run(queries())
+    for qw, qg in zip(want, got):
+        np.testing.assert_allclose(np.asarray(qg.prediction),
+                                   np.asarray(qw.prediction),
+                                   rtol=1e-9, atol=1e-12)
+        assert qg.staleness == qw.staleness and qg.done
+    assert srv.report().count == 17 and srv.waves_served >= 5
+
+
+def test_engine_serves_freshest_registry_snapshot():
+    snap_a, snap_b = _snapshot(0), _snapshot(1)
+    reg = SnapshotRegistry()
+    reg.publish(snap_a)
+    eng = DeKRRServeEngine(reg, batch_size=8)
+    x = np.zeros(5)
+    a = eng.run([KernelQuery(uid=0, x=x)])[0].prediction
+    reg.publish(snap_b)
+    b = eng.run([KernelQuery(uid=1, x=x)])[0].prediction
+    want_b = DeKRRServeEngine(snap_b).run([KernelQuery(uid=2, x=x)])[0]
+    assert a != b
+    np.testing.assert_allclose(b, want_b.prediction, rtol=1e-12)
+
+
+def test_publish_atomicity_under_interleaved_ingest_solve():
+    """A solver thread ingests/solves/publishes while replicas answer:
+    every answer must be consistent with exactly ONE published snapshot
+    (its staleness identifies it; the prediction must match a clean
+    serve of that same snapshot) — never a torn mix."""
+    ds, train, _ = cached_split("air_quality", 3, subsample=60, seed=0)
+    fmaps = cached_fmaps("air_quality", 3, (8, 8, 8), method="energy",
+                         subsample=60, seed=0)
+    n = sum(t.num_samples for t in train)
+    solver = DeKRRSolver(circulant(3, (1,)), fmaps, train,
+                         DeKRRConfig(lam=1e-3, c_nei=0.02 * n),
+                         build_aux=False)
+    rt = StreamingDeKRR(solver)
+    rt.solve()
+    reg = SnapshotRegistry()
+    published = {}
+
+    def publish():
+        snap = rt.snapshot()
+        published[reg.publish(snap)] = snap
+
+    publish()
+    rng = np.random.default_rng(23)
+    stop = threading.Event()
+
+    def solver_loop():
+        k = 0
+        while not stop.is_set() and k < 6:
+            rt.ingest(k % 3, rng.normal(size=(ds.dim, 8)),
+                      rng.normal(size=8))
+            rt.solve()
+            publish()
+            k += 1
+
+    srv = DeKRRReplicaServer(reg, replicas=2, batch_size=2)
+    writer = threading.Thread(target=solver_loop)
+    writer.start()
+    srv.start()
+    queries = [KernelQuery(uid=i, x=rng.normal(size=ds.dim))
+               for i in range(60)]
+    try:
+        for q in queries:
+            srv.submit(q)
+    finally:
+        srv.stop()
+        stop.set()
+        writer.join()
+
+    by_staleness = {snap.staleness: snap for snap in published.values()}
+    assert len(by_staleness) == len(published)   # distinct versions
+    for q in queries:
+        assert q.done
+        snap = by_staleness.get(q.staleness)
+        assert snap is not None, \
+            f"query {q.uid} answered from an unpublished snapshot"
+        want = DeKRRServeEngine(snap).run(
+            [KernelQuery(uid=q.uid, x=q.x)])[0].prediction
+        np.testing.assert_allclose(q.prediction, want, rtol=1e-12,
+                                   err_msg=f"query {q.uid} torn across "
+                                           f"snapshots")
+
+
+# --------------------------------------------------------------------------
+# Mixed precision
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+@pytest.mark.parametrize("dy", [None, 2])
+def test_lowp_answers_within_attached_bound(precision, dy):
+    """Randomized sweep: EVERY low-precision answer (mean and per-node,
+    scalar and block queries) is within its attached precision bound,
+    and full-precision answers attach precision == 0."""
+    for seed in range(3):
+        snap = _snapshot(seed=seed, dy=dy)
+
+        def queries():
+            rng = np.random.default_rng(100 + seed)
+            out = []
+            for uid in range(12):
+                width = int(rng.integers(1, 5))
+                x = 2.0 * rng.normal(size=(5, width))
+                out.append(KernelQuery(
+                    uid=uid, x=x,
+                    node=int(uid % 3) if uid % 4 == 0 else None))
+            return out
+
+        hi = DeKRRServeEngine(snap, batch_size=5).run(queries())
+        lo = DeKRRServeEngine(snap, batch_size=5,
+                              precision=precision).run(queries())
+        for qh, ql in zip(hi, lo):
+            assert qh.staleness.precision == 0.0
+            bound = ql.staleness.precision
+            assert bound > 0.0
+            err = np.max(np.abs(np.asarray(ql.prediction, dtype=np.float64)
+                                - np.asarray(qh.prediction,
+                                             dtype=np.float64)))
+            assert err <= bound, (
+                f"seed {seed} uid {ql.uid}: measured |f_lo - f_hi| = "
+                f"{err} exceeds attached precision bound {bound}")
+            # the bound is answer-scale, not vacuous
+            scale = max(1.0, np.max(np.abs(np.asarray(qh.prediction))))
+            assert bound < 1e3 * scale
+
+
+def test_lowp_answers_are_close_and_bounded_on_replicas():
+    snap = _snapshot(seed=7)
+    reg = SnapshotRegistry()
+    reg.publish(snap)
+    rng = np.random.default_rng(8)
+    xs = rng.normal(size=(5, 9))
+    hi = DeKRRServeEngine(snap).run(
+        [KernelQuery(uid=i, x=xs[:, i]) for i in range(9)])
+    srv = DeKRRReplicaServer(reg, replicas=2, batch_size=3,
+                             precision="bf16")
+    lo = srv.run([KernelQuery(uid=i, x=xs[:, i]) for i in range(9)])
+    for qh, ql in zip(hi, lo):
+        err = abs(float(ql.prediction) - float(qh.prediction))
+        assert err <= ql.staleness.precision
+        # bf16 answers should still be decently accurate in absolute terms
+        assert err < 0.1
+
+
+# --------------------------------------------------------------------------
+# Latency determinism
+# --------------------------------------------------------------------------
+def test_latency_percentiles_deterministic_under_seeded_trace():
+    """Same seeded load trace + injected clock + one replica → the exact
+    same LatencyReport, run after run."""
+    def one_run():
+        snap = _snapshot(seed=2)
+        reg = SnapshotRegistry()
+        reg.publish(snap)
+        srv = DeKRRReplicaServer(reg, replicas=1, batch_size=4,
+                                 clock=FakeClock())
+        rng = np.random.default_rng(17)
+        arrivals = np.cumsum(rng.exponential(0.01, size=20))
+        queries = [KernelQuery(uid=i, x=rng.normal(size=5))
+                   for i in range(20)]
+        srv.run(queries, arrivals=arrivals)
+        return srv.report()
+
+    rep_a, rep_b = one_run(), one_run()
+    assert rep_a == rep_b
+    assert rep_a.count == 20
+    assert rep_a.p99 >= rep_a.p50 > 0.0
+
+
+def test_engine_latency_report_populated():
+    snap = _snapshot()
+    eng = DeKRRServeEngine(snap, batch_size=4)
+    eng.run([KernelQuery(uid=i, x=np.zeros(5)) for i in range(9)])
+    rep = eng.latency.report()
+    assert rep.count == 9 and rep.p99 >= rep.p50 > 0.0 and rep.qps > 0.0
+
+
+# --------------------------------------------------------------------------
+# Serving-kernel working sets
+# --------------------------------------------------------------------------
+def test_estimate_serve_wave_matches_docstring():
+    est = estimate_serve_wave(block_d=256, d_in=160, block_n=512,
+                              d_feat=2048, dy=2)
+    want = 256 * 160 + 256 + 160 * 512 + 256 * 512 + 2 * 2048 + 2 * 512
+    assert est.elements == want
+    assert est.bytes == want * 4
+    assert est.bytes < 2**20 and est.fits       # the "< 1 MB" anchor
+    assert "Bd*d + Bd + d*Bn + Bd*Bn + dy*D + dy*Bn" == est.formula
+    # bf16 wave: half the bytes
+    assert estimate_serve_wave(block_d=256, d_in=160, block_n=512,
+                               d_feat=2048, dy=2, itemsize=2).bytes \
+        == want * 2
+    with pytest.raises(VmemBudgetError):
+        estimate_serve_wave(block_d=2048, d_in=2048, block_n=2048,
+                            d_feat=8192, dy=8).check()
+
+
+def test_engine_rejects_bad_config():
+    snap = _snapshot()
+    with pytest.raises(ValueError, match="backend"):
+        DeKRRServeEngine(snap, backend="tpu-v9")
+    with pytest.raises(ValueError, match="precision"):
+        DeKRRServeEngine(snap, precision="fp4")
+    with pytest.raises(TypeError, match="SnapshotRegistry"):
+        DeKRRReplicaServer(snap)
+    reg = SnapshotRegistry()
+    reg.publish(snap)
+    with pytest.raises(ValueError, match="replicas"):
+        DeKRRReplicaServer(reg, replicas=0)
