@@ -17,7 +17,8 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
+
+from repro.obs.metrics import perf_clock
 
 _PASSES = ("jaxpr", "conventions")
 
@@ -63,19 +64,19 @@ def main(argv: list[str] | None = None) -> int:
         jax.config.update("jax_enable_x64", True)
         from repro.analysis import jaxpr_lint
 
-        t0 = time.perf_counter()
+        t0 = perf_clock()
         spmd = False if args.no_spmd else None  # None = auto-detect
         findings += jaxpr_lint.run_pass(spmd=spmd)
-        timings["jaxpr"] = time.perf_counter() - t0
+        timings["jaxpr"] = perf_clock() - t0
 
     if "conventions" in passes:
         from repro.analysis import conventions
 
         root = os.path.abspath(args.repo_root)
         paths = args.paths or [os.path.join(root, "src")]
-        t0 = time.perf_counter()
+        t0 = perf_clock()
         findings += conventions.run_pass(paths, repo_root=root)
-        timings["conventions"] = time.perf_counter() - t0
+        timings["conventions"] = perf_clock() - t0
 
     from repro.analysis.report import render_json, render_report
 

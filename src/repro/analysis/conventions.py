@@ -25,6 +25,12 @@ configured, and fast enough for CI on every push). Rules:
         contract the wrappers enforce.
   R005  No bare ``except:`` — swallowing KeyboardInterrupt/SystemExit in
         long solver runs makes hangs unkillable.
+  R006  No bare ``time.time()`` / ``time.perf_counter()`` in ``src/repro/``
+        outside ``repro/obs/`` — host timing goes through
+        `repro.obs.metrics.perf_clock` / `wall_clock` so spans, latency
+        recorders and benches share one monotonic clock (and tests can
+        swap in a `FakeClock`). ``time.sleep`` is not a timing read and
+        stays allowed.
 
 A finding can be waived on its line with ``# analysis: ignore[R00x]``
 (or a blanket ``# analysis: ignore``) — every waiver is visible in the
@@ -249,6 +255,34 @@ def _check_interpret_usage(tree: ast.Module, rel: str, path: str,
     return findings
 
 
+# R006 — the two stdlib clock reads the obs clock shims wrap.
+_CLOCK_READS = frozenset({"time", "perf_counter"})
+
+
+def _check_clock_usage(tree: ast.Module, rel: str, path: str,
+                       lines: list[str]) -> list[Finding]:
+    norm = os.path.abspath(path).replace(os.sep, "/")
+    if "/repro/" not in norm or "/repro/obs/" in norm:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if not (isinstance(f, ast.Attribute) and f.attr in _CLOCK_READS
+                and isinstance(f.value, ast.Name) and f.value.id == "time"):
+            continue
+        if _waived(lines, node.lineno, "R006"):
+            continue
+        shim = "wall_clock" if f.attr == "time" else "perf_clock"
+        findings.append(Finding(
+            "conventions", "R006", f"{rel}:{node.lineno}",
+            f"bare `time.{f.attr}()` outside repro/obs/ — use "
+            f"`repro.obs.metrics.{shim}` so spans/latency/bench share "
+            f"one injectable clock"))
+    return findings
+
+
 def _check_bare_except(tree: ast.Module, rel: str,
                        lines: list[str]) -> list[Finding]:
     findings = []
@@ -284,6 +318,7 @@ def lint_file(path: str, *, repo_root: str | None = None,
     findings += _check_rtol_x64(tree, rel, path, source, lines, repo_root)
     findings += _check_interpret_usage(tree, rel, path, lines)
     findings += _check_bare_except(tree, rel, lines)
+    findings += _check_clock_usage(tree, rel, path, lines)
     return findings
 
 

@@ -10,10 +10,13 @@ statically verified — no solver numerics run, only tracing. Rules:
         is exactly the per-round stall PR 3 removed.
   J002  Kernel dispatch counts match the documented `round_dispatches`
         contract (BENCH_solve.json): sync solve {xla: 0, pallas: R,
-        pallas_fused: 1}; async {xla: 0, pallas: R, pallas_fused: R —
-        rounds never fuse across the per-round mask sampling}; the ops
-        wrappers dispatch exactly once. Counts are computed statically
-        with `lax.scan` length multipliers.
+        pallas_fused: 1}; async {xla: 0, pallas: R, pallas_fused: 1 —
+        the [R, J] mask table prefetches into one multi-round kernel};
+        the ops wrappers dispatch exactly once; `return_trace=True` /
+        `return_stats=True` variants pin the SAME counts (telemetry
+        never buys an extra launch). Counts are computed statically with
+        `lax.scan` length multipliers; the counter itself lives in
+        `repro.obs.dispatch` (re-exported here).
   J003  Every `ppermute` permutation is a bijection over its mesh axis:
         pairs in range, sources and destinations distinct, and full
         coverage (an uncovered receiver silently gets zeros).
@@ -59,6 +62,13 @@ import numpy as np
 
 from repro.analysis.report import Finding
 from repro.analysis.vmem import VMEM_BUDGET_BYTES, estimate_blocks
+from repro.obs.dispatch import count_pallas_dispatches
+
+__all__ = [
+    "EntryPoint", "batched_entry_points", "count_pallas_dispatches",
+    "lint_program", "run_pass", "spmd_entry_points", "synthetic_packed",
+    "walk_eqns",
+]
 
 # Rounds used for the dispatch-contract traces (any small R > 1 works; the
 # contract is per-round structure, not a particular round count).
@@ -169,30 +179,9 @@ def check_no_callbacks_in_loops(closed, where: str) -> list[Finding]:
 
 
 # --------------------------------------------------------------------------
-# J002 — dispatch counting
+# J002 — dispatch counting (the counter itself lives in repro.obs.dispatch,
+# re-exported above — obs is the lower layer; this pass pins the contract)
 # --------------------------------------------------------------------------
-def count_pallas_dispatches(closed) -> tuple[int, bool]:
-    """(#pallas_call dispatches, exact?) with `lax.scan` length
-    multipliers. A dispatch under `while` makes the count inexact (trip
-    count is dynamic); the returned count then assumes one trip."""
-    def rec(jaxpr):
-        count, exact = 0, True
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "pallas_call":
-                count += 1
-            for sub, frame in _sub_jaxprs(eqn):
-                c, e = rec(_inner(sub))
-                if frame[0] == "scan":
-                    c *= frame[1]
-                elif frame[0] in ("while_body", "while_cond"):
-                    e = e and c == 0
-                count += c
-                exact = exact and e
-        return count, exact
-
-    return rec(_inner(closed))
-
-
 def check_dispatch_contract(closed, expected: int | None,
                             where: str) -> list[Finding]:
     if expected is None:
@@ -539,6 +528,20 @@ def batched_entry_points() -> list[EntryPoint]:
                 lambda pk: solve_batched(pk, ROUNDS,
                                          backend=b))(packed_dy),
             sync_expect[b]))
+        # return_trace pins to the SAME dispatch count as the plain solve
+        # — the convergence trace rides the existing scan/while carry and
+        # must never add a kernel launch or a host callback.
+        eps.append(EntryPoint(
+            f"solve_batched[backend={b},tol=0,trace]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: solve_batched(pk, ROUNDS, backend=b,
+                                         return_trace=True))(packed),
+            sync_expect[b]))
+        eps.append(EntryPoint(
+            f"solve_batched[backend={b},tol>0,trace]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: solve_batched(pk, ROUNDS, backend=b, tol=1e-3,
+                                         return_trace=True))(packed)))
         eps.append(EntryPoint(
             f"async_solve_batched[backend={b},tol=0]",
             lambda b=b: jax.make_jaxpr(
@@ -557,6 +560,26 @@ def batched_entry_points() -> list[EntryPoint]:
                     pk, ROUNDS, k, backend=b))(packed_dy, key),
             async_expect[b]))
         eps.append(EntryPoint(
+            f"async_solve_batched[backend={b},tol=0,trace]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk, k: async_solve_batched(
+                    pk, ROUNDS, k, backend=b,
+                    return_trace=True))(packed, key),
+            async_expect[b]))
+        eps.append(EntryPoint(
+            f"async_solve_batched[backend={b},tol=0,stats]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk, k: async_solve_batched(
+                    pk, ROUNDS, k, backend=b,
+                    return_stats=True))(packed, key),
+            async_expect[b]))
+        eps.append(EntryPoint(
+            f"async_solve_batched[backend={b},tol>0,trace]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk, k: async_solve_batched(
+                    pk, ROUNDS, k, backend=b, tol=1e-3,
+                    return_trace=True))(packed, key)))
+        eps.append(EntryPoint(
             f"chebyshev_solve_packed[backend={b}]",
             lambda b=b: jax.make_jaxpr(
                 lambda pk: chebyshev_solve_packed(
@@ -568,6 +591,13 @@ def batched_entry_points() -> list[EntryPoint]:
                 lambda pk: chebyshev_solve_packed(
                     pk, 0.9, 0.0, num_iters=ROUNDS,
                     backend=b))(packed_dy),
+            cheb_expect[b]))
+        eps.append(EntryPoint(
+            f"chebyshev_solve_packed[backend={b},trace]",
+            lambda b=b: jax.make_jaxpr(
+                lambda pk: chebyshev_solve_packed(
+                    pk, 0.9, 0.0, num_iters=ROUNDS, backend=b,
+                    return_trace=True))(packed),
             cheb_expect[b]))
     eps.append(EntryPoint("ops.dekrr_step", _trace_ops_step, 1))
     eps.append(EntryPoint("ops.dekrr_solve", _trace_ops_solve, 1))
@@ -703,6 +733,23 @@ def spmd_entry_points() -> list[EntryPoint]:
                     lambda arun=arun, tol=tol: jax.make_jaxpr(
                         lambda pk, k: arun(pk, ROUNDS, k,
                                            tol=tol))(packed, key),
+                    pin))
+                # Trace variants pin the SAME counts — the per-device
+                # residual/broadcast series rides the existing scan ys /
+                # while carry; wire accounting reduces outside shard_map.
+                eps.append(EntryPoint(
+                    f"make_spmd_solver[mode={mode},backend={backend},"
+                    f"tol{'>0' if tol else '=0'},trace]",
+                    lambda run=run, tol=tol: jax.make_jaxpr(
+                        lambda pk: run(pk, ROUNDS, tol=tol,
+                                       return_trace=True))(packed),
+                    pin))
+                eps.append(EntryPoint(
+                    f"make_async_spmd_solver[mode={mode},"
+                    f"backend={backend},tol{'>0' if tol else '=0'},trace]",
+                    lambda arun=arun, tol=tol: jax.make_jaxpr(
+                        lambda pk, k: arun(pk, ROUNDS, k, tol=tol,
+                                           return_trace=True))(packed, key),
                     pin))
     return eps
 

@@ -52,6 +52,7 @@ from jax import lax
 
 from repro.dist.dekrr_spmd import (PackedProblem, _check_backend,
                                    step_batched)
+from repro.obs.trace import SolveTrace
 
 
 def safe_mu(mu_est: float, margin: float = 0.02) -> float:
@@ -182,7 +183,8 @@ def chebyshev_coefficients(mu_max: float, mu_min: float,
 def chebyshev_scan(apply_f: Callable[[jax.Array], jax.Array],
                    theta0: jax.Array, alphas: jax.Array,
                    betas: jax.Array, *, theta_star: jax.Array | None = None,
-                   p0: jax.Array | None = None):
+                   p0: jax.Array | None = None,
+                   record_deltas: bool = False):
     """The shared (α, β)-table `lax.scan` every host/XLA Chebyshev path
     runs: one F-application per step, two-term recurrence on the search
     direction p (θ_{k+1} = θ_k + α_k p_k with p_k = r_k + β_k p_{k−1},
@@ -192,7 +194,10 @@ def chebyshev_scan(apply_f: Callable[[jax.Array], jax.Array],
     given (how `rounds_to_tolerance` counts rounds without per-round
     host syncs), else None. ``p0`` resumes the recurrence mid-schedule
     (chunked callers); the cold start is p₀ = 0 (β₀ = 0 makes the first
-    step pure residual descent either way)."""
+    step pure residual descent either way). ``record_deltas=True``
+    appends a fourth output: the per-step max|Δθ| = max|α_k p_k| trace
+    (the `repro.obs` convergence-residual convention — the actual step
+    taken, not the F-residual), folded into the same scan."""
     if p0 is None:
         p0 = jnp.zeros_like(theta0)
 
@@ -201,12 +206,17 @@ def chebyshev_scan(apply_f: Callable[[jax.Array], jax.Array],
         alpha, beta = ab
         resid = apply_f(theta) - theta
         p = resid + beta * p
-        theta = theta + alpha * p
+        theta_new = theta + alpha * p
         err = None if theta_star is None \
-            else jnp.linalg.norm(theta - theta_star)
-        return (theta, p), err
+            else jnp.linalg.norm(theta_new - theta_star)
+        delta = jnp.max(jnp.abs(theta_new - theta)) if record_deltas \
+            else None
+        return (theta_new, p), (err, delta)
 
-    (theta, p), errs = lax.scan(body, (theta0, p0), (alphas, betas))
+    (theta, p), (errs, deltas) = lax.scan(body, (theta0, p0),
+                                          (alphas, betas))
+    if record_deltas:
+        return theta, p, errs, deltas
     return theta, p, errs
 
 
@@ -241,11 +251,14 @@ def chebyshev_solve(
 
 def _chebyshev_fused(packed: PackedProblem, alphas: np.ndarray,
                      betas: np.ndarray,
-                     chunk_rounds: int | None) -> jax.Array:
+                     chunk_rounds: int | None, trace: bool = False):
     """backend="pallas_fused": run the whole (α, β) schedule — or each
     `chunk_rounds` slice of it — as one Chebyshev `dekrr_solve`
     pallas_call (coefficients via scalar prefetch, the direction state
-    in a VMEM table; chunk boundaries chain (θ, p) bit-exactly)."""
+    in a VMEM table; chunk boundaries chain (θ, p) bit-exactly). With
+    ``trace`` the same dispatches also fill the per-(round, node)
+    max|Δθ| block — returned as [R, J] alongside θ, concatenated across
+    chunks."""
     from repro.kernels import ops
 
     dtype = packed.d.dtype
@@ -259,34 +272,44 @@ def _chebyshev_fused(packed: PackedProblem, alphas: np.ndarray,
     def call(th, pv, aa, bb):
         return ops.dekrr_cheb_solve(
             packed.g, packed.d, packed.s, packed.p, th, pv,
-            packed.nbr_idx, self_idx, packed.nbr_mask, aa, bb)
+            packed.nbr_idx, self_idx, packed.nbr_mask, aa, bb,
+            trace=trace)
 
     if chunk_rounds is None or chunk_rounds >= num_iters:
-        theta, _ = call(theta, p_dir, a, b)
-        return theta
+        outs = call(theta, p_dir, a, b)
+        return (outs[0], outs[2]) if trace else outs[0]
 
     n_full, rem = divmod(num_iters, chunk_rounds)
 
     def chunk_fn(carry, xs):
         th, pv = carry
         aa, bb = xs
-        return call(th, pv, aa, bb), None
+        outs = call(th, pv, aa, bb)
+        return (outs[0], outs[1]), (outs[2] if trace else None)
 
     cut = n_full * chunk_rounds
-    (theta, p_dir), _ = lax.scan(
+    (theta, p_dir), trs = lax.scan(
         chunk_fn, (theta, p_dir),
         (a[:cut].reshape(n_full, chunk_rounds),
          b[:cut].reshape(n_full, chunk_rounds)))
+    outs_rem = None
     if rem:
-        theta, p_dir = call(theta, p_dir, a[cut:], b[cut:])
-    return theta
+        outs_rem = call(theta, p_dir, a[cut:], b[cut:])
+        theta = outs_rem[0]
+    if not trace:
+        return theta
+    res = trs.reshape(-1, packed.num_nodes)
+    if outs_rem is not None:
+        res = jnp.concatenate([res, outs_rem[2]])
+    return theta, res
 
 
 def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
                            mu_min: float = 0.0,
                            num_iters: int = 100,
                            backend: str = "xla",
-                           chunk_rounds: int | None = None) -> jax.Array:
+                           chunk_rounds: int | None = None,
+                           return_trace: bool = False):
     """Chebyshev on the packed batched runtime (same exchange as Alg. 1).
 
     ``backend`` routes each F-application through `step_batched`'s switch:
@@ -297,18 +320,37 @@ def chebyshev_solve_packed(packed: PackedProblem, mu_max: float,
     fused multi-round kernel, with the Δ recurrence state VMEM-resident
     (`repro.kernels.dekrr_solve`). The fused path matches the host
     recurrence at rtol 1e-9 under x64 and is chunk-size bit-invariant;
-    ``chunk_rounds`` is ignored on the per-round backends."""
+    ``chunk_rounds`` is ignored on the per-round backends.
+
+    ``return_trace=True`` returns ``(theta, SolveTrace)`` with the
+    per-round max|Δθ| = max|α_k p_k| residual trace — the actual
+    Chebyshev step, not the F-residual — recorded inside the existing
+    scan (per-round backends) or the kernel's own trace block (fused):
+    no host callback, no extra dispatch, chunk-invariant."""
     _check_backend(backend)
     if chunk_rounds is not None and chunk_rounds < 1:
         raise ValueError(f"chunk_rounds must be >= 1, got {chunk_rounds}")
     num_iters = int(num_iters)
     if num_iters == 0:
-        return jnp.zeros_like(packed.d)
+        theta = jnp.zeros_like(packed.d)
+        if return_trace:
+            return theta, SolveTrace(
+                residuals=jnp.zeros((0,), packed.d.dtype))
+        return theta
     alphas, betas = chebyshev_coefficients(mu_max, mu_min, num_iters)
     if backend == "pallas_fused":
-        return _chebyshev_fused(packed, alphas, betas, chunk_rounds)
+        if not return_trace:
+            return _chebyshev_fused(packed, alphas, betas, chunk_rounds)
+        theta, res = _chebyshev_fused(packed, alphas, betas, chunk_rounds,
+                                      trace=True)
+        return theta, SolveTrace(residuals=jnp.max(res, axis=1))
     apply_f = lambda th: step_batched(packed, th, backend=backend)
     dtype = packed.d.dtype
+    if return_trace:
+        theta, _, _, deltas = chebyshev_scan(
+            apply_f, jnp.zeros_like(packed.d), jnp.asarray(alphas, dtype),
+            jnp.asarray(betas, dtype), record_deltas=True)
+        return theta, SolveTrace(residuals=deltas)
     theta, _, _ = chebyshev_scan(apply_f, jnp.zeros_like(packed.d),
                                  jnp.asarray(alphas, dtype),
                                  jnp.asarray(betas, dtype))

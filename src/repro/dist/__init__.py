@@ -24,9 +24,11 @@ pinned):
                           fused kernel)       [R, J] mask table + censor
                                               thresholds prefetch into one
                                               multi-round kernel — one
-                                              dispatch per chunk; tol>0 and
-                                              return_stats=True keep the
-                                              per-round path)
+                                              dispatch per chunk; only tol>0
+                                              keeps the per-round path:
+                                              return_stats / return_trace
+                                              read the kernel's on-device
+                                              trace blocks, staying fused)
   accelerated (Chebyshev  exact (shared (α,β)-table `lax.scan` on xla /
   `repro.core.            per-round kernel on pallas;
   acceleration`)          `chebyshev_solve_packed(backend="pallas_fused")`

@@ -18,11 +18,15 @@ runtime it extends:
    thresholds, scalar-prefetched like the slot tables — through the fused
    async chain kernel (`repro.kernels.ops.dekrr_async_solve`): one
    pallas_call per ``chunk_rounds`` chunk (default: one for the whole
-   solve), bit-for-bit the scanned per-round masked kernel. Two
-   accounting modes keep the per-round path even on "pallas_fused":
-   ``tol > 0`` (the per-round convergence freeze is host-orchestrated)
-   and ``return_stats=True`` (the fused kernel does not emit
-   broadcast/delivery counts).
+   solve), bit-for-bit the scanned per-round masked kernel. Only one
+   accounting mode keeps the per-round path on "pallas_fused":
+   ``tol > 0`` (the per-round convergence freeze is host-orchestrated).
+   ``return_stats=True`` and ``return_trace=True`` stay fused — the
+   chain kernel emits per-(round, node) residual/broadcast trace blocks
+   in the same dispatch, and the wire counts (broadcasts, deliveries,
+   bytes) are derived from them in plain XLA (`repro.obs` convergence
+   traces; this fixed a silent fused→per-round fallback that older
+   ``return_stats=True`` calls paid for).
 
 2. **SPMD nodes-on-devices execution** (`make_async_spmd_solver`): one
    node per device, same mesh/mode contract as `make_spmd_solver`. The
@@ -64,6 +68,7 @@ from repro.dist.dekrr_spmd import (PackedProblem, _check_backend,
                                    _check_spmd_problem, _make_exchange,
                                    _node_step, _MODES, _PALLAS_BACKENDS,
                                    shard_map, step_batched)
+from repro.obs.trace import AsyncSolveTrace
 
 __all__ = [
     "AsyncGossipState",
@@ -224,76 +229,148 @@ def _count(mask: jax.Array) -> jax.Array:
     return jnp.sum(mask, dtype=jnp.int32)
 
 
+def _wire_series(packed: PackedProblem, masks: jax.Array,
+                 bcast_rj: jax.Array, *, gossip: str):
+    """Per-round wire counts from per-(round, node) broadcast flags, in
+    plain XLA (no extra kernel dispatch): [R] active / broadcasts /
+    deliveries / bytes. Reproduces `_async_round`'s delivery rule —
+    ``received = live & bcast[nbr_idx]`` (edge gossip additionally gates
+    on the *receiver* being an endpoint) — so summing the series matches
+    the per-round path's `AsyncGossipStats` exactly."""
+    bc = bcast_rj != 0                                        # [R, J]
+    active = jnp.sum(masks != 0, axis=1, dtype=jnp.int32)
+    broadcasts = jnp.sum(bc, axis=1, dtype=jnp.int32)
+    live = packed.nbr_mask != 0                               # [J, K]
+    recv = live[None] & bc[:, packed.nbr_idx]                 # [R, J, K]
+    if gossip == "edge":
+        recv = recv & (masks != 0)[:, :, None]
+    deliveries = jnp.sum(recv, axis=(1, 2), dtype=jnp.int32)
+    per_bcast = (packed.max_features * packed.num_outputs
+                 * np.dtype(packed.d.dtype).itemsize)
+    return (active, broadcasts, deliveries,
+            broadcasts * jnp.asarray(per_bcast, jnp.int32))
+
+
 def _async_solve_fused(packed, state, masks, thresholds, *, gossip,
-                       censored, chunk_rounds):
+                       censored, chunk_rounds, trace=False):
     """tol = 0 fused chain: the whole precomputed schedule (or each
     `chunk_rounds` slice of it) runs as one async-chain pallas_call. The
     kernel returns the full `AsyncGossipState`, so chunk boundaries chain
-    bit-exactly and the result is chunk-size bit-invariant."""
+    bit-exactly and the result is chunk-size bit-invariant. With
+    ``trace`` the same dispatches also fill the per-(round, node)
+    residual ([R, J] float) and broadcast-flag ([R, J] int32) blocks —
+    returned alongside θ, concatenated across chunks."""
     from repro.kernels.ops import dekrr_async_solve
 
     num_iters = int(masks.shape[0])
+    j_nodes = int(masks.shape[1])
 
     def call(st, mask_tab, thr_tab):
-        theta, sent, buffers = dekrr_async_solve(
+        outs = dekrr_async_solve(
             packed.g, packed.d, packed.s, packed.p, st.theta, st.sent,
             st.buffers, packed.nbr_idx, packed.nbr_mask, mask_tab,
-            thr_tab, gossip=gossip, censored=censored)
-        return AsyncGossipState(theta=theta, sent=sent, buffers=buffers)
+            thr_tab, gossip=gossip, censored=censored, trace=trace)
+        st = AsyncGossipState(theta=outs[0], sent=outs[1], buffers=outs[2])
+        return st, (outs[3], outs[4]) if trace else None
 
     if chunk_rounds is None or chunk_rounds >= num_iters:
-        return call(state, masks, thresholds).theta
+        state, tr = call(state, masks, thresholds)
+        return (state.theta,) + tr if trace else state.theta
 
     n_full, rem = divmod(num_iters, chunk_rounds)
     cut = n_full * chunk_rounds
 
     def chunk_fn(st, xs):
         mask_tab, thr_tab = xs
-        return call(st, mask_tab, thr_tab), None
+        return call(st, mask_tab, thr_tab)
 
-    state, _ = lax.scan(
+    state, trs = lax.scan(
         chunk_fn, state,
         (masks[:cut].reshape(n_full, chunk_rounds, masks.shape[1]),
          thresholds[:cut].reshape(n_full, chunk_rounds)))
+    tr_rem = None
     if rem:
-        state = call(state, masks[cut:], thresholds[cut:])
-    return state.theta
+        state, tr_rem = call(state, masks[cut:], thresholds[cut:])
+    if not trace:
+        return state.theta
+    res, bc = (t.reshape(-1, j_nodes) for t in trs)
+    if tr_rem is not None:
+        res = jnp.concatenate([res, tr_rem[0]])
+        bc = jnp.concatenate([bc, tr_rem[1]])
+    return state.theta, res, bc
 
 
 @partial(jax.jit, static_argnames=("num_iters", "gossip", "censored",
                                    "backend", "tol", "chunk_rounds",
-                                   "return_rounds", "return_stats"))
+                                   "return_rounds", "return_stats",
+                                   "return_trace"))
 def _async_solve_impl(packed, masks, thresholds, theta0, *, num_iters,
                       gossip, censored, backend, tol, chunk_rounds,
-                      return_rounds, return_stats):
+                      return_rounds, return_stats, return_trace):
     state0 = init_async_state(packed, theta0)
     zero = jnp.asarray(0, jnp.int32)
+    need_wire = return_stats or return_trace
 
-    if tol == 0.0 and backend == "pallas_fused" and not return_stats:
-        # Fused async chain: the whole schedule (or each chunk_rounds
-        # slice) is one pallas_call. tol > 0 keeps the per-round path
-        # (host-orchestrated convergence freeze), as does
-        # return_stats=True (the kernel does not emit wire counts).
-        theta = _async_solve_fused(packed, state0, masks, thresholds,
-                                   gossip=gossip, censored=censored,
-                                   chunk_rounds=chunk_rounds)
+    def finish(theta, rounds, nb, nd, series):
+        out = (theta,)
         if return_rounds:
-            return theta, jnp.asarray(num_iters, jnp.int32)
-        return theta
+            out = out + (rounds,)
+        if return_stats:
+            out = out + (AsyncGossipStats(rounds=rounds, broadcasts=nb,
+                                          deliveries=nd),)
+        if return_trace:
+            residuals, active, bcasts, delivs, wire_bytes = series
+            out = out + (AsyncSolveTrace(residuals=residuals, active=active,
+                                         broadcasts=bcasts,
+                                         deliveries=delivs,
+                                         bytes=wire_bytes),)
+        return out[0] if len(out) == 1 else out
+
+    if tol == 0.0 and backend == "pallas_fused":
+        # Fused async chain: the whole schedule (or each chunk_rounds
+        # slice) is one pallas_call. Only tol > 0 keeps the per-round
+        # path (host-orchestrated convergence freeze): stats and traces
+        # come from the kernel's own [R, J] residual/broadcast trace
+        # blocks, with the wire series derived in plain XLA.
+        rounds = jnp.asarray(num_iters, jnp.int32)
+        if not need_wire:
+            theta = _async_solve_fused(packed, state0, masks, thresholds,
+                                       gossip=gossip, censored=censored,
+                                       chunk_rounds=chunk_rounds)
+            return finish(theta, rounds, None, None, None)
+        theta, res, bc = _async_solve_fused(
+            packed, state0, masks, thresholds, gossip=gossip,
+            censored=censored, chunk_rounds=chunk_rounds, trace=True)
+        active, bcasts, delivs, wire_bytes = _wire_series(
+            packed, masks, bc, gossip=gossip)
+        residuals = jnp.max(res, axis=1) if num_iters else \
+            jnp.zeros((0,), theta.dtype)
+        return finish(theta, rounds, jnp.sum(bcasts), jnp.sum(delivs),
+                      (residuals, active, bcasts, delivs, wire_bytes))
 
     if tol == 0.0:
         def round_fn(carry, xs):
             state, nb, nd = carry
             mask_r, thr_r = xs
-            state, info = _async_round(packed, state, mask_r, thr_r,
-                                       gossip=gossip, censored=censored,
-                                       backend=backend)
-            return (state, nb + _count(info.bcast),
-                    nd + _count(info.received)), None
+            new_state, info = _async_round(packed, state, mask_r, thr_r,
+                                           gossip=gossip, censored=censored,
+                                           backend=backend)
+            ys = None
+            if return_trace:
+                ys = (jnp.max(jnp.abs(new_state.theta - state.theta)),
+                      info.bcast.astype(jnp.int32))
+            return (new_state, nb + _count(info.bcast),
+                    nd + _count(info.received)), ys
 
-        (state, nb, nd), _ = lax.scan(round_fn, (state0, zero, zero),
-                                      (masks, thresholds))
+        (state, nb, nd), ys = lax.scan(round_fn, (state0, zero, zero),
+                                       (masks, thresholds))
         rounds = jnp.asarray(num_iters, jnp.int32)
+        series = None
+        if return_trace:
+            residuals, bc = ys
+            series = (residuals,) + _wire_series(packed, masks, bc,
+                                                 gossip=gossip)
+        return finish(state.theta, rounds, nb, nd, series)
     else:
         # tol > 0: per-round convergence freeze inside chunked execution.
         # Convergence is evaluated after EVERY round (not at chunk
@@ -308,9 +385,17 @@ def _async_solve_impl(packed, masks, thresholds, theta0, *, num_iters,
         pad = n_chunks * chunk - num_iters
         masks_p = jnp.pad(masks, ((0, pad), (0, 0)))
         thresholds_p = jnp.pad(thresholds, (0, pad))
+        # Preallocated [num_iters] trace buffers, written in place at the
+        # absolute round index inside the existing scan: frozen (and
+        # never-run) rounds keep their 0, which is what makes tol-path
+        # traces chunk-invariant. mode="drop" ignores the padded rounds'
+        # out-of-range indices.
+        buf0 = (jnp.zeros((num_iters,), state0.theta.dtype),
+                jnp.zeros((num_iters,), jnp.int32),
+                jnp.zeros((num_iters,), jnp.int32)) if return_trace else ()
 
         def round_fn(carry, xs):
-            state, rounds, converged, nb, nd = carry
+            state, rounds, converged, nb, nd = carry[:5]
             mask_r, thr_r, r_abs = xs
             new_state, info = _async_round(packed, state, mask_r, thr_r,
                                            gossip=gossip,
@@ -321,40 +406,57 @@ def _async_solve_impl(packed, masks, thresholds, theta0, *, num_iters,
             state = jax.tree_util.tree_map(
                 lambda a, b: jnp.where(take, a, b), new_state, state)
             rounds = rounds + take.astype(jnp.int32)
-            nb = nb + jnp.where(take, _count(info.bcast), 0)
-            nd = nd + jnp.where(take, _count(info.received), 0)
+            b = jnp.where(take, _count(info.bcast), 0)
+            dv = jnp.where(take, _count(info.received), 0)
+            nb = nb + b
+            nd = nd + dv
             # A round the Bernoulli draw left all-silent has Δθ ≡ 0 by
             # construction — that is the schedule idling, not the
             # iteration converging, so it must not latch the stop.
             converged = converged | (take & jnp.any(mask_r)
                                      & (delta < tol))
-            return (state, rounds, converged, nb, nd), None
+            out = (state, rounds, converged, nb, nd)
+            if return_trace:
+                rbuf, bbuf, dbuf = carry[5:]
+                out = out + (
+                    rbuf.at[r_abs].set(jnp.where(take, delta, 0.0),
+                                       mode="drop"),
+                    bbuf.at[r_abs].set(b, mode="drop"),
+                    dbuf.at[r_abs].set(dv, mode="drop"))
+            return out, None
 
         def cond_fn(carry):
-            _, _, converged, _, _, chunk_idx = carry
+            converged, chunk_idx = carry[2], carry[-1]
             return jnp.logical_not(converged) & (chunk_idx < n_chunks)
 
         def body_fn(carry):
-            state, rounds, converged, nb, nd, chunk_idx = carry
+            chunk_idx = carry[-1]
             start = chunk_idx * chunk
             xs = (lax.dynamic_slice_in_dim(masks_p, start, chunk, 0),
                   lax.dynamic_slice_in_dim(thresholds_p, start, chunk, 0),
                   start + jnp.arange(chunk))
-            (state, rounds, converged, nb, nd), _ = lax.scan(
-                round_fn, (state, rounds, converged, nb, nd), xs)
-            return state, rounds, converged, nb, nd, chunk_idx + 1
+            carry, _ = lax.scan(round_fn, carry[:-1], xs)
+            return carry + (chunk_idx + 1,)
 
-        state, rounds, _, nb, nd, _ = lax.while_loop(
+        carry = lax.while_loop(
             cond_fn, body_fn,
-            (state0, zero, jnp.asarray(False), zero, zero, zero))
-
-    out = (state.theta,)
-    if return_rounds:
-        out = out + (rounds,)
-    if return_stats:
-        out = out + (AsyncGossipStats(rounds=rounds, broadcasts=nb,
-                                      deliveries=nd),)
-    return out[0] if len(out) == 1 else out
+            (state0, zero, jnp.asarray(False), zero, zero) + buf0 + (zero,))
+        state, rounds, _, nb, nd = carry[:5]
+        series = None
+        if return_trace:
+            residuals, bc_rounds, dv_rounds = carry[5:8]
+            # broadcast-flag [R, J] is not materialized on this path (the
+            # counts are), so active/bytes come from the schedule and the
+            # per-round broadcast counts; frozen rounds record 0 across
+            # every field.
+            ran = (jnp.arange(num_iters, dtype=jnp.int32)
+                   < rounds).astype(jnp.int32)
+            active = jnp.sum(masks != 0, axis=1, dtype=jnp.int32) * ran
+            per_bcast = (packed.max_features * packed.num_outputs
+                         * np.dtype(packed.d.dtype).itemsize)
+            series = (residuals, active, bc_rounds, dv_rounds,
+                      bc_rounds * jnp.asarray(per_bcast, jnp.int32))
+        return finish(state.theta, rounds, nb, nd, series)
 
 
 def async_solve_batched(packed: PackedProblem, num_iters: int,
@@ -364,7 +466,8 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
                         backend: str = "xla", tol: float = 0.0,
                         chunk_rounds: int | None = None,
                         return_rounds: bool = False,
-                        return_stats: bool = False):
+                        return_stats: bool = False,
+                        return_trace: bool = False):
     """Run up to `num_iters` async gossip rounds from θ = 0 (or theta0).
 
     The whole activation/censor schedule is precomputed from `key` via the
@@ -374,9 +477,10 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
     "pallas_fused" feeds the schedule through scalar prefetch and runs
     ALL rounds in one async-chain pallas_call — or one per
     ``chunk_rounds`` chunk, bit-invariant to the chunking — falling back
-    to the scanned per-round masked kernel only for the two accounting
-    modes the kernel cannot host (``tol > 0``, ``return_stats=True``;
-    see module docstring).
+    to the scanned per-round masked kernel only for the one accounting
+    mode the kernel cannot host (``tol > 0``; see module docstring —
+    ``return_stats``/``return_trace`` used to force this fallback too,
+    but now read the fused kernel's own trace blocks).
 
     ``tol > 0`` enables early stopping on max|Δθ| < tol, evaluated after
     every round on device — except rounds the activation draw left
@@ -386,7 +490,15 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
     independent of ``chunk_rounds`` (which only sets the while_loop
     dispatch granularity). ``return_rounds`` appends the rounds-run int32
     scalar; ``return_stats`` appends an `AsyncGossipStats` with the
-    cumulative broadcast/delivery counts for communication accounting.
+    cumulative broadcast/delivery counts for communication accounting;
+    ``return_trace`` appends a `repro.obs.trace.AsyncSolveTrace` of
+    per-round [num_iters] device buffers — max|Δθ| residuals plus the
+    scheduled/broadcast/delivery/bytes wire series (frozen and never-run
+    rounds record 0; sums reproduce the stats exactly). Appended outputs
+    keep that order: ``(theta[, rounds][, stats][, trace])``. Traces are
+    filled inside the existing scan/while/kernel round structure — no
+    host callback, no extra kernel dispatch (pinned by
+    ``tests/test_obs.py``).
 
     With ``config.is_synchronous`` this reproduces
     ``solve_batched(packed, num_iters, backend=backend)`` bit-for-bit.
@@ -409,7 +521,8 @@ def async_solve_batched(packed: PackedProblem, num_iters: int,
         packed, masks, thresholds, theta0, num_iters=num_iters,
         gossip=config.gossip, censored=config.censored, backend=backend,
         tol=float(tol), chunk_rounds=chunk_rounds,
-        return_rounds=return_rounds, return_stats=return_stats)
+        return_rounds=return_rounds, return_stats=return_stats,
+        return_trace=return_trace)
 
 
 # --------------------------------------------------------------------------
@@ -455,6 +568,16 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
     is the schedule idling, not convergence); θ and the round count
     match the batched async solve exactly. ``return_rounds=True``
     appends the rounds-run int32 scalar.
+
+    ``return_trace=True`` appends a `repro.obs.trace.AsyncSolveTrace`
+    with NO extra collective: each device records its LOCAL per-round
+    max|Δθ| and its own broadcast flag into scan outputs / while-loop
+    carry buffers, and the network-wide residual series (max over the
+    device axis) plus the wire series (broadcasts, deliveries from the
+    slot tables, bytes) are reduced *outside* the shard_map in plain
+    XLA — matching the batched async trace at rtol 1e-9 and its wire
+    counts exactly. Appended outputs keep the order
+    ``(theta[, rounds][, trace])``.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
@@ -466,9 +589,9 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
     rep = PartitionSpec()
 
     @partial(jax.jit, static_argnames=("offsets", "gossip", "censored",
-                                       "tol"))
+                                       "tol", "return_trace"))
     def _run(g, d, s, p, nbr_idx, nbr_mask, masks, thresholds, theta0, *,
-             offsets, gossip, censored, tol):
+             offsets, gossip, censored, tol, return_trace=False):
         j_nodes = d.shape[0]
         k_slots = p.shape[1]
 
@@ -513,7 +636,7 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
                 buffers = jnp.where(
                     jnp.reshape(gate, (-1,) + (1,) * (payload.ndim - 1)),
                     payload, buffers)
-                return new, sent_new, buffers
+                return new, sent_new, buffers, bcast
 
             # round-0 staleness view: every buffer holds its neighbor's
             # θ0 (init_async_state semantics — masked slots carry the
@@ -525,47 +648,72 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
                 def round_fn(carry, xs):
                     theta, sent, buffers = carry
                     mask_r, thr_r = xs
-                    return one_round(theta, sent, buffers, mask_r,
-                                     thr_r), None
+                    new, sent_new, buf_new, bcast = one_round(
+                        theta, sent, buffers, mask_r, thr_r)
+                    # LOCAL per-round trace: own max|Δθ| + own broadcast
+                    # flag — no collective; reduced outside the shard_map
+                    ys = (jnp.max(jnp.abs(new - theta)),
+                          bcast.astype(jnp.int32)) if return_trace \
+                        else None
+                    return (new, sent_new, buf_new), ys
 
-                (theta, _, _), _ = lax.scan(
+                (theta, _, _), ys = lax.scan(
                     round_fn, (theta0, theta0, buffers0),
                     (masks, thresholds))
-                return theta, jnp.full((1,), masks.shape[0], jnp.int32)
+                rounds = jnp.full((1,), masks.shape[0], jnp.int32)
+                if return_trace:
+                    return theta, rounds, ys[0][None], ys[1][None]
+                return theta, rounds
 
             # genuine early exit (matches the sync SPMD solver): the
             # pmax-fused delta keeps the per-device while_loop trip
             # counts identical, so the in-body collectives stay matched
             # and a converged solve stops paying for the budget's tail.
             def cond_fn(carry):
-                _, _, _, converged, rounds = carry
+                converged, rounds = carry[3], carry[4]
                 return jnp.logical_not(converged) & (rounds < masks.shape[0])
 
             def body_fn(carry):
-                theta, sent, buffers, converged, rounds = carry
+                theta, sent, buffers, converged, rounds = carry[:5]
                 mask_r = lax.dynamic_index_in_dim(masks, rounds, 0,
                                                   keepdims=False)
                 thr_r = lax.dynamic_index_in_dim(thresholds, rounds, 0,
                                                  keepdims=False)
-                new, sent_new, buf_new = one_round(theta, sent, buffers,
-                                                   mask_r, thr_r)
-                delta = lax.pmax(jnp.max(jnp.abs(new - theta)), axis_name)
+                new, sent_new, buf_new, bcast = one_round(
+                    theta, sent, buffers, mask_r, thr_r)
+                delta_local = jnp.max(jnp.abs(new - theta))
+                delta = lax.pmax(delta_local, axis_name)
                 # all-silent rounds have Δθ ≡ 0 by construction — the
                 # schedule idling, not convergence (same latch rule as
                 # the batched async solve)
                 converged = converged | (jnp.any(mask_r) & (delta < tol))
-                return new, sent_new, buf_new, converged, rounds + 1
+                out = (new, sent_new, buf_new, converged, rounds + 1)
+                if return_trace:
+                    rbuf, bbuf = carry[5:]
+                    out = out + (rbuf.at[rounds].set(delta_local),
+                                 bbuf.at[rounds].set(
+                                     bcast.astype(jnp.int32)))
+                return out
 
-            theta, _, _, _, rounds = lax.while_loop(
+            num_iters = masks.shape[0]
+            buf0 = (jnp.zeros((num_iters,), theta0.dtype),
+                    jnp.zeros((num_iters,), jnp.int32)) \
+                if return_trace else ()
+            carry = lax.while_loop(
                 cond_fn, body_fn,
                 (theta0, theta0, buffers0, jnp.asarray(False),
-                 jnp.asarray(0, jnp.int32)))
-            return theta, jnp.reshape(rounds, (1,))
+                 jnp.asarray(0, jnp.int32)) + buf0)
+            theta, rounds = carry[0], jnp.reshape(carry[4], (1,))
+            if return_trace:
+                return theta, rounds, carry[5][None], carry[6][None]
+            return theta, rounds
 
+        out_spec = (spec, spec, spec, spec) if return_trace \
+            else (spec, spec)
         sharded = shard_map(
             node_program, mesh=mesh,
             in_specs=(spec, spec, spec, spec, spec, spec, rep, rep, spec),
-            out_specs=(spec, spec),
+            out_specs=out_spec,
             # tol path: jax 0.4.x's scan rule rejects the pmax-derived
             # `converged` carry (replication changes across the carry);
             # the error text itself prescribes check_rep=False there.
@@ -577,7 +725,7 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
     def run(packed: PackedProblem, num_iters: int, key: jax.Array,
             config: AsyncGossipConfig = AsyncGossipConfig(),
             theta0: jax.Array | None = None, *, tol: float = 0.0,
-            return_rounds: bool = False):
+            return_rounds: bool = False, return_trace: bool = False):
         _check_spmd_problem(packed, mesh, axis_name, mode)
         if tol < 0:
             raise ValueError(f"tol must be >= 0, got {tol}")
@@ -593,13 +741,26 @@ def make_async_spmd_solver(mesh: Mesh, axis_name: str,
             dtype=packed.d.dtype)
         if theta0 is None:
             theta0 = jnp.zeros_like(packed.d)
-        theta, rounds = _run(packed.g, packed.d, packed.s, packed.p,
-                             packed.nbr_idx, packed.nbr_mask, masks,
-                             thresholds, theta0, offsets=packed.offsets,
-                             gossip=config.gossip,
-                             censored=config.censored, tol=float(tol))
+        outs = _run(packed.g, packed.d, packed.s, packed.p,
+                    packed.nbr_idx, packed.nbr_mask, masks,
+                    thresholds, theta0, offsets=packed.offsets,
+                    gossip=config.gossip, censored=config.censored,
+                    tol=float(tol), return_trace=return_trace)
+        theta, rounds = outs[0], outs[1]
+        out = (theta,)
         if return_rounds:
-            return theta, jnp.max(rounds)
-        return theta
+            out = out + (jnp.max(rounds),)
+        if return_trace:
+            # per-device [J, R] local residuals / broadcast flags →
+            # network-wide series, reduced outside the shard_map
+            res, bc = outs[2], outs[3]
+            active, bcasts, delivs, wire_bytes = _wire_series(
+                packed, masks, bc.T, gossip=config.gossip)
+            ran = (jnp.arange(num_iters, dtype=jnp.int32)
+                   < jnp.max(rounds)).astype(jnp.int32)
+            out = out + (AsyncSolveTrace(
+                residuals=jnp.max(res, axis=0), active=active * ran,
+                broadcasts=bcasts, deliveries=delivs, bytes=wire_bytes),)
+        return out[0] if len(out) == 1 else out
 
     return run

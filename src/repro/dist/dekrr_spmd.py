@@ -105,6 +105,8 @@ except ImportError:  # jax 0.4.x
     from jax.experimental.shard_map import shard_map
 
 from repro.analysis.vmem import check_index_table
+from repro.obs.spans import span
+from repro.obs.trace import SolveTrace
 
 __all__ = [
     "PackedProblem",
@@ -310,9 +312,11 @@ def pack_problem(solver, *, method: str = "batched",
                 "reference auxiliaries and ignores gram_backend — "
                 "gram_backend='pallas' would silently not be honored. "
                 "Use method='batched' for the Pallas streaming Gram path.")
-        return _pack_problem_from_aux(solver)
-    staged = _stage_packed_inputs(solver, gram_backend=gram_backend)
-    return _finish_packed(staged, _build_packed_aux(**staged))
+        with span("pack_problem", nodes=solver.J, method="aux"):
+            return _pack_problem_from_aux(solver)
+    with span("pack_problem", nodes=solver.J, method="batched"):
+        staged = _stage_packed_inputs(solver, gram_backend=gram_backend)
+        return _finish_packed(staged, _build_packed_aux(**staged))
 
 
 def _pack_problem_from_aux(solver) -> PackedProblem:
@@ -855,13 +859,43 @@ def _run_rounds(packed: PackedProblem, theta: jax.Array, num_rounds: int,
     return theta
 
 
+def _run_rounds_traced(packed: PackedProblem, theta: jax.Array,
+                       num_rounds: int, backend: str
+                       ) -> tuple[jax.Array, jax.Array]:
+    """`_run_rounds` emitting the per-round residuals [num_rounds] too:
+    residuals[r] = max|θ^{r+1} − θ^r| over every coordinate (padded slots
+    are identically zero on both sides, so no masking is needed). On
+    "pallas_fused" the per-(round, node) residual comes out of the SAME
+    pallas_call as an extra [R, J] output block — still one dispatch; the
+    per-round backends fold the same max into the existing scan."""
+    if num_rounds == 0:
+        return theta, jnp.zeros((0,), theta.dtype)
+    if backend == "pallas_fused":
+        from repro.kernels.ops import dekrr_solve
+
+        self_idx = jnp.arange(packed.num_nodes, dtype=jnp.int32)
+        theta, res = dekrr_solve(
+            packed.g, packed.d, packed.s, packed.p, theta,
+            packed.nbr_idx, self_idx, packed.nbr_mask,
+            num_rounds=num_rounds, trace=True)
+        return theta, jnp.max(res, axis=1)
+
+    def round_fn(th, _):
+        new = step_batched(packed, th, backend=backend)
+        return new, jnp.max(jnp.abs(new - th))
+
+    return lax.scan(round_fn, theta, None, length=num_rounds)
+
+
 @partial(jax.jit, static_argnames=("num_iters", "backend", "tol",
-                                   "chunk_rounds", "return_rounds"))
+                                   "chunk_rounds", "return_rounds",
+                                   "return_trace"))
 def solve_batched(packed: PackedProblem, num_iters: int,
                   theta0: jax.Array | None = None,
                   backend: str = "xla", *, tol: float = 0.0,
                   chunk_rounds: int | None = None,
-                  return_rounds: bool = False) -> jax.Array:
+                  return_rounds: bool = False,
+                  return_trace: bool = False) -> jax.Array:
     """Run up to `num_iters` batched rounds from θ = 0 (or theta0).
 
     ``backend="xla"|"pallas"`` scans the per-round step (`lax.scan`, one
@@ -882,6 +916,16 @@ def solve_batched(packed: PackedProblem, num_iters: int,
     ``return_rounds=True`` additionally returns the number of rounds
     actually run (an int32 scalar array; == num_iters unless tol stopped
     the solve early).
+
+    ``return_trace=True`` appends a `repro.obs.SolveTrace` whose
+    ``residuals`` is the on-device [num_iters] per-round convergence
+    series residuals[r] = max|θ^{r+1} − θ^r|, recorded inside the
+    existing scan/while/kernel round structure — zero host callbacks and
+    zero extra kernel dispatches ("pallas_fused" reads it off an extra
+    output block of the same pallas_call). Chunk-invariant: the series is
+    identical for every `chunk_rounds`. On tol-stopped solves the rounds
+    after the stop (frozen rounds) record 0. Return order is
+    ``(theta[, rounds][, trace])``.
     """
     _check_backend(backend)
     if tol < 0:
@@ -892,21 +936,31 @@ def solve_batched(packed: PackedProblem, num_iters: int,
         theta0 = jnp.zeros_like(packed.d)
     num_iters = int(num_iters)
 
+    def finish(theta, rounds, residuals):
+        out = (theta,)
+        if return_rounds:
+            out += (rounds,)
+        if return_trace:
+            out += (SolveTrace(residuals=residuals),)
+        return out if len(out) > 1 else theta
+
     if tol == 0.0:
         # No early stop: straight-line rounds (chunked only on request).
+        run = _run_rounds_traced if return_trace else (
+            lambda *a: (_run_rounds(*a), None))
         if chunk_rounds is None or chunk_rounds >= max(num_iters, 1):
-            theta = _run_rounds(packed, theta0, num_iters, backend)
+            theta, res = run(packed, theta0, num_iters, backend)
         else:
             n_full, rem = divmod(num_iters, chunk_rounds)
 
             def chunk_fn(th, _):
-                return _run_rounds(packed, th, chunk_rounds, backend), None
+                return run(packed, th, chunk_rounds, backend)
 
-            theta, _ = lax.scan(chunk_fn, theta0, None, length=n_full)
-            theta = _run_rounds(packed, theta, rem, backend)
-        if return_rounds:
-            return theta, jnp.asarray(num_iters, jnp.int32)
-        return theta
+            theta, res = lax.scan(chunk_fn, theta0, None, length=n_full)
+            theta, res_rem = run(packed, theta, rem, backend)
+            if return_trace:
+                res = jnp.concatenate([res.reshape(-1), res_rem])
+        return finish(theta, jnp.asarray(num_iters, jnp.int32), res)
 
     chunk = chunk_rounds if chunk_rounds is not None else (
         _FUSED_CHUNK_DEFAULT if backend == "pallas_fused" else 1)
@@ -914,26 +968,44 @@ def solve_batched(packed: PackedProblem, num_iters: int,
     n_full, rem = divmod(num_iters, chunk)
 
     def cond_fn(carry):
-        _, rounds, converged = carry
+        _, rounds, converged = carry[:3]
         return jnp.logical_not(converged) & (rounds < n_full * chunk)
 
     def body_fn(carry):
-        th, rounds, _ = carry
-        new = _run_rounds(packed, th, chunk, backend)
+        th, rounds = carry[0], carry[1]
+        if return_trace:
+            new, chunk_res = _run_rounds_traced(packed, th, chunk, backend)
+            # Preallocated [num_iters] buffer; frozen rounds stay 0.
+            buf = lax.dynamic_update_slice(carry[3], chunk_res, (rounds,))
+            tail = (buf,)
+        else:
+            new = _run_rounds(packed, th, chunk, backend)
+            tail = ()
         delta = jnp.max(jnp.abs(new - th))       # one fused on-device delta
-        return new, rounds + chunk, delta < tol
+        return (new, rounds + chunk, delta < tol) + tail
 
-    theta, rounds, converged = lax.while_loop(
-        cond_fn, body_fn,
-        (theta0, jnp.asarray(0, jnp.int32), jnp.asarray(False)))
+    init = (theta0, jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    if return_trace:
+        init += (jnp.zeros((num_iters,), theta0.dtype),)
+    carry = lax.while_loop(cond_fn, body_fn, init)
+    theta, rounds, converged = carry[:3]
+    res_buf = carry[3] if return_trace else None
     if rem:
-        theta = lax.cond(converged, lambda th: th,
-                         lambda th: _run_rounds(packed, th, rem, backend),
-                         theta)
+        if return_trace:
+            def rem_fn(op):
+                th, buf, rd = op
+                new, r = _run_rounds_traced(packed, th, rem, backend)
+                return new, lax.dynamic_update_slice(buf, r, (rd,))
+
+            theta, res_buf = lax.cond(
+                converged, lambda op: (op[0], op[1]), rem_fn,
+                (theta, res_buf, rounds))
+        else:
+            theta = lax.cond(
+                converged, lambda th: th,
+                lambda th: _run_rounds(packed, th, rem, backend), theta)
         rounds = jnp.where(converged, rounds, rounds + rem)
-    if return_rounds:
-        return theta, rounds
-    return theta
+    return finish(theta, rounds, res_buf)
 
 
 # --------------------------------------------------------------------------
@@ -1036,6 +1108,12 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
         round count exactly match
         ``solve_batched(..., tol=tol, chunk_rounds=1)``.
       * ``return_rounds=True`` appends the rounds-run int32 scalar.
+      * ``return_trace=True`` appends a `repro.obs.SolveTrace` with the
+        [num_iters] per-round network-wide max|Δθ| series. Each device
+        records its LOCAL per-round delta into the scan/while carry (no
+        extra collective); the network-wide max is reduced over the
+        device axis outside the shard_map. Frozen rounds (after a tol
+        stop) record 0. Return order: ``(theta[, rounds][, trace])``.
     """
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
@@ -1048,9 +1126,10 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
     # One jitted program per (shapes, num_iters, offsets, tol) — repeat
     # calls of the returned `run` hit the jit cache instead of re-tracing
     # shard_map.
-    @partial(jax.jit, static_argnames=("num_iters", "offsets", "tol"))
+    @partial(jax.jit, static_argnames=("num_iters", "offsets", "tol",
+                                       "return_trace"))
     def _run(g, d, s, p, nbr_idx, nbr_mask, theta0, *, num_iters, offsets,
-             tol):
+             tol, return_trace=False):
         j_nodes = d.shape[0]
         k_slots = p.shape[1]
 
@@ -1075,6 +1154,19 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
                                   nbr_theta, nbr_mask[0])[None]
 
             if tol == 0.0:
+                if return_trace:
+                    # Record the LOCAL per-round delta; the network-wide
+                    # max is a device-axis reduction outside the
+                    # shard_map, so tracing adds no collective.
+                    def round_fn(theta, _):
+                        new = one_round(theta)
+                        return new, jnp.max(jnp.abs(new - theta))
+
+                    theta, res = lax.scan(round_fn, theta0, None,
+                                          length=num_iters)
+                    rounds = jnp.full((1,), num_iters, jnp.int32)
+                    return theta, rounds, res[None]
+
                 def round_fn(theta, _):
                     return one_round(theta), None
 
@@ -1090,24 +1182,34 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
             # stop paying for the rest of the budget (the warm-start
             # common case).
             def cond_fn(carry):
-                _, converged, rounds = carry
+                _, converged, rounds = carry[:3]
                 return jnp.logical_not(converged) & (rounds < num_iters)
 
             def body_fn(carry):
-                theta, converged, rounds = carry
+                theta, converged, rounds = carry[:3]
                 new = one_round(theta)
-                delta = lax.pmax(jnp.max(jnp.abs(new - theta)), axis_name)
-                return new, converged | (delta < tol), rounds + 1
+                local = jnp.max(jnp.abs(new - theta))
+                delta = lax.pmax(local, axis_name)
+                state = (new, converged | (delta < tol), rounds + 1)
+                if return_trace:
+                    # Preallocated [num_iters] buffer in the carry;
+                    # frozen rounds after the stop stay 0.
+                    state += (carry[3].at[rounds].set(local),)
+                return state
 
-            theta, _, rounds = lax.while_loop(
-                cond_fn, body_fn,
-                (theta0, jnp.asarray(False), jnp.asarray(0, jnp.int32)))
-            return theta, jnp.reshape(rounds, (1,))
+            init = (theta0, jnp.asarray(False), jnp.asarray(0, jnp.int32))
+            if return_trace:
+                init += (jnp.zeros((num_iters,), theta0.dtype),)
+            carry = lax.while_loop(cond_fn, body_fn, init)
+            theta, rounds = carry[0], jnp.reshape(carry[2], (1,))
+            if return_trace:
+                return theta, rounds, carry[3][None]
+            return theta, rounds
 
         sharded = shard_map(
             node_program, mesh=mesh,
             in_specs=(spec, spec, spec, spec, spec, spec, spec),
-            out_specs=(spec, spec),
+            out_specs=(spec, spec, spec) if return_trace else (spec, spec),
             # jax 0.4.x has no replication rule for pallas_call, and its
             # scan rule rejects the pmax-derived `converged` carry of the
             # tol path (replication changes across the carry — the error
@@ -1120,19 +1222,25 @@ def make_spmd_solver(mesh: Mesh, axis_name: str, mode: str = "ppermute",
 
     def run(packed: PackedProblem, num_iters: int,
             theta0: jax.Array | None = None, *, tol: float = 0.0,
-            return_rounds: bool = False):
+            return_rounds: bool = False, return_trace: bool = False):
         _check_spmd_problem(packed, mesh, axis_name, mode)
         if tol < 0:
             raise ValueError(f"tol must be >= 0, got {tol}")
         if theta0 is None:
             theta0 = jnp.zeros_like(packed.d)
-        theta, rounds = _run(packed.g, packed.d, packed.s, packed.p,
-                             packed.nbr_idx, packed.nbr_mask, theta0,
-                             num_iters=int(num_iters),
-                             offsets=packed.offsets, tol=float(tol))
+        outs = _run(packed.g, packed.d, packed.s, packed.p,
+                    packed.nbr_idx, packed.nbr_mask, theta0,
+                    num_iters=int(num_iters),
+                    offsets=packed.offsets, tol=float(tol),
+                    return_trace=return_trace)
+        theta, rounds = outs[0], outs[1]
+        out = (theta,)
         if return_rounds:
-            return theta, jnp.max(rounds)
-        return theta
+            out += (jnp.max(rounds),)
+        if return_trace:
+            # [J, R] per-device local deltas → network-wide series.
+            out += (SolveTrace(residuals=jnp.max(outs[2], axis=0)),)
+        return out if len(out) > 1 else theta
 
     return run
 

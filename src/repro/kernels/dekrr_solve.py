@@ -85,8 +85,8 @@ _ROW_TIMES_MAT_T = (((1,), (1,)), ((), ()))
 
 
 def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
-                        theta0_ref, g_ref, d_ref, s_ref, p_ref, out_ref,
-                        tab_even_ref, tab_odd_ref):
+                        theta0_ref, g_ref, d_ref, s_ref, p_ref, *refs,
+                        trace: bool = False):
     """One node's Eq. 19 update at grid position (round, node).
 
     Scalar prefetch (SMEM): nbr_idx [J, K] int32, self_idx [J] int32,
@@ -95,7 +95,19 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
     (node j's θ row, overwritten every round — the last round wins).
     Scratch: tab_even/tab_odd [T, D] VMEM θ tables, alternating by round
     parity.
+
+    With static ``trace`` set, a second output block res [1, 1] at grid
+    index (r, j) records max|new − θ_self| over the node's [Dy, D] block
+    — the per-(round, node) convergence residual, written by the same
+    grid step that computes the round (zero extra dispatches). Padded
+    coordinates are identically zero on both sides of the subtraction,
+    so the max is exact over real coordinates.
     """
+    if trace:
+        (out_ref, out_res_ref, tab_even_ref, tab_odd_ref) = refs
+    else:
+        (out_ref, tab_even_ref, tab_odd_ref) = refs
+        out_res_ref = None
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
@@ -125,6 +137,8 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
         new = row_times(acc, g_ref[0])                           # G (…)
         write_ref[pl.ds(self_idx_ref[j] * dy, dy), :] = new
         out_ref[...] = new
+        if trace:
+            out_res_ref[0, 0] = jnp.max(jnp.abs(new - theta_self))
 
     even_round = r % 2 == 0
 
@@ -140,7 +154,7 @@ def _dekrr_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
 def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                        p: jax.Array, theta: jax.Array, nbr_idx: jax.Array,
                        self_idx: jax.Array, nbr_mask: jax.Array, *,
-                       num_rounds: int, dy: int = 1,
+                       num_rounds: int, dy: int = 1, trace: bool = False,
                        interpret: bool = False) -> jax.Array:
     """Raw pallas_call. All dims must already be padded/aligned:
 
@@ -151,7 +165,8 @@ def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
       dy ≥ 1 static (1 = scalar targets, today's layout).
     Returns the θ rows after `num_rounds` Jacobi rounds, [J·Dy, D] (rows
     [r·Dy, (r+1)·Dy) for node r — callers with T ≠ J re-assemble their
-    table themselves).
+    table themselves). With ``trace`` set, returns (θ rows, res [R, J])
+    where res[r, j] = max|Δθ_j| of round r — same single dispatch.
     """
     j_nodes = d.shape[0] // dy
     d_feat = d.shape[1]
@@ -173,17 +188,23 @@ def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             pl.BlockSpec((1, k_slots, d_feat, d_feat),
                          lambda r, j, *_: (j, 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
+        out_specs=(
+            (pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),
+             pl.BlockSpec((1, 1), lambda r, j, *_: (r, j)))
+            if trace else
+            pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0))),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
         ],
     )
+    theta_shape = jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype)
+    res_shape = jax.ShapeDtypeStruct((num_rounds, j_nodes), theta.dtype)
     flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
-        _dekrr_solve_kernel,
+        functools.partial(_dekrr_solve_kernel, trace=trace),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
+        out_shape=(theta_shape, res_shape) if trace else theta_shape,
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=(t_rows * d_feat            # θ0, fetched once
@@ -200,11 +221,9 @@ def dekrr_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
 # --------------------------------------------------------------- async chain
 def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
                               theta0_ref, sent0_ref, buf0_ref, g_ref, d_ref,
-                              s_ref, p_ref, out_theta_ref, out_sent_ref,
-                              out_buf_ref, tab_even_ref, tab_odd_ref,
-                              sent_ref, buf_ref, fl_even_ref, fl_odd_ref, *,
-                              censored: bool, edge_gossip: bool,
-                              num_rounds: int):
+                              s_ref, p_ref, *refs, censored: bool,
+                              edge_gossip: bool, num_rounds: int,
+                              trace: bool = False):
     """R censored async-gossip rounds in one kernel; grid (R + 1, J).
 
     The whole COKE schedule is precomputed, so it rides scalar prefetch:
@@ -238,7 +257,23 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
     The arithmetic sequence is identical to the per-round masked kernel
     on the [θ; buffers] concat table, so the chain is bit-for-bit the
     scanned per-round "pallas" backend.
+
+    With static ``trace`` set, two more output blocks at grid index
+    (r, j) — res [1, 1] float and bc [1, 1] int32, shapes [R + 1, J] —
+    record max|new − θ_self| and the round's broadcast flag for active
+    nodes (0/0 for inactive nodes and the delivery-flush step). Written
+    by the same grid steps: zero extra dispatches. The caller slices off
+    the flush row and derives the wire series (deliveries, bytes) from
+    the bc flags + slot tables in plain XLA.
     """
+    if trace:
+        (out_theta_ref, out_sent_ref, out_buf_ref, out_res_ref, out_bc_ref,
+         tab_even_ref, tab_odd_ref, sent_ref, buf_ref, fl_even_ref,
+         fl_odd_ref) = refs
+    else:
+        (out_theta_ref, out_sent_ref, out_buf_ref, tab_even_ref,
+         tab_odd_ref, sent_ref, buf_ref, fl_even_ref, fl_odd_ref) = refs
+        out_res_ref = out_bc_ref = None
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
@@ -286,17 +321,23 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
             new = row_times(acc, g_ref[0])                       # G (…)
             write_tab[pl.ds(j * dy, dy), :] = new
             out_theta_ref[...] = new
+            if trace:
+                out_res_ref[0, 0] = jnp.max(jnp.abs(new - theta_self))
             if censored:
                 # max over features AND outputs — the [Dy, D] block
                 delta = jnp.max(jnp.abs(new - sent_ref[pl.ds(j * dy, dy), :]))
                 bc = delta > thr_ref[r]
                 fl_write[j] = bc.astype(jnp.int32)
+                if trace:
+                    out_bc_ref[0, 0] = bc.astype(jnp.int32)
 
                 @pl.when(bc)
                 def _bcast():
                     sent_ref[pl.ds(j * dy, dy), :] = new
             else:
                 fl_write[j] = jnp.int32(1)
+                if trace:
+                    out_bc_ref[0, 0] = jnp.int32(1)
                 sent_ref[pl.ds(j * dy, dy), :] = new
 
         @pl.when(jnp.logical_not(is_active))
@@ -307,6 +348,12 @@ def _dekrr_async_solve_kernel(nbr_idx_ref, nbr_mask_ref, active_ref, thr_ref,
             fl_write[j] = jnp.int32(0)
 
     def step(read_tab, write_tab, fl_read, fl_write):
+        if trace:
+            # Defaults every grid step (inactive nodes and the flush row
+            # record 0); the active-node update overwrites both.
+            out_res_ref[0, 0] = jnp.zeros((), dtype)
+            out_bc_ref[0, 0] = jnp.int32(0)
+
         @pl.when(r >= 1)
         def _deliver():
             deliver(read_tab, fl_read)
@@ -340,8 +387,9 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                              nbr_idx: jax.Array, nbr_mask: jax.Array,
                              active_tab: jax.Array, thresholds: jax.Array,
                              *, censored: bool, edge_gossip: bool,
-                             dy: int = 1, interpret: bool = False
-                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                             dy: int = 1, trace: bool = False,
+                             interpret: bool = False
+                             ) -> tuple[jax.Array, ...]:
     """Raw pallas_call. All dims must already be padded/aligned:
 
       g/s [J, D, D], d [J·Dy, D], p [J, K, D, D] with K ≥ 1 and D a
@@ -352,7 +400,10 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
       active_tab [R, J] int32 with R ≥ 1 static; thresholds [R] float;
       dy ≥ 1 static (1 = scalar targets, today's layout).
     Returns the post-schedule (θ rows [J·Dy, D], sent rows [J·Dy, D],
-    buffer rows [J·K·Dy, D]).
+    buffer rows [J·K·Dy, D]). With ``trace`` set, appends
+    (res [R + 1, J] float, bc [R + 1, J] int32) — per-(round, node)
+    max|Δθ| and broadcast flags, last row (delivery flush) all-zero —
+    still one dispatch.
     """
     j_nodes = d.shape[0] // dy
     d_feat = d.shape[1]
@@ -386,7 +437,10 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # sent
             pl.BlockSpec((k_slots * dy, d_feat),
                          lambda r, j, *_: (j, 0)),                    # buf
-        ),
+        ) + ((
+            pl.BlockSpec((1, 1), lambda r, j, *_: (r, j)),            # res
+            pl.BlockSpec((1, 1), lambda r, j, *_: (r, j)),            # bc
+        ) if trace else ()),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
@@ -398,7 +452,7 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     )
     kernel = functools.partial(
         _dekrr_async_solve_kernel, censored=censored,
-        edge_gossip=edge_gossip, num_rounds=num_rounds)
+        edge_gossip=edge_gossip, num_rounds=num_rounds, trace=trace)
     flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
         kernel,
@@ -408,7 +462,10 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
             jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
             jax.ShapeDtypeStruct((j_nodes * k_slots * dy, d_feat),
                                  theta.dtype),
-        ),
+        ) + ((
+            jax.ShapeDtypeStruct((num_rounds + 1, j_nodes), theta.dtype),
+            jax.ShapeDtypeStruct((num_rounds + 1, j_nodes), jnp.int32),
+        ) if trace else ()),
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=((2 * t_rows + b_rows) * d_feat
@@ -426,9 +483,8 @@ def dekrr_async_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
 # ---------------------------------------------------------------- chebyshev
 def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
                              alpha_ref, beta_ref, theta0_ref, delta0_ref,
-                             g_ref, d_ref, s_ref, p_ref, out_theta_ref,
-                             out_delta_ref, tab_even_ref, tab_odd_ref,
-                             delta_ref):
+                             g_ref, d_ref, s_ref, p_ref, *refs,
+                             trace: bool = False):
     """R Chebyshev semi-iteration rounds in one kernel; grid (R, J).
 
     Identical layout to the plain fused solve — parity-alternating θ
@@ -445,7 +501,19 @@ def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
     θ and p rows are emitted every round (last round wins) so chunked
     callers can chain bit-exactly — the exact recurrence
     `repro.core.acceleration.chebyshev_scan` runs on the host/XLA paths.
+
+    With static ``trace`` set, one more output block res [1, 1] at grid
+    index (r, j) records max|θ_new − θ_j| (the accelerated update's
+    actual step α_r p_j, not the F-residual) — shape [R, J], written by
+    the same grid steps, zero extra dispatches.
     """
+    if trace:
+        (out_theta_ref, out_delta_ref, out_res_ref, tab_even_ref,
+         tab_odd_ref, delta_ref) = refs
+    else:
+        (out_theta_ref, out_delta_ref, tab_even_ref, tab_odd_ref,
+         delta_ref) = refs
+        out_res_ref = None
     r = pl.program_id(0)
     j = pl.program_id(1)
     num_slots = nbr_idx_ref.shape[1]
@@ -480,6 +548,8 @@ def _dekrr_cheb_solve_kernel(nbr_idx_ref, self_idx_ref, nbr_mask_ref,
         delta_ref[pl.ds(j * dy, dy), :] = p_new
         out_theta_ref[...] = th_new
         out_delta_ref[...] = p_new
+        if trace:
+            out_res_ref[0, 0] = jnp.max(jnp.abs(th_new - theta_self))
 
     even_round = r % 2 == 0
 
@@ -497,14 +567,16 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
                             delta: jax.Array, nbr_idx: jax.Array,
                             self_idx: jax.Array, nbr_mask: jax.Array,
                             alphas: jax.Array, betas: jax.Array, *,
-                            dy: int = 1, interpret: bool = False
-                            ) -> tuple[jax.Array, jax.Array]:
+                            dy: int = 1, trace: bool = False,
+                            interpret: bool = False
+                            ) -> tuple[jax.Array, ...]:
     """Raw pallas_call. Same operand contract as `dekrr_solve_pallas`
     (Dy-flattened θ/d rows when dy > 1), plus delta [J'·Dy, D] (J' ≥ J,
     J'·Dy a multiple of 8, rows [j·Dy, (j+1)·Dy) = node j's direction
     state p) and the [R] float (α, β) schedule with R ≥ 1 static.
     Returns the (θ rows [J·Dy, D], p rows [J·Dy, D]) after R Chebyshev
-    rounds.
+    rounds. With ``trace`` set, appends res [R, J] — per-(round, node)
+    max|Δθ| of the accelerated update — same single dispatch.
     """
     j_nodes = d.shape[0] // dy
     d_feat = d.shape[1]
@@ -535,7 +607,9 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
         out_specs=(
             pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # θ
             pl.BlockSpec((dy, d_feat), lambda r, j, *_: (j, 0)),      # Δ
-        ),
+        ) + ((
+            pl.BlockSpec((1, 1), lambda r, j, *_: (r, j)),            # res
+        ) if trace else ()),
         scratch_shapes=[
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # even-round table
             pltpu.VMEM((t_rows, d_feat), theta.dtype),   # odd-round table
@@ -544,12 +618,14 @@ def dekrr_cheb_solve_pallas(g: jax.Array, d: jax.Array, s: jax.Array,
     )
     flops_per_node = 2 * (2 + k_slots) * d_feat * d_feat * dy
     return pl.pallas_call(
-        _dekrr_cheb_solve_kernel,
+        functools.partial(_dekrr_cheb_solve_kernel, trace=trace),
         grid_spec=grid_spec,
         out_shape=(
             jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
             jax.ShapeDtypeStruct((j_nodes * dy, d_feat), theta.dtype),
-        ),
+        ) + ((
+            jax.ShapeDtypeStruct((num_rounds, j_nodes), theta.dtype),
+        ) if trace else ()),
         cost_estimate=pl.CostEstimate(
             flops=num_rounds * j_nodes * flops_per_node,
             bytes_accessed=((t_rows + j_rows) * d_feat

@@ -337,29 +337,36 @@ def dekrr_step(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                            active, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("num_rounds", "interpret"))
+@partial(jax.jit, static_argnames=("num_rounds", "trace", "interpret"))
 def _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask, *,
-                     num_rounds, interpret=None):
+                     num_rounds, trace=False, interpret=None):
     if interpret is None:
         interpret = _interpret_default()
     d_feat = d.shape[1]
     dy = _dekrr_dy(d)
     self_idx = self_idx.astype(jnp.int32)
     if num_rounds == 0:
-        return theta[self_idx]
+        out0 = theta[self_idx]
+        if trace:
+            return out0, jnp.zeros((0, d.shape[0]), theta.dtype)
+        return out0
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
     out = dekrr_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, self_idx, nbr_mask_p,
-        num_rounds=num_rounds, dy=dy, interpret=interpret)
+        num_rounds=num_rounds, dy=dy, trace=trace, interpret=interpret)
+    if trace:
+        out, res = out
+        return _unflatten_dy(out, dy, d_feat, d.ndim), res
     return _unflatten_dy(out, dy, d_feat, d.ndim)
 
 
 def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
                 theta: jax.Array, nbr_idx: jax.Array, self_idx: jax.Array,
                 nbr_mask: jax.Array, *, num_rounds: int,
-                interpret: bool | None = None) -> jax.Array:
+                trace: bool = False, interpret: bool | None = None
+                ) -> jax.Array | tuple[jax.Array, jax.Array]:
     """Fused multi-round Eq. 19 solve: `num_rounds` Jacobi rounds in ONE
     pallas_call, θ tables VMEM-resident across rounds (grid = (R, J),
     `repro.kernels.dekrr_solve`).
@@ -375,6 +382,10 @@ def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
     slot axis to K ≥ 1) and slices the padding back off; `num_rounds=0`
     returns the `self_idx` rows of θ unchanged.
 
+    Static ``trace`` appends a res [R, J] convergence-trace array —
+    res[r, j] = max|Δθ_j| of round r, written by the same grid steps
+    (zero extra dispatches; `num_rounds=0` returns an empty [0, J]).
+
     VMEM working set at the padded shapes is `2·T·D + 2·(2+K)·D² + 3·D`
     elements — double the step kernel's θ/block terms for the
     round-parity scratch tables and double-buffered streams
@@ -387,7 +398,8 @@ def dekrr_solve(g: jax.Array, d: jax.Array, s: jax.Array, p: jax.Array,
         _check_dekrr_budget("dekrr_solve", d, p, theta)
     _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
     return _dekrr_solve_jit(g, d, s, p, theta, nbr_idx, self_idx, nbr_mask,
-                            num_rounds=num_rounds, interpret=interpret)
+                            num_rounds=num_rounds, trace=trace,
+                            interpret=interpret)
 
 
 def _check_async_nbr_indices(j_nodes, nbr_idx, nbr_mask) -> None:
@@ -409,15 +421,17 @@ def _check_async_nbr_indices(j_nodes, nbr_idx, nbr_mask) -> None:
     check_index_table("nbr_idx", idx, j_nodes)
 
 
-@partial(jax.jit, static_argnames=("gossip", "censored", "interpret"))
+@partial(jax.jit, static_argnames=("gossip", "censored", "trace",
+                                   "interpret"))
 def _dekrr_async_solve_jit(g, d, s, p, theta, sent, buffers, nbr_idx,
                            nbr_mask, active_tab, thresholds, *, gossip,
-                           censored, interpret=None):
+                           censored, trace=False, interpret=None):
     if interpret is None:
         interpret = _interpret_default()
     j_nodes, d_feat = d.shape[0], d.shape[1]
     dy = _dekrr_dy(d)
     k_in = buffers.shape[1]
+    num_rounds = active_tab.shape[0]
 
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
@@ -434,18 +448,24 @@ def _dekrr_async_solve_jit(g, d, s, p, theta, sent, buffers, nbr_idx,
         buf_flat = buf.transpose(0, 1, 3, 2).reshape(
             j_nodes * k_pad * dy, d_feat)
     buf_p = _pad_to(_pad_to(buf_flat, 1, 128), 0, 8)
-    out_theta, out_sent, out_buf = dekrr_async_solve_pallas(
+    outs = dekrr_async_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, sent_p, buf_p, nbr_idx_p, nbr_mask_p,
         (active_tab != 0).astype(jnp.int32), thresholds.astype(d.dtype),
         censored=censored, edge_gossip=(gossip == "edge"), dy=dy,
-        interpret=interpret)
+        trace=trace, interpret=interpret)
+    out_theta, out_sent, out_buf = outs[:3]
     if d.ndim == 2:
         out_buf = out_buf.reshape(j_nodes, k_pad, -1)[:, :k_in, :d_feat]
     else:
         out_buf = out_buf.reshape(j_nodes, k_pad, dy, -1)[
             :, :k_in, :, :d_feat].transpose(0, 1, 3, 2)
-    return (_unflatten_dy(out_theta, dy, d_feat, d.ndim),
-            _unflatten_dy(out_sent, dy, d_feat, d.ndim), out_buf)
+    state = (_unflatten_dy(out_theta, dy, d_feat, d.ndim),
+             _unflatten_dy(out_sent, dy, d_feat, d.ndim), out_buf)
+    if trace:
+        # Drop the delivery-flush row — it computes no round.
+        res, bc = outs[3], outs[4]
+        return state + (res[:num_rounds], bc[:num_rounds])
+    return state
 
 
 def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
@@ -453,9 +473,9 @@ def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
                       buffers: jax.Array, nbr_idx: jax.Array,
                       nbr_mask: jax.Array, active_tab: jax.Array,
                       thresholds: jax.Array, *, gossip: str = "bernoulli",
-                      censored: bool = False,
+                      censored: bool = False, trace: bool = False,
                       interpret: bool | None = None
-                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+                      ) -> tuple[jax.Array, ...]:
     """Fused async-gossip chain: the whole R-round COKE schedule in ONE
     pallas_call (`repro.kernels.dekrr_solve._dekrr_async_solve_kernel`).
 
@@ -476,6 +496,12 @@ def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
     [J, K, D, Dy]; the in-kernel censor reduction runs over features AND
     outputs, matching `repro.dist.async_gossip`.
 
+    Static ``trace`` appends (res [R, J] float, bc [R, J] int32) —
+    per-(round, node) max|Δθ| and broadcast flags (0/0 for inactive
+    nodes), written by the same grid steps (zero extra dispatches;
+    R = 0 returns empty [0, J] arrays). The caller derives the wire
+    series (deliveries, bytes) from bc + the slot tables in plain XLA.
+
     The in-kernel round replays `repro.dist.async_gossip._async_round`'s
     operation sequence, so the chain is bit-for-bit the scanned per-round
     masked kernel (and, at p = 1 uncensored, the sync fused solve).
@@ -490,16 +516,23 @@ def dekrr_async_solve(g: jax.Array, d: jax.Array, s: jax.Array,
                          f"got {gossip!r}")
     _check_async_nbr_indices(int(d.shape[0]), nbr_idx, nbr_mask)
     if int(active_tab.shape[0]) == 0:
+        if trace:
+            j_nodes = int(d.shape[0])
+            return (theta, sent, buffers,
+                    jnp.zeros((0, j_nodes), theta.dtype),
+                    jnp.zeros((0, j_nodes), jnp.int32))
         return theta, sent, buffers
     _check_dekrr_budget("dekrr_async_solve", d, p, theta)
     return _dekrr_async_solve_jit(
         g, d, s, p, theta, sent, buffers, nbr_idx, nbr_mask, active_tab,
-        thresholds, gossip=gossip, censored=censored, interpret=interpret)
+        thresholds, gossip=gossip, censored=censored, trace=trace,
+        interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
+@partial(jax.jit, static_argnames=("trace", "interpret"))
 def _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx, self_idx,
-                          nbr_mask, alphas, betas, *, interpret=None):
+                          nbr_mask, alphas, betas, *, trace=False,
+                          interpret=None):
     if interpret is None:
         interpret = _interpret_default()
     d_feat = d.shape[1]
@@ -508,21 +541,25 @@ def _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx, self_idx,
     g_p, d_p, s_p, p_p, theta_p, nbr_idx_p, nbr_mask_p = \
         _pad_dekrr_operands(g, d, s, p, theta, nbr_idx, nbr_mask)
     delta_p = _pad_to(_pad_to(_flatten_dy(delta), 1, 128), 0, 8)
-    out_theta, out_delta = dekrr_cheb_solve_pallas(
+    outs = dekrr_cheb_solve_pallas(
         g_p, d_p, s_p, p_p, theta_p, delta_p, nbr_idx_p,
         self_idx.astype(jnp.int32), nbr_mask_p,
         alphas.astype(d.dtype), betas.astype(d.dtype), dy=dy,
-        interpret=interpret)
-    return (_unflatten_dy(out_theta, dy, d_feat, d.ndim),
-            _unflatten_dy(out_delta, dy, d_feat, d.ndim))
+        trace=trace, interpret=interpret)
+    out = (_unflatten_dy(outs[0], dy, d_feat, d.ndim),
+           _unflatten_dy(outs[1], dy, d_feat, d.ndim))
+    if trace:
+        return out + (outs[2],)
+    return out
 
 
 def dekrr_cheb_solve(g: jax.Array, d: jax.Array, s: jax.Array,
                      p: jax.Array, theta: jax.Array, delta: jax.Array,
                      nbr_idx: jax.Array, self_idx: jax.Array,
                      nbr_mask: jax.Array, alphas: jax.Array,
-                     betas: jax.Array, *, interpret: bool | None = None
-                     ) -> tuple[jax.Array, jax.Array]:
+                     betas: jax.Array, *, trace: bool = False,
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, ...]:
     """Fused Chebyshev semi-iteration: R accelerated Eq. 19 rounds in ONE
     pallas_call (`repro.kernels.dekrr_solve._dekrr_cheb_solve_kernel`).
 
@@ -537,18 +574,26 @@ def dekrr_cheb_solve(g: jax.Array, d: jax.Array, s: jax.Array,
     returns (theta[self_idx], delta) unchanged. Multi-output:
     d/theta/delta gain a trailing Dy axis → ([J, D, Dy], [J, D, Dy]).
 
+    Static ``trace`` appends res [R, J] — per-(round, node) max|Δθ| of
+    the accelerated update (the actual step α_r p, not the F-residual),
+    written by the same grid steps (zero extra dispatches; R = 0 returns
+    an empty [0, J]).
+
     VMEM working set at the padded shapes is
     `3·T·D + 2·J'·D + 2·(2+K)·D² + 3·D` elements (consolidated table:
     `repro.analysis.vmem`); over-budget shapes raise `VmemBudgetError`
     here, before dispatch.
     """
     if int(alphas.shape[0]) == 0:
+        if trace:
+            return (theta[self_idx], delta,
+                    jnp.zeros((0, int(d.shape[0])), theta.dtype))
         return theta[self_idx], delta
     _check_dekrr_budget("dekrr_cheb_solve", d, p, theta)
     _check_dekrr_indices(theta, nbr_idx, self_idx, nbr_mask)
     return _dekrr_cheb_solve_jit(g, d, s, p, theta, delta, nbr_idx,
                                  self_idx, nbr_mask, alphas, betas,
-                                 interpret=interpret)
+                                 trace=trace, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_n", "interpret"))

@@ -18,7 +18,6 @@ Usage:
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
@@ -29,6 +28,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import ShardingRules
 from repro.launch.specs import input_specs
 from repro.models.model import active_param_count, analytic_param_count
+from repro.obs.metrics import perf_clock
 
 
 def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
@@ -46,7 +46,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         _write(result, out_dir)
         return result
 
-    t0 = time.perf_counter()
+    t0 = perf_clock()
     mesh = make_production_mesh(multi_pod=multi_pod, data=data_ax,
                                 model=model_ax)
     rules = ShardingRules(mesh)
@@ -66,9 +66,9 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
             pair["fn"], in_shardings=pair["in_shardings"],
             donate_argnums=pair["donate_argnums"], **kw,
         ).lower(*pair["args"])
-        t_lower = time.perf_counter() - t0
+        t_lower = perf_clock() - t0
         compiled = lowered.compile()
-        t_compile = time.perf_counter() - t0 - t_lower
+        t_compile = perf_clock() - t0 - t_lower
 
     roof = analyze_compiled(compiled)
     mem_dep = compiled.memory_analysis()

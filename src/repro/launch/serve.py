@@ -6,10 +6,11 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
+
+from repro.obs.metrics import perf_clock
 
 
 def main():
@@ -41,7 +42,7 @@ def main():
     step = jax.jit(model.decode_step)
 
     # prefill via repeated decode (teacher forcing the prompt)
-    t0 = time.perf_counter()
+    t0 = perf_clock()
     tok = None
     for t in range(args.prompt_len):
         logits, cache = step(params, cache, prompt[:, t:t + 1],
@@ -52,7 +53,7 @@ def main():
         out.append(tok)
         logits, cache = step(params, cache, tok, jnp.asarray(t, jnp.int32))
         tok = jnp.argmax(logits, axis=-1)[:, None]
-    dt = time.perf_counter() - t0
+    dt = perf_clock() - t0
     gen = jnp.concatenate(out, axis=1)
     toks_per_s = b * max_len / dt
     print(f"generated {gen.shape} tokens in {dt:.2f}s "

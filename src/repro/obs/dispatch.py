@@ -1,0 +1,102 @@
+"""Dispatch accounting: static pallas_call counts of traced programs.
+
+`count_pallas_dispatches` is the J002 primitive (it moved here from
+`repro.analysis.jaxpr_lint`, which re-imports it — obs is the lower
+layer): walk a closed jaxpr, count `pallas_call` equations with
+`lax.scan` length multipliers, and report whether the count is exact
+(a dispatch under `while` makes it a one-trip lower bound).
+
+`dispatch_count(fn, *args, **kwargs)` is the user-facing hook: trace
+`fn` on the given arguments (tracing only — no numerics run, no device
+work) and count. This is how `tests/test_obs.py` proves that
+`return_trace=True` adds zero extra kernel dispatches, and how any
+harness can assert a program's dispatch contract without running it.
+
+jax is imported lazily inside the functions: importing `repro.obs`
+must not freeze the process's platform config (the analysis CLI sets
+JAX_PLATFORMS/XLA_FLAGS before its first jax import).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+__all__ = ["count_pallas_dispatches", "dispatch_count"]
+
+
+def _is_jaxpr(v) -> bool:
+    return type(v).__name__ in ("Jaxpr", "ClosedJaxpr")
+
+
+def _inner(j):
+    """Unwrap ClosedJaxpr → Jaxpr (ClosedJaxpr has .jaxpr + .consts)."""
+    return j.jaxpr if hasattr(j, "consts") and hasattr(j, "jaxpr") else j
+
+
+def _jaxpr_params(value):
+    """Yield every jaxpr-valued leaf of one eqn param value."""
+    if _is_jaxpr(value):
+        yield value
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _jaxpr_params(v)
+
+
+def _sub_jaxprs(eqn):
+    """Yield (jaxpr, frame) for each sub-jaxpr of `eqn` — the same
+    frame vocabulary `repro.analysis.jaxpr_lint` walks with."""
+    name = eqn.primitive.name
+    p = eqn.params
+    if name == "pallas_call":
+        return
+    if name == "scan":
+        yield p["jaxpr"], ("scan", int(p.get("length", 1)))
+    elif name == "while":
+        yield p["cond_jaxpr"], ("while_cond", None)
+        yield p["body_jaxpr"], ("while_body", None)
+    elif name == "cond":
+        for br in p["branches"]:
+            yield br, ("cond_branch", None)
+    elif name == "shard_map":
+        yield p["jaxpr"], ("shard_map", eqn)
+    else:
+        for v in p.values():
+            for sub in _jaxpr_params(v):
+                yield sub, ("call", None)
+
+
+def count_pallas_dispatches(closed) -> tuple[int, bool]:
+    """(#pallas_call dispatches, exact?) with `lax.scan` length
+    multipliers. A dispatch under `while` makes the count inexact (trip
+    count is dynamic); the returned count then assumes one trip."""
+    def rec(jaxpr):
+        count, exact = 0, True
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "pallas_call":
+                count += 1
+            for sub, frame in _sub_jaxprs(eqn):
+                c, e = rec(_inner(sub))
+                if frame[0] == "scan":
+                    c *= frame[1]
+                elif frame[0] in ("while_body", "while_cond"):
+                    e = e and c == 0
+                count += c
+                exact = exact and e
+        return count, exact
+
+    return rec(_inner(closed))
+
+
+def dispatch_count(fn: Callable, *args: Any,
+                   **kwargs: Any) -> tuple[int, bool]:
+    """Trace ``fn(*args, **kwargs)`` (abstractly — nothing executes)
+    and return its static ``(pallas_call dispatches, exact?)``.
+
+    Keyword arguments are closed over as static configuration, matching
+    how the solvers take their ``backend=``/``tol=``/``return_trace=``
+    knobs; positional arguments become tracers."""
+    import functools
+
+    import jax
+
+    closed = jax.make_jaxpr(functools.partial(fn, **kwargs))(*args)
+    return count_pallas_dispatches(closed)

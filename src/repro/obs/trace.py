@@ -1,0 +1,80 @@
+"""On-device convergence-trace containers.
+
+The solvers' `return_trace=` paths fill these with preallocated
+``[num_rounds]`` device arrays written *inside* the existing
+while/scan/kernel round structure — zero host callbacks, zero extra
+kernel dispatches (the J001/J002 passes pin both). This module is
+jax-free on purpose: the NamedTuples are plain containers (jax treats
+them as pytrees structurally), so the analysis CLI and the report
+renderer can import them before the process fixes its jax platform
+config.
+
+Semantics shared by every producer (and pinned at rtol 1e-9 by
+``tests/test_obs.py`` against a per-round recomputation):
+
+  * ``residuals[r]`` is ``max|θ_{r+1} − θ_r|`` over every real
+    coordinate of round ``r`` (0-based). Padded slots contribute exactly
+    0 — the packed layout's zero-padding algebra keeps padded
+    coordinates identically zero, so no masking is needed.
+  * On ``tol > 0`` paths the trace is still length ``num_rounds``:
+    rounds after the stop (frozen rounds) record 0. This is what makes
+    traces chunk-invariant — chunking changes *when* the stop check
+    runs, never what each executed round wrote.
+  * Async traces additionally record the per-round wire activity the
+    comm frontier is made of; summing them reproduces
+    ``AsyncGossipStats`` exactly (the fused backend builds its stats
+    from these buffers).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+__all__ = ["AsyncSolveTrace", "SolveTrace"]
+
+
+class SolveTrace(NamedTuple):
+    """Synchronous-solver trace: per-round max|Δθ|, shape [R]."""
+
+    residuals: Any
+
+    def as_lists(self) -> dict[str, list[float]]:
+        return {"residuals": [float(v) for v in self.residuals]}
+
+
+class AsyncSolveTrace(NamedTuple):
+    """Asynchronous-gossip trace, all fields shape [R].
+
+    ``active``: scheduled transmitters this round (activated nodes, or
+    2 endpoints for edge gossip). ``broadcasts``: transmissions that
+    survived censoring. ``deliveries``: neighbor receipts (one per
+    receiving directed edge). ``bytes``: wire bytes this round
+    (broadcast payload actually sent — `d_max × Dy × itemsize` per
+    broadcast, matching `AsyncGossipStats`-based accounting).
+    """
+
+    residuals: Any
+    active: Any
+    broadcasts: Any
+    deliveries: Any
+    bytes: Any
+
+    def censored_fraction(self):
+        """Per-round fraction of scheduled transmissions suppressed by
+        the censor threshold (0 where nothing was scheduled). Pure
+        arithmetic so it works on device arrays and numpy alike."""
+        act, bc = self.active, self.broadcasts
+        if isinstance(act, (list, tuple)):
+            import numpy as np
+
+            act, bc = np.asarray(act), np.asarray(bc)
+        denom = act * (act > 0) + (act <= 0)
+        return (act - bc) / denom
+
+    def as_lists(self) -> dict[str, list[float]]:
+        return {
+            "residuals": [float(v) for v in self.residuals],
+            "active": [int(v) for v in self.active],
+            "broadcasts": [int(v) for v in self.broadcasts],
+            "deliveries": [int(v) for v in self.deliveries],
+            "bytes": [int(v) for v in self.bytes],
+        }

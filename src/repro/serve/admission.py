@@ -20,7 +20,9 @@ part of that shape:
   * `LatencyRecorder` / `LatencyReport` — per-request latency accounting
     with p50/p99 percentiles, not just aggregate qps. The clock is
     injectable so a seeded load trace produces bit-identical reports
-    (tests/test_serve_tier.py pins this determinism).
+    (tests/test_serve_tier.py pins this determinism). Both now LIVE in
+    `repro.obs.metrics` (they are generic run accounting, not a serving
+    concern) and are re-exported here unchanged for existing callers.
 
 Thread-safety contract: `AdmissionQueue` and `LatencyRecorder` may be
 driven from any number of submitter and replica threads; every public
@@ -32,10 +34,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
-from typing import Any, Callable, Iterable
+from typing import Any
 
-import numpy as np
+from repro.obs.metrics import LatencyRecorder, LatencyReport
 
 __all__ = [
     "Admitted",
@@ -117,75 +118,3 @@ class AdmissionQueue:
     def pending_columns(self) -> int:
         with self._lock:
             return sum(e.width for e in self._entries)
-
-
-@dataclasses.dataclass(frozen=True)
-class LatencyReport:
-    """Latency/throughput summary of one serving run.
-
-    Latency is completion − admission per request (queueing included —
-    the open-loop number a caller actually experiences); `qps` is
-    requests / (last completion − first admission). Percentiles use the
-    linear-interpolation convention of `np.percentile` and are exact
-    deterministic functions of the recorded trace.
-    """
-
-    count: int
-    p50: float
-    p99: float
-    mean: float
-    max: float
-    qps: float
-
-    @staticmethod
-    def empty() -> "LatencyReport":
-        return LatencyReport(count=0, p50=0.0, p99=0.0, mean=0.0, max=0.0,
-                             qps=0.0)
-
-
-class LatencyRecorder:
-    """Thread-safe per-request latency accumulator."""
-
-    def __init__(self, clock: Callable[[], float] = time.perf_counter):
-        self.clock = clock
-        self._lock = threading.Lock()
-        self._arrivals: list[float] = []
-        self._completions: list[float] = []
-
-    def now(self) -> float:
-        return float(self.clock())
-
-    def record(self, t_arrival: float, t_done: float) -> None:
-        if t_done < t_arrival:
-            raise ValueError(
-                f"completion {t_done} precedes admission {t_arrival}")
-        with self._lock:
-            self._arrivals.append(float(t_arrival))
-            self._completions.append(float(t_done))
-
-    def record_wave(self, entries: Iterable[Admitted],
-                    t_done: float) -> None:
-        for e in entries:
-            self.record(e.t_arrival, t_done)
-
-    def reset(self) -> None:
-        with self._lock:
-            self._arrivals.clear()
-            self._completions.clear()
-
-    def report(self) -> LatencyReport:
-        with self._lock:
-            arrivals = np.asarray(self._arrivals, dtype=np.float64)
-            completions = np.asarray(self._completions, dtype=np.float64)
-        if arrivals.size == 0:
-            return LatencyReport.empty()
-        lat = completions - arrivals
-        span = float(completions.max() - arrivals.min())
-        return LatencyReport(
-            count=int(lat.size),
-            p50=float(np.percentile(lat, 50)),
-            p99=float(np.percentile(lat, 99)),
-            mean=float(lat.mean()),
-            max=float(lat.max()),
-            qps=float(lat.size / span) if span > 0 else float("inf"),
-        )

@@ -95,6 +95,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rff import FeatureMap, featurize
+from repro.obs.metrics import perf_clock
+from repro.obs.spans import span
 from repro.serve.admission import (Admitted, AdmissionQueue, LatencyRecorder,
                                    LatencyReport, pad_bucket)
 from repro.stream.runtime import (ServeSnapshot, SnapshotRegistry,
@@ -516,8 +518,10 @@ class DeKRRServeEngine:
         finished: list[KernelQuery] = []
         while len(queue):
             wave = queue.take_wave(self.batch_size, self.max_wave_columns)
-            st = self._staged(self._snapshot())
-            _serve_wave(st, wave, calib_columns=self.calib_columns)
+            with span("serve.wave", slots=len(wave),
+                      columns=sum(e.width for e in wave)):
+                st = self._staged(self._snapshot())
+                _serve_wave(st, wave, calib_columns=self.calib_columns)
             self.latency.record_wave(wave, self.latency.now())
             finished.extend(e.item for e in wave)
         return finished
@@ -545,7 +549,7 @@ class DeKRRReplicaServer:
                  precision: str | None = None,
                  max_wave_columns: int | None = None,
                  calib_columns: int = 8,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = perf_clock):
         if not isinstance(registry, SnapshotRegistry):
             raise TypeError(
                 f"DeKRRReplicaServer serves from a SnapshotRegistry, got "
@@ -598,10 +602,14 @@ class DeKRRReplicaServer:
                         return
                     time.sleep(0.0005)
                     continue
-                version, snap = self.registry.latest_versioned()
-                st = self._stages.get(version, snap, backend=self.backend,
-                                      precision=self.precision)
-                _serve_wave(st, wave, calib_columns=self.calib_columns)
+                with span("serve.wave", slots=len(wave),
+                          columns=sum(e.width for e in wave)):
+                    version, snap = self.registry.latest_versioned()
+                    st = self._stages.get(version, snap,
+                                          backend=self.backend,
+                                          precision=self.precision)
+                    _serve_wave(st, wave,
+                                calib_columns=self.calib_columns)
                 self.latency.record_wave(wave, self.latency.now())
                 with self._count_lock:
                     self.waves_served += 1

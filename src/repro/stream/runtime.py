@@ -46,6 +46,7 @@ from repro.core.ddrf import select_features
 from repro.core.dekrr import DeKRRConfig, DeKRRSolver, NodeData
 from repro.core.rff import FeatureMap, featurize
 from repro.dist import async_solve_batched, solve_batched, step_batched
+from repro.obs.spans import span
 from repro.stream.drift import DriftConfig, DriftDetector, DriftVerdict
 from repro.stream.updates import (StreamAux, ingest as _fold, init_stream_aux,
                                   reference_lam, refresh_node, repad_theta,
@@ -268,10 +269,11 @@ class SnapshotRegistry:
             raise TypeError(
                 f"publish() takes a ServeSnapshot, got "
                 f"{type(snapshot).__name__}")
-        with self._write_lock:
-            version = (0 if self._published is None
-                       else self._published[0]) + 1
-            self._published = (version, snapshot)
+        with span("stream.publish"):
+            with self._write_lock:
+                version = (0 if self._published is None
+                           else self._published[0]) + 1
+                self._published = (version, snapshot)
         return version
 
     def publish_from(self, stream: "StreamingDeKRR") -> int:
@@ -389,7 +391,8 @@ class StreamingDeKRR:
         j = int(node)
         xb = np.asarray(xb)
         yb = self._as_labels(yb)
-        self.aux = _fold(self.aux, j, xb, yb)
+        with span("stream.ingest", node=j, batch=int(xb.shape[1])):
+            self.aux = _fold(self.aux, j, xb, yb)
         if xb.shape[1]:
             self._x[j].append(xb.astype(self._x[j][0].dtype))
             self._y[j].append(yb.astype(self._y[j][0].dtype))
@@ -442,6 +445,13 @@ class StreamingDeKRR:
             spread = float(np.std(np.asarray(self.feature_maps[j].omega)))
             sigma = 1.0 / spread if spread > 0 else 1.0
         x_j, y_j = self._node_data(j)
+        with span("stream.refresh", node=j):
+            return self._refresh_impl(j, key, want_freqs, sigma, x_j, y_j,
+                                      old_dims, old_dj)
+
+    def _refresh_impl(self, j, key, want_freqs, sigma, x_j, y_j,
+                      old_dims, old_dj) -> RefreshReport:
+        cfg = self.config
         new_fmap = select_features(
             key, x_j.shape[0], want_freqs,
             sigma, jnp.asarray(x_j), jnp.asarray(y_j),

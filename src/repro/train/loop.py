@@ -1,13 +1,13 @@
 """Training loop driver (CPU-runnable; the launcher adds mesh sharding)."""
 from __future__ import annotations
 
-import time
 from typing import Callable, Iterable
 
 import jax
 import numpy as np
 
 from repro.models.model import ModelConfig
+from repro.obs.metrics import perf_clock
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.optim import AdamWConfig
 from repro.train.step import TrainState, make_train_step, train_state_init
@@ -30,7 +30,7 @@ def train_loop(
         state = train_state_init(cfg, opt_cfg, jax.random.PRNGKey(seed))
     step_fn = jax.jit(make_train_step(cfg, opt_cfg))
     history: list[dict] = []
-    t0 = time.perf_counter()
+    t0 = perf_clock()
     it = iter(batches)
     for i in range(num_steps):
         batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
@@ -38,7 +38,7 @@ def train_loop(
         if (i + 1) % log_every == 0 or i == 0:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = i + 1
-            m["wall_s"] = time.perf_counter() - t0
+            m["wall_s"] = perf_clock() - t0
             history.append(m)
             log_fn(f"step {i+1:5d}  loss {m['loss']:.4f}  "
                    f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
